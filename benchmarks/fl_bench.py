@@ -1,0 +1,83 @@
+"""Shared harness for the FL benchmarks (Tables/Figures of the paper).
+
+Runs an algorithm on the synthetic non-iid task and returns accuracy,
+per-round wall time and communication cost. Scaled to CPU budgets:
+same protocol as the paper (20 clients, label-skew, R local steps),
+smaller nets and round counts.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import BaselineConfig, BaselineFL
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.data import synthetic as ds
+from repro.fl import comms
+from repro.models import smallnets as sn
+
+
+def make_task(num_clients=10, noise=1.2, concept_shift=True, hidden=64,
+              classes_per_client=2, seed=0):
+    data = ds.make_federated_classification(
+        jax.random.key(seed), num_clients=num_clients, noise=noise,
+        classes_per_client=classes_per_client, concept_shift=concept_shift,
+        train_per_client=192, test_per_client=96,
+    )
+    init_fn = lambda k: sn.init_mlp(k, input_dim=784, hidden=hidden)
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    eval_fn = lambda p, x, y: sn.accuracy(sn.apply_mlp(p, x), y)
+    return data, init_fn, loss_fn, eval_fn
+
+
+def run_algo(algo, data, init_fn, loss_fn, eval_fn, *, rounds=15,
+             local_steps=5, batch=32, lr=0.05, participate=None, seed=0,
+             lam=5e-4, mu=1e-5, gamma=1e4, m_ratio=0.1, chunk=4096):
+    k = data.num_clients
+    participate = participate or k
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(template))
+    nt = len(jax.tree.leaves(template))
+
+    if algo == "pfed1bs":
+        eng = PFed1BS(PFed1BSConfig(
+            num_clients=k, participate=participate, local_steps=local_steps,
+            lr=lr, lam=lam, mu=mu, gamma=gamma, m_ratio=m_ratio, chunk=chunk,
+            sketch_seed=seed), loss_fn, template)
+        m_dim = eng.spec.m
+    else:
+        eng = BaselineFL(BaselineConfig(
+            algo=algo, num_clients=k, participate=participate,
+            local_steps=local_steps, lr=lr, m_ratio=m_ratio, chunk=chunk,
+            seed=seed), loss_fn, template)
+        m_dim = eng.spec.m
+
+    state = eng.init(init_fn, jax.random.key(seed + 1))
+    losses = []
+    t0 = time.time()
+    for r in range(rounds):
+        kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(seed + 2), r))
+        batches = ds.sample_round_batches(kb, data, local_steps, batch)
+        state, m = eng.round(state, batches, data.weights, kr)
+        losses.append(float(m["task_loss"]))
+    wall = time.time() - t0
+
+    if hasattr(state, "clients"):
+        accs = jax.vmap(eval_fn)(state.clients, data.test_x, data.test_y)
+    else:
+        accs = jax.vmap(lambda x, y: eval_fn(state.params, x, y))(
+            data.test_x, data.test_y)
+    bits = comms.round_bits(algo, n=n, m=m_dim, s=participate, num_tensors=nt)
+    return {
+        "algo": algo,
+        "acc": float(accs.mean()),
+        "acc_std": float(accs.std()),
+        "loss_curve": losses,
+        "mb_per_round": bits["total_mb"],
+        "reduction_vs_fedavg": comms.reduction_vs_fedavg(
+            algo, n=n, m=m_dim, s=participate, num_tensors=nt),
+        "us_per_round": wall / rounds * 1e6,
+    }

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.report [--multi-pod] [--tag X]
+Prints a GitHub-markdown table; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    return f"{x:.2e}"
+
+
+def load(mesh_name, tag=""):
+    suffix = f"__{tag}" if tag else ""
+    recs = {}
+    for path in sorted(glob.glob(f"experiments/dryrun/*__{mesh_name}{suffix}.json")):
+        rec = json.load(open(path))
+        base = os.path.basename(path).split("__")
+        recs[(base[0], base[1])] = rec
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    recs = load(mesh_name, args.tag)
+    if not recs:
+        print(f"(no artifacts for {mesh_name})")
+        return
+
+    print(f"### Mesh {mesh_name} ({'2x16x16 pod,data,model' if args.multi_pod else '16x16 data,model'})\n")
+    print("| arch | shape | status | compute (s) | memory (s) | collective (s) "
+          "| dominant | coll bytes/dev | useful FLOPs ratio | HBM GiB/dev (args+tmp) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    arches = sorted({a for a, _ in recs})
+    for arch in arches:
+        for shape in SHAPE_ORDER:
+            rec = recs.get((arch, shape))
+            if rec is None:
+                continue
+            if rec["status"] == "skipped":
+                print(f"| {arch} | {shape} | skipped (sub-quadratic N/A) | — | — | — | — | — | — | — |")
+                continue
+            if rec["status"] != "ok":
+                print(f"| {arch} | {shape} | ERROR | — | — | — | — | — | — | — |")
+                continue
+            r = rec["roofline"]
+            ma = rec.get("memory_analysis", {})
+            hbm = (ma.get("argument_size_in_bytes", 0) + ma.get("temp_size_in_bytes", 0)) / 2 ** 30
+            print(
+                f"| {arch} | {shape} | ok | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | {r['dominant'].replace('_s','')} "
+                f"| {r['collective_bytes_total']/2**20:.1f} MiB | {rec['useful_flops_ratio']:.3f} "
+                f"| {hbm:.2f} |"
+            )
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    err = len(recs) - ok - sk
+    print(f"\n{ok} ok / {sk} skipped (documented) / {err} errors out of {len(recs)} combos.\n")
+
+
+if __name__ == "__main__":
+    main()

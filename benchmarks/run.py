@@ -1,0 +1,270 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; full JSON results land in
+experiments/bench/. Scaled to the CPU container (smaller nets / rounds,
+same protocols); the full-scale numbers live in the dry-run roofline.
+
+  table2          paper Table 2: accuracy + comm cost across 7 algorithms
+  fig3_fig4       convergence curves (acc/loss vs rounds), ours vs one-bit
+  fht             FHT vs dense projection scaling (the O(n log n) claim)
+  ablation_S      paper §A.1: participating clients
+  ablation_R      paper §A.2: local steps
+  ablation_fht    paper §A.3: FHT vs dense Gaussian accuracy
+  sensitivity     paper §A.4: lambda/mu/gamma grids
+  kernels         Pallas kernel ops: sketch fwd/adjoint, pack/vote
+  roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
+
+Run all:  PYTHONPATH=src python -m benchmarks.run
+One:      PYTHONPATH=src python -m benchmarks.run --only table2 [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def emit(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _save(name, obj):
+    os.makedirs("experiments/bench", exist_ok=True)
+    with open(f"experiments/bench/{name}.json", "w") as f:
+        json.dump(obj, f, indent=2)
+
+
+# ---------------------------------------------------------------------------
+
+def bench_table2(fast=False):
+    """Paper Table 2: Top-1 acc + per-round MB for all algorithms, non-iid."""
+    from benchmarks.fl_bench import make_task, run_algo
+
+    rounds = 8 if fast else 20
+    data, init_fn, loss_fn, eval_fn = make_task()
+    algos = ["fedavg", "obda", "obcsaa", "zsignfed", "eden", "fedbat", "pfed1bs"]
+    out = {}
+    for algo in algos:
+        r = run_algo(algo, data, init_fn, loss_fn, eval_fn, rounds=rounds)
+        out[algo] = r
+        emit(f"table2/{algo}", r["us_per_round"],
+             f"acc={r['acc']:.4f} mb_round={r['mb_per_round']:.4f} "
+             f"red={r['reduction_vs_fedavg'] * 100:.2f}%")
+    _save("table2", out)
+    return out
+
+
+def bench_fig3_fig4(fast=False):
+    """Figures 3-4: convergence of accuracy/loss over rounds."""
+    from benchmarks.fl_bench import make_task, run_algo
+
+    rounds = 10 if fast else 25
+    data, init_fn, loss_fn, eval_fn = make_task()
+    out = {}
+    for algo in ["pfed1bs", "obda", "zsignfed", "fedavg"]:
+        r = run_algo(algo, data, init_fn, loss_fn, eval_fn, rounds=rounds)
+        out[algo] = {"loss_curve": r["loss_curve"], "final_acc": r["acc"]}
+        emit(f"fig34/{algo}", r["us_per_round"],
+             f"loss0={r['loss_curve'][0]:.3f} lossT={r['loss_curve'][-1]:.4f}")
+    _save("fig34_convergence", out)
+    return out
+
+
+def bench_fht(fast=False):
+    """FHT O(n log n) vs dense O(mn): wall time of the forward sketch."""
+    from repro.core import sketch as sk
+
+    sizes = [2 ** 12, 2 ** 14, 2 ** 16] + ([] if fast else [2 ** 18, 2 ** 20])
+    out = {}
+    for n in sizes:
+        x = jax.random.normal(jax.random.key(0), (n,))
+        spec = sk.make_sketch_spec(n, 0.1, chunk=16384)
+        f = jax.jit(lambda w: sk.sketch_forward(spec, w))
+        f(x).block_until_ready()
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            f(x).block_until_ready()
+        t_fht = (time.time() - t0) / reps
+        row = {"n": n, "m": spec.m, "fht_us": t_fht * 1e6}
+        if n <= 2 ** 16:
+            phi = sk.dense_gaussian_sketch(n, spec.m, seed=0)
+            g = jax.jit(lambda w: phi @ w)
+            g(x).block_until_ready()
+            t0 = time.time()
+            for _ in range(reps):
+                g(x).block_until_ready()
+            row["dense_us"] = (time.time() - t0) / reps * 1e6
+        out[str(n)] = row
+        emit(f"fht/n={n}", row["fht_us"],
+             f"dense_us={row.get('dense_us', float('nan')):.1f} m={spec.m}")
+    _save("fht_scaling", out)
+    return out
+
+
+def bench_ablation_S(fast=False):
+    """Paper §A.1: accuracy vs number of participating clients S."""
+    from benchmarks.fl_bench import make_task, run_algo
+
+    rounds = 8 if fast else 20
+    data, init_fn, loss_fn, eval_fn = make_task()
+    out = {}
+    for s in ([5, 10] if fast else [2, 5, 8, 10]):
+        r = run_algo("pfed1bs", data, init_fn, loss_fn, eval_fn,
+                     rounds=rounds, participate=s)
+        out[str(s)] = r["acc"]
+        emit(f"ablation_S/S={s}", r["us_per_round"], f"acc={r['acc']:.4f}")
+    _save("ablation_S", out)
+    return out
+
+
+def bench_ablation_R(fast=False):
+    """Paper §A.2: accuracy/convergence vs local steps R."""
+    from benchmarks.fl_bench import make_task, run_algo
+
+    rounds = 8 if fast else 16
+    data, init_fn, loss_fn, eval_fn = make_task()
+    out = {}
+    for r_steps in ([2, 8] if fast else [1, 3, 5, 10]):
+        r = run_algo("pfed1bs", data, init_fn, loss_fn, eval_fn,
+                     rounds=rounds, local_steps=r_steps)
+        out[str(r_steps)] = {"acc": r["acc"], "loss_final": r["loss_curve"][-1]}
+        emit(f"ablation_R/R={r_steps}", r["us_per_round"],
+             f"acc={r['acc']:.4f} loss={r['loss_curve'][-1]:.4f}")
+    _save("ablation_R", out)
+    return out
+
+
+def bench_ablation_fht(fast=False):
+    """Paper §A.3: FHT-structured vs dense-Gaussian projection quality."""
+    from benchmarks.fl_bench import make_task, run_algo
+    from benchmarks.dense_proj import run_dense_pfed1bs
+
+    rounds = 8 if fast else 16
+    data, init_fn, loss_fn, eval_fn = make_task(num_clients=6, hidden=48)
+    r_fht = run_algo("pfed1bs", data, init_fn, loss_fn, eval_fn, rounds=rounds)
+    r_dense = run_dense_pfed1bs(data, init_fn, loss_fn, eval_fn, rounds=rounds)
+    out = {"fht_acc": r_fht["acc"], "dense_acc": r_dense["acc"]}
+    emit("ablation_fht/fht", r_fht["us_per_round"], f"acc={r_fht['acc']:.4f}")
+    emit("ablation_fht/dense", r_dense["us_per_round"], f"acc={r_dense['acc']:.4f}")
+    _save("ablation_fht", out)
+    return out
+
+
+def bench_sensitivity(fast=False):
+    """Paper §A.4 (Table 1 appendix): lambda / mu / gamma sensitivity."""
+    from benchmarks.fl_bench import make_task, run_algo
+
+    rounds = 6 if fast else 12
+    data, init_fn, loss_fn, eval_fn = make_task(num_clients=6, hidden=48)
+    grids = {
+        "lam": [5e-6, 5e-4, 5e-2] if not fast else [5e-4],
+        "mu": [1e-6, 1e-4, 1e-2] if not fast else [1e-5],
+        "gamma": [1e2, 1e4, 1e6] if not fast else [1e4],
+    }
+    out = {}
+    for pname, values in grids.items():
+        for val in values:
+            kw = {pname: val} if pname != "gamma" else {"gamma": val}
+            r = run_algo("pfed1bs", data, init_fn, loss_fn, eval_fn,
+                         rounds=rounds, **kw)
+            out[f"{pname}={val}"] = r["acc"]
+            emit(f"sensitivity/{pname}={val}", r["us_per_round"],
+                 f"acc={r['acc']:.4f}")
+    _save("sensitivity", out)
+    return out
+
+
+def bench_kernels(fast=False):
+    """Micro-bench of the core ops: sketch fwd/adjoint, pack, vote."""
+    from repro.core import sketch as sk
+    from repro.kernels import ops as kops
+
+    n = 2 ** 16
+    spec = sk.make_sketch_spec(n, 0.1, chunk=16384)
+    x = jax.random.normal(jax.random.key(0), (n,))
+    v = jax.random.normal(jax.random.key(1), (spec.m,))
+    z = jnp.sign(jax.random.normal(jax.random.key(2), (20, 6400)))
+    p = jnp.full((20,), 0.05)
+    packed = kops.pack_signs(z)
+    cases = {
+        "sketch_fwd": (jax.jit(lambda a: sk.sketch_forward(spec, a)), x),
+        "sketch_adj": (jax.jit(lambda a: sk.sketch_adjoint(spec, a)), v),
+        "pack": (jax.jit(kops.pack_signs), z),
+        "vote_packed": (jax.jit(lambda w: kops.vote_packed(w, p)), packed),
+    }
+    out = {}
+    for name, (f, arg) in cases.items():
+        f(arg).block_until_ready()
+        t0 = time.time()
+        reps = 20
+        for _ in range(reps):
+            f(arg).block_until_ready()
+        us = (time.time() - t0) / reps * 1e6
+        out[name] = us
+        emit(f"kernels/{name}", us, f"n={n}")
+    _save("kernels", out)
+    return out
+
+
+def bench_roofline(fast=False):
+    """Aggregate the dry-run artifacts into the §Roofline table."""
+    rows = {}
+    for path in sorted(glob.glob("experiments/dryrun/*__pod16x16.json")):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            key = f"{rec.get('arch')}__{rec.get('shape')}"
+            rows[key] = {"status": rec.get("status"),
+                         "reason": rec.get("reason", rec.get("error", ""))[:100]}
+            continue
+        r = rec["roofline"]
+        key = f"{rec['arch']}__{rec['shape']}"
+        rows[key] = {
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful_flops_ratio": rec["useful_flops_ratio"],
+        }
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline/{key}", step_s * 1e6,
+             f"dom={r['dominant']} useful={rec['useful_flops_ratio']:.3f}")
+    _save("roofline_summary", rows)
+    if not rows:
+        print("# no dry-run artifacts found — run repro.launch.dryrun --all first")
+    return rows
+
+
+BENCHES = {
+    "table2": bench_table2,
+    "fig3_fig4": bench_fig3_fig4,
+    "fht": bench_fht,
+    "ablation_S": bench_ablation_S,
+    "ablation_R": bench_ablation_R,
+    "ablation_fht": bench_ablation_fht,
+    "sensitivity": bench_sensitivity,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    todo = [args.only] if args.only else list(BENCHES)
+    for name in todo:
+        BENCHES[name](fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end driver: federated fine-tuning of a ~100M-parameter GQA
+transformer (granite-8b family, 12 layers x d_model 768) with pFed1BS for a
+few hundred rounds on per-client skewed token streams.
+
+This is the (b) end-to-end deliverable at LM scale: every client holds its
+own personalized LLM; per round only one-bit sketches go up and the one-bit
+consensus comes down. Checkpoints land in experiments/runs/.
+
+Run:  PYTHONPATH=src python examples/fl_llm_finetune.py [--rounds 200]
+"""
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import save_checkpoint
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.data import synthetic as ds
+from repro.fl import comms
+from repro.models import lm
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=200)
+ap.add_argument("--clients", type=int, default=4)
+ap.add_argument("--participate", type=int, default=3)
+ap.add_argument("--local-steps", type=int, default=2)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--d-model", type=int, default=768)
+ap.add_argument("--layers", type=int, default=12)
+args = ap.parse_args()
+
+# ~100M-param member of the granite-8b family (same arch, smaller dims)
+cfg = dataclasses.replace(
+    configs.get("granite-8b"),
+    n_layers=args.layers, d_model=args.d_model, n_heads=12, n_kv=4,
+    head_dim=64, d_ff=2048, vocab=8192, name="granite-100m",
+)
+print(f"arch: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
+
+data = ds.make_federated_lm(
+    jax.random.key(0), args.clients, vocab=cfg.vocab, seq=args.seq,
+    samples_per_client=64, skew=0.85,
+)
+
+init_fn = lambda k: lm.init_params(cfg, k)
+loss_fn = lambda p, b: lm.loss_fn(cfg, p, b)[0]
+template = jax.eval_shape(init_fn, jax.random.key(1))
+n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(template))
+print(f"params per client: {n / 1e6:.1f}M")
+
+fl = PFed1BSConfig(
+    num_clients=args.clients, participate=args.participate,
+    local_steps=args.local_steps, lr=0.01, lam=5e-4, mu=1e-5, gamma=1e4,
+    m_ratio=0.1, chunk=16384,
+)
+engine = PFed1BS(fl, loss_fn, template)
+state = engine.init(init_fn, jax.random.key(2))
+bits = comms.round_bits("pfed1bs", n=n, m=engine.spec.m, s=args.participate)
+print(f"sketch m={engine.spec.m} -> {bits['total_mb']:.2f} MB/round "
+      f"(FedAvg would be {comms.round_bits('fedavg', n=n, m=engine.spec.m, s=args.participate)['total_mb']:.0f} MB)")
+
+hist = []
+t0 = time.time()
+for r in range(args.rounds):
+    kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(3), r))
+    batches = ds.sample_lm_batches(kb, data, args.local_steps, args.batch)
+    state, m = engine.round(state, batches, data.weights, kr)
+    hist.append(float(m["task_loss"]))
+    if r % 10 == 0 or r == args.rounds - 1:
+        print(f"round {r:4d}  ce={hist[-1]:.4f}  Psi={float(m['potential']):.3f}  "
+              f"agree={float(m['sign_agreement']):.3f}  "
+              f"({(time.time() - t0) / (r + 1):.1f}s/round)", flush=True)
+
+os.makedirs("experiments/runs", exist_ok=True)
+save_checkpoint("experiments/runs/fl_llm_clients.npz", state.clients,
+                meta={"arch": cfg.name, "rounds": args.rounds})
+with open("experiments/runs/fl_llm_finetune.json", "w") as f:
+    json.dump({"ce_history": hist, "n_params": n, "m": engine.spec.m,
+               "comm_per_round": bits}, f, indent=2)
+print(f"final CE {hist[-1]:.4f} (started {hist[0]:.4f}); "
+      f"checkpoints in experiments/runs/")
+assert hist[-1] < hist[0], "training did not reduce loss"

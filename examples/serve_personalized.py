@@ -1,0 +1,57 @@
+"""Serve personalized models with batched one-token decode steps.
+
+After federated training every client owns a personalized model. This
+example builds a tiny personalized LM per client, then serves BATCHED
+generation requests against per-client KV caches with the same
+`decode_step` the dry-run lowers at 32k/500k scale.
+
+Run:  PYTHONPATH=src python examples/serve_personalized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+
+CLIENTS, BATCH, PROMPT, GEN = 3, 4, 12, 20
+
+cfg = configs.get("granite-8b").reduced()
+keys = jax.random.split(jax.random.key(0), CLIENTS)
+clients = [lm.init_params(cfg, k) for k in keys]  # stand-ins for FL output
+
+decode = jax.jit(
+    lambda p, t, c, pos: lm.decode_step(cfg, p, t, c, pos),
+    donate_argnums=(2,),
+)
+
+
+def serve(params, prompts):
+    """prompts: (B, PROMPT) -> greedy continuation (B, GEN)."""
+    cache = lm.init_cache(cfg, prompts.shape[0], PROMPT + GEN)
+    logits = None
+    for t in range(PROMPT):  # prefill by stepping (tiny model)
+        logits, cache = decode(params, prompts[:, t : t + 1], cache, jnp.int32(t))
+    toks = []
+    cur = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    for t in range(GEN):
+        toks.append(cur[:, 0])
+        logits, cache = decode(params, cur, cache, jnp.int32(PROMPT + t))
+        cur = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    return jnp.stack(toks, axis=1)
+
+
+t0 = time.time()
+for cid, params in enumerate(clients):
+    prompts = jax.random.randint(
+        jax.random.fold_in(jax.random.key(1), cid), (BATCH, PROMPT), 0, cfg.vocab
+    )
+    out = serve(params, prompts)
+    assert out.shape == (BATCH, GEN)
+    assert np.isfinite(np.asarray(out)).all()
+    print(f"client {cid}: served batch of {BATCH}, first continuation: "
+          f"{np.asarray(out[0])[:8].tolist()}")
+print(f"served {CLIENTS * BATCH} requests ({GEN} tokens each) "
+      f"in {time.time() - t0:.1f}s")

@@ -1,0 +1,7 @@
+"""repro: pFed1BS — personalized FL with bidirectional one-bit random sketching.
+
+A multi-pod JAX training/serving framework implementing Cheng et al.,
+AAAI 2026, plus the substrate it needs (models, data, optim, checkpoint,
+distribution) and the full baseline suite from the paper.
+"""
+__version__ = "0.1.0"

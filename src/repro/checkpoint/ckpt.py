@@ -1,0 +1,40 @@
+"""npz pytree checkpointing: per-client personalized models + round state."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf) for path, leaf in flat}
+
+
+def save_checkpoint(path: str, tree, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    np.savez(path, **arrays)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def load_checkpoint(path: str, template):
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in leaves_t:
+        arr = data[jax.tree_util.keystr(p)]
+        assert arr.shape == leaf.shape, f"{jax.tree_util.keystr(p)}: {arr.shape} != {leaf.shape}"
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

@@ -1,0 +1,27 @@
+"""Assigned architecture pool (10 archs, 6 families) + the paper's own nets.
+
+Every entry cites its source paper/model card. `get(name)` returns the full
+ArchConfig; `get(name).reduced()` is the CPU smoke-test variant.
+"""
+from repro.configs import (
+    falcon_mamba_7b, starcoder2_7b, granite_moe_3b, internvl2_26b,
+    h2o_danube3_4b, zamba2_2p7b, deepseek_67b, deepseek_v2_236b,
+    granite_8b, seamless_m4t_medium,
+)
+
+REGISTRY = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        falcon_mamba_7b, starcoder2_7b, granite_moe_3b, internvl2_26b,
+        h2o_danube3_4b, zamba2_2p7b, deepseek_67b, deepseek_v2_236b,
+        granite_8b, seamless_m4t_medium,
+    )
+}
+
+ARCH_NAMES = sorted(REGISTRY)
+
+
+def get(name: str):
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return REGISTRY[name]

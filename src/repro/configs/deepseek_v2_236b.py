@@ -1,0 +1,11 @@
+"""deepseek-v2-236b — MLA (kv_lora=512) + 160 routed top-6 + 2 shared
+experts [arXiv:2405.04434]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b", family="moe", n_layers=60, d_model=5120,
+    n_heads=128, n_kv=128, d_ff=1536, vocab=102400,
+    n_experts=160, top_k=6, n_shared_experts=2,
+    q_lora=1536, kv_lora=512, qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    source="arXiv:2405.04434",
+)

@@ -1,0 +1,9 @@
+"""granite-moe-3b-a800m — 40-expert top-8 MoE, GQA kv=8
+[hf:ibm-granite/granite-3.0-1b-a400m-base family; 3b-a800m scale]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe", n_layers=32, d_model=1536,
+    n_heads=24, n_kv=8, d_ff=512, vocab=49155, head_dim=64,
+    n_experts=40, top_k=8, source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

@@ -1,0 +1,9 @@
+"""internvl2-26b — InternViT frontend (STUB per brief) + InternLM2-20B
+decoder backbone [arXiv:2404.16821]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-26b", family="vlm", n_layers=48, d_model=6144,
+    n_heads=48, n_kv=8, d_ff=16384, vocab=92553, head_dim=128,
+    num_patches=256, source="arXiv:2404.16821",
+)

@@ -1,0 +1,9 @@
+"""seamless-m4t-medium — enc-dec multimodal; mel/conv audio frontend is a
+STUB per brief (input_specs provides frame embeddings) [arXiv:2308.11596]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium", family="audio", n_layers=12, enc_layers=12,
+    d_model=1024, n_heads=16, n_kv=16, d_ff=4096, vocab=256206, head_dim=64,
+    source="arXiv:2308.11596",
+)

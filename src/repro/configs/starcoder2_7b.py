@@ -1,0 +1,8 @@
+"""starcoder2-7b — dense GQA (kv=4), RoPE, plain-GELU 4x FFN [arXiv:2402.19173]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense", n_layers=32, d_model=4608,
+    n_heads=36, n_kv=4, d_ff=18432, vocab=49152, head_dim=128,
+    mlp_type="plain", rope_theta=1e6, source="arXiv:2402.19173",
+)

@@ -1,0 +1,11 @@
+"""zamba2-2.7b — Mamba-2 backbone with ONE shared attention block applied
+every 6 SSM layers [arXiv:2411.15242]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560,
+    n_heads=32, n_kv=32, d_ff=10240, vocab=32000, head_dim=80,
+    ssm_state=64, ssm_variant="mamba2", ssm_head_dim=64, expand=2,
+    shared_attn_every=6, window=4096,  # shared attn uses SWA in long-ctx mode
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: one-bit random sketching (SRHT/FHT),
+# the sign-based personalization regularizer, majority-vote consensus,
+# and the pFed1BS alternating optimization scheme + all paper baselines.
+from repro.core.sketch import SketchSpec, make_sketch_spec, sketch_forward, sketch_adjoint
+from repro.core.regularizer import h_gamma, smoothed_reg, reg_grad_z, one_sided_l1
+from repro.core.consensus import majority_vote, server_objective

@@ -1,0 +1,149 @@
+"""Every baseline the paper compares against (Tables 1-2), as jitted
+global-model FL rounds with the same interface as PFed1BS.round.
+
+All of them learn ONE global model (no personalization — the paper's point);
+they differ in how client updates Delta_k are compressed:
+
+  FedAvg   — full precision both directions (McMahan et al. 2017).
+  OBDA     — one-bit symmetric quantization both directions: clients send
+             sign(Delta_k), server majority-votes and applies a server-lr
+             signed step; downlink is the 1-bit vote (Zhu et al. 2020).
+  OBCSAA   — 1-bit compressed-sensing uplink sign(Phi Delta_k) + amplitude
+             scalar; server back-projects Phi^T z and rescales; downlink is
+             the full-precision model (Fan et al. 2022).
+  zSignFed — noisy-perturbed sign compression sign(Delta_k + n_k) with a
+             transmitted scale; full-precision downlink (Tang et al. 2024).
+  EDEN     — random-rotation (our SRHT rotation) + 1-bit quantization with
+             the optimal unbiased scale <r, sign r>/n (Vargaftik et al. 2022).
+  FedBAT   — learnable binarization; we use the closed-form optimal
+             per-tensor scale alpha* = mean|Delta| with straight-through
+             semantics (Li et al. 2024).
+
+Communication accounting for each is in `repro.fl.comms`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatten
+from repro.core import sketch as sk
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    algo: str                      # fedavg|obda|obcsaa|zsignfed|eden|fedbat
+    num_clients: int
+    participate: int
+    local_steps: int = 5
+    lr: float = 0.05
+    server_lr: float = 0.01        # OBDA signed-step size
+    m_ratio: float = 0.1           # OBCSAA sketch ratio
+    chunk: int = 4096
+    znoise: float = 1e-3           # zSignFed perturbation std
+    seed: int = 0
+
+
+class BaselineState(NamedTuple):
+    params: Any                    # the single global model
+    round: jax.Array
+
+
+class BaselineFL:
+    def __init__(self, cfg: BaselineConfig, loss_fn: Callable, params_template):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.n = flatten.tree_size(params_template)
+        self.template = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params_template)
+        self.spec = sk.make_sketch_spec(self.n, cfg.m_ratio, chunk=cfg.chunk, seed=cfg.seed)
+
+    def init(self, init_params_fn: Callable, key) -> BaselineState:
+        return BaselineState(params=init_params_fn(key), round=jnp.int32(0))
+
+    def _local_delta(self, params, batches):
+        cfg = self.cfg
+
+        def step(p, batch):
+            loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
+            return jax.tree.map(lambda a, g: a - cfg.lr * g.astype(a.dtype), p, grads), loss
+
+        new, losses = jax.lax.scan(step, params, batches)
+        delta = flatten.ravel(new) - flatten.ravel(params)
+        return delta, jnp.mean(losses)
+
+    # --- per-algorithm compression of the aggregated update -----------------
+
+    def _compress(self, deltas, pw, key):
+        """deltas: (K, n); pw: (K,) masked weights. Returns the server-side
+        aggregate update (n,) after the algorithm's compression."""
+        algo = self.cfg.algo
+        wsum = jnp.maximum(jnp.sum(pw), 1e-9)
+
+        if algo == "fedavg":
+            return jnp.einsum("k,kn->n", pw, deltas) / wsum
+
+        if algo == "obda":
+            signs = jnp.sign(deltas)
+            vote = jnp.sign(jnp.einsum("k,kn->n", pw, signs))
+            return self.cfg.server_lr * vote           # 1-bit downlink step
+
+        if algo == "obcsaa":
+            def enc_dec(d):
+                z = jnp.sign(sk.sketch_forward(self.spec, d))
+                amp = jnp.linalg.norm(d)                # transmitted scalar
+                back = sk.sketch_adjoint(self.spec, z)
+                return amp * back / (jnp.linalg.norm(back) + 1e-9)
+            rec = jax.vmap(enc_dec)(deltas)
+            return jnp.einsum("k,kn->n", pw, rec) / wsum
+
+        if algo == "zsignfed":
+            keys = jax.random.split(key, deltas.shape[0])
+            def enc(d, kk):
+                noisy = d + self.cfg.znoise * jax.random.normal(kk, d.shape)
+                scale = jnp.mean(jnp.abs(d))            # transmitted scalar
+                return scale * jnp.sign(noisy)
+            rec = jax.vmap(enc)(deltas, keys)
+            return jnp.einsum("k,kn->n", pw, rec) / wsum
+
+        if algo == "eden":
+            # square rotation = sign-flip + FHT (no subsampling)
+            rot = sk.make_sketch_spec(self.n, 1.0, chunk=self.cfg.chunk, seed=self.cfg.seed)
+            def enc_dec(d):
+                r = sk.sketch_forward(rot, d)
+                scale = jnp.mean(jnp.abs(r))            # EDEN-optimal 1-bit scale
+                return sk.sketch_adjoint(rot, scale * jnp.sign(r))[: self.n]
+            rec = jax.vmap(enc_dec)(deltas)
+            return jnp.einsum("k,kn->n", pw, rec) / wsum
+
+        if algo == "fedbat":
+            def enc(d):
+                alpha = jnp.mean(jnp.abs(d))            # closed-form alpha*
+                return alpha * jnp.sign(d)
+            rec = jax.vmap(enc)(deltas)
+            return jnp.einsum("k,kn->n", pw, rec) / wsum
+
+        raise ValueError(algo)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def round(self, state: BaselineState, batches, weights, key):
+        cfg = self.cfg
+        k = cfg.num_clients
+        kperm, kalg = jax.random.split(key)
+        perm = jax.random.permutation(kperm, k)
+        mask = jnp.zeros((k,), jnp.float32).at[perm[: cfg.participate]].set(1.0)
+
+        deltas, losses = jax.vmap(lambda b: self._local_delta(state.params, b))(batches)
+        pw = weights * mask
+        update = self._compress(deltas, pw, kalg)
+
+        w_new = flatten.ravel(state.params) + update
+        params = flatten.unravel_like(w_new, state.params)
+        metrics = {
+            "task_loss": jnp.sum(losses * pw) / jnp.maximum(jnp.sum(pw), 1e-9),
+        }
+        return BaselineState(params=params, round=state.round + 1), metrics

@@ -1,0 +1,46 @@
+"""Server-side consensus aggregation (paper Eq. 8, Lemma 1).
+
+The server's discrete problem min_{v in {+-1}^m} sum_k p_k g(v, z_k) has the
+exact closed-form minimizer v* = sign(sum_k p_k z_k) — a weighted majority
+vote. `majority_vote` keeps jnp.sign semantics (tie -> 0, matching the paper's
+note that v may contain {-1, 0, +1}); the packed transport path breaks ties
+to +1 (a tie has measure zero under real-valued weights).
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.regularizer import one_sided_l1
+from repro.kernels import ops as kops
+
+
+def majority_vote(zs: jax.Array, p: jax.Array) -> jax.Array:
+    """v = sign(sum_k p_k z_k). zs: (K, m), p: (K,) -> (m,) in {-1,0,1}."""
+    return jnp.sign(jnp.einsum("k,km->m", p, zs))
+
+
+def majority_vote_packed(words: jax.Array, p: jax.Array) -> jax.Array:
+    """Vote directly on packed uint32 sketches (the wire format)."""
+    return kops.vote_packed(words, p)
+
+
+def server_objective(v: jax.Array, zs: jax.Array, p: jax.Array) -> jax.Array:
+    """sum_k p_k g(v, z_k) with the exact one-sided l1 regularizer."""
+    return jnp.einsum("k,k->", p, jax.vmap(lambda z: one_sided_l1(v, z))(zs))
+
+
+def brute_force_vote(zs: np.ndarray, p: np.ndarray) -> np.ndarray:
+    """Exhaustive minimizer over {+-1}^m (tests of Lemma 1; small m only)."""
+    m = zs.shape[1]
+    assert m <= 16
+    best, best_val = None, np.inf
+    for bits in itertools.product((-1.0, 1.0), repeat=m):
+        v = np.asarray(bits, np.float32)
+        val = float(server_objective(jnp.asarray(v), jnp.asarray(zs), jnp.asarray(p)))
+        if val < best_val - 1e-12:
+            best, best_val = v, val
+    return best

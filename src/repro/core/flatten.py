@@ -1,0 +1,37 @@
+"""Trace-compatible pytree <-> flat-vector utilities.
+
+The sketch operates on the flattened trainable vector w in R^n. These helpers
+work under jit/vmap (static split sizes derived from the template tree).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    return int(sum(np.prod(l.shape, dtype=np.int64) for l in jax.tree.leaves(tree)))
+
+
+def ravel(tree) -> jax.Array:
+    """Concatenate all leaves into one float32 vector (n,)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+
+def unravel_like(vec: jax.Array, template) -> object:
+    """Inverse of ravel against a template tree (leaf dtypes preserved)."""
+    leaves, treedef = jax.tree.flatten(template)
+    sizes = [int(np.prod(l.shape, dtype=np.int64)) for l in leaves]
+    offsets = np.cumsum([0] + sizes)
+    out = [
+        jax.lax.dynamic_slice_in_dim(vec, int(offsets[i]), sizes[i]).reshape(l.shape).astype(l.dtype)
+        for i, l in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_add_scaled(tree, vec_tree, scale):
+    """tree + scale * vec_tree (elementwise over matching pytrees)."""
+    return jax.tree.map(lambda a, b: a + scale * b.astype(a.dtype), tree, vec_tree)

@@ -1,0 +1,192 @@
+"""pFed1BS — Algorithm 1 of the paper, model-agnostic and fully jitted.
+
+Round t:
+  1. Each participating client runs R local SGD steps on the smoothed
+     objective F~_k(w; v^t) = f_k(w) + lam*(h_gamma(Phi w) - <v, Phi w>)
+     + (mu/2)||w||^2 (Eq. 6); gradient per Eq. 11.
+  2. Each client uploads the one-bit sketch z_k = sign(Phi w_k^{t+1})
+     (bit-packed: m bits on the wire).
+  3. Server aggregates v^{t+1} = sign(sum_{k in S} p_k z_k) (Lemma 1) and
+     broadcasts the m-bit consensus.
+
+Clients are a leading pytree axis (vmapped ClientUpdate); partial
+participation is a mask — non-sampled clients keep their models and their
+stale sketches (the weighted vote uses fresh sketches of sampled clients
+only, exactly Algorithm 1 line 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus, flatten, regularizer
+from repro.core import sketch as sk
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class PFed1BSConfig:
+    num_clients: int
+    participate: int               # S <= K clients per round
+    local_steps: int = 5           # R
+    lr: float = 0.05               # eta
+    lam: float = 5e-4              # lambda (sign-alignment strength)
+    mu: float = 1e-5               # l2 penalty
+    gamma: float = 1e4             # log-cosh smoothing
+    m_ratio: float = 0.1           # m/n compression ratio
+    chunk: int = 4096              # sketch block size (see DESIGN.md §3.2)
+    sketch_seed: int = 0
+    sketch_mode: str = "auto"      # global (paper-exact) | chunked | auto
+    # --- beyond-paper extension ---
+    error_feedback: bool = False   # EF residual on the one-bit sketch:
+    #                                z_k = sign(Phi w_k + e_k),
+    #                                e_k += Phi w_k - alpha_k z_k with the
+    #                                l1-optimal scale alpha_k = mean|Phi w + e|.
+    #                                Recovers accuracy at aggressive m/n.
+
+
+class FLState(NamedTuple):
+    clients: Any                   # stacked params, leading axis K
+    v: jax.Array                   # (m,) consensus in {-1,0,+1}
+    round: jax.Array               # scalar int32
+    ef: Any = None                 # (K, m) EF residuals when enabled
+
+
+class PFed1BS:
+    """Engine binding the algorithm to a task (loss over params+batch)."""
+
+    def __init__(self, cfg: PFed1BSConfig, loss_fn: Callable, params_template):
+        self.cfg = cfg
+        self.loss_fn = loss_fn     # loss_fn(params, batch) -> scalar
+        self.n = flatten.tree_size(params_template)
+        self.spec = sk.make_sketch_spec(
+            self.n, cfg.m_ratio, chunk=cfg.chunk, seed=cfg.sketch_seed,
+            mode=cfg.sketch_mode,
+        )
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def init(self, init_params_fn: Callable, key) -> FLState:
+        keys = jax.random.split(key, self.cfg.num_clients)
+        clients = jax.vmap(init_params_fn)(keys)
+        ef = (
+            jnp.zeros((self.cfg.num_clients, self.spec.m), jnp.float32)
+            if self.cfg.error_feedback
+            else None
+        )
+        return FLState(
+            clients=clients,
+            v=jnp.zeros((self.spec.m,), jnp.float32),   # v^0 = 0 (Alg. 1)
+            round=jnp.int32(0),
+            ef=ef,
+        )
+
+    # -- client side ---------------------------------------------------------
+
+    def _client_update(self, params, batches, v):
+        """R local steps of Eq. 11; batches: (R, B, ...) pytree."""
+        cfg = self.cfg
+
+        def objective(p, batch):
+            task = self.loss_fn(p, batch)
+            w = flatten.ravel(p)
+            z = sk.sketch_forward(self.spec, w)
+            reg = regularizer.smoothed_reg(v, z, cfg.gamma)
+            l2 = 0.5 * jnp.sum(w * w)
+            return task + cfg.lam * reg + cfg.mu * l2, task
+
+        def step(p, batch):
+            (_, task), grads = jax.value_and_grad(objective, has_aux=True)(p, batch)
+            p = jax.tree.map(lambda a, g: a - cfg.lr * g.astype(a.dtype), p, grads)
+            return p, task
+
+        params, task_losses = jax.lax.scan(step, params, batches)
+        return params, jnp.mean(task_losses)
+
+    def _sketch_client(self, params):
+        return sk.sketch_forward(self.spec, flatten.ravel(params))
+
+    # -- one communication round ----------------------------------------------
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def round(self, state: FLState, batches, weights, key):
+        """batches: (K, R, B, ...) pytree; weights: (K,) p_k. Returns
+        (state', metrics)."""
+        cfg = self.cfg
+        k = cfg.num_clients
+
+        # partial participation: sample S clients without replacement
+        perm = jax.random.permutation(key, k)
+        mask = jnp.zeros((k,), jnp.float32).at[perm[: cfg.participate]].set(1.0)
+
+        new_clients, task_loss = jax.vmap(
+            lambda p, b: self._client_update(p, b, state.v)
+        )(state.clients, batches)
+
+        # non-participating clients keep their previous model
+        def keep(new, old):
+            m = mask.reshape((k,) + (1,) * (new.ndim - 1))
+            return jnp.where(m > 0, new, old)
+
+        clients = jax.tree.map(keep, new_clients, state.clients)
+
+        # uplink: one-bit sketches (packed words = the wire format)
+        zs = jax.vmap(self._sketch_client)(clients)            # (K, m)
+        new_ef = state.ef
+        if cfg.error_feedback:
+            # EF residual: quantize (Phi w + e); e <- (Phi w + e) - alpha*z
+            corrected = zs + state.ef
+            signs_ef = jnp.sign(corrected) + (corrected == 0)
+            alpha = jnp.mean(jnp.abs(corrected), axis=1, keepdims=True)
+            updated = corrected - alpha * signs_ef
+            # only sampled clients transmit => only they flush residuals
+            new_ef = jnp.where(mask[:, None] > 0, updated, state.ef)
+            zs = jnp.where(mask[:, None] > 0, corrected, zs)
+        signs = jnp.sign(zs) + (zs == 0)                       # {-1,+1}
+        pad = (-self.spec.m) % 32
+        packed = kops.pack_signs(jnp.pad(signs, ((0, 0), (0, pad))))
+
+        # server: weighted majority vote over sampled clients (Lemma 1)
+        pw = weights * mask
+        v_new = consensus.majority_vote(signs, pw)
+
+        potential = self._potential(clients, v_new, task_loss, weights)
+        metrics = {
+            "task_loss": jnp.sum(task_loss * weights * mask) / jnp.maximum(jnp.sum(weights * mask), 1e-9),
+            "potential": potential,
+            "uplink_bits": jnp.float32(cfg.participate * self.spec.m),
+            "downlink_bits": jnp.float32(self.spec.m),
+            "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
+            "packed_words": jnp.float32(packed.shape[-1]),
+        }
+        return (
+            FLState(clients=clients, v=v_new, round=state.round + 1, ef=new_ef),
+            metrics,
+        )
+
+    def _potential(self, clients, v, task_loss, weights):
+        """Psi^t = sum_k p_k F~_k(w_k; v) (Eq. 28), with f_k estimated by the
+        round's minibatch losses."""
+        cfg = self.cfg
+
+        def fk(params, task):
+            w = flatten.ravel(params)
+            z = sk.sketch_forward(self.spec, w)
+            return (
+                task
+                + cfg.lam * regularizer.smoothed_reg(v, z, cfg.gamma)
+                + 0.5 * cfg.mu * jnp.sum(w * w)
+            )
+
+        vals = jax.vmap(fk)(clients, task_loss)
+        return jnp.sum(weights * vals)
+
+    # -- evaluation ------------------------------------------------------------
+
+    def eval_clients(self, eval_fn, state: FLState, *args):
+        """vmap an eval fn over personalized models."""
+        return jax.vmap(lambda p: eval_fn(p, *args))(state.clients)

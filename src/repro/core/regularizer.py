@@ -1,0 +1,55 @@
+"""Sign-based personalization regularizer (paper Eqs. 2-7).
+
+g(v, Phi w) = ||[v . Phi w]_-||_1 measures sign disagreement between the
+projected local model and the global consensus v. The smoothed surrogate
+replaces ||z||_1 by h_gamma(z) = (1/gamma) sum log cosh(gamma z_i), giving
+
+    g~(v, z) = h_gamma(z) - <v, z>            (Eq. 5, factor 1/2 absorbed)
+    d g~/dz  = tanh(gamma z) - v              (Eq. 7)
+
+so the w-gradient is Phi^T (tanh(gamma Phi w) - v) via the sketch adjoint.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+
+_LOG2 = 0.6931471805599453
+
+
+def logcosh(y: jax.Array) -> jax.Array:
+    """Numerically stable log(cosh(y)) (no overflow for large |y|)."""
+    a = jnp.abs(y)
+    return a + jnp.log1p(jnp.exp(-2.0 * a)) - _LOG2
+
+
+def h_gamma(z: jax.Array, gamma: float) -> jax.Array:
+    """Smooth surrogate for ||z||_1; -> ||z||_1 as gamma -> inf."""
+    return jnp.sum(logcosh(gamma * z)) / gamma
+
+
+def one_sided_l1(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Exact regularizer g(x,y) = ||[x . y]_-||_1 (Eq. 2)."""
+    return jnp.sum(jax.nn.relu(-(x * y)))
+
+
+def smoothed_reg(v: jax.Array, z: jax.Array, gamma: float) -> jax.Array:
+    """g~(v, z) of Eq. 5 (z = Phi w)."""
+    return h_gamma(z, gamma) - jnp.vdot(v, z)
+
+
+def reg_grad_z(v: jax.Array, z: jax.Array, gamma: float) -> jax.Array:
+    """d g~/dz = tanh(gamma z) - v (Eq. 7, pre-adjoint)."""
+    return jnp.tanh(gamma * z) - v
+
+
+def reg_value_and_grad_w(
+    spec: sk.SketchSpec, w_flat: jax.Array, v: jax.Array, gamma: float
+):
+    """(g~(v, Phi w), Phi^T (tanh(gamma Phi w) - v)) — one fwd + one adjoint FHT."""
+    z = sk.sketch_forward(spec, w_flat)
+    val = smoothed_reg(v, z, gamma)
+    gw = sk.sketch_adjoint(spec, reg_grad_z(v, z, gamma))
+    return val, gw

@@ -1,0 +1,195 @@
+"""Matrix-free one-bit random sketching operators (the paper's core).
+
+Implements the Subsampled Randomized Hadamard Transform
+
+    Phi = sqrt(n'/m) * S @ H @ D @ P_pad          (paper Eq. 15-18)
+
+in two flavors:
+
+* **global** — the paper's exact construction: one sign-flip diagonal D over
+  the whole zero-padded vector, one length-n' FHT, uniform row subsample.
+  Used for paper-scale models (n <= ~2^22).
+
+* **chunked** — block-diagonal SRHT for billion-parameter models (DESIGN.md
+  §3.2): the flattened parameter vector is split into power-of-two chunks of
+  size `c`; each chunk gets an independent D_i and a strided-random row
+  subsample of m_i = m*c/n rows. `||Phi_i|| = sqrt(c/m_i)` exactly per block
+  (the Lemma 2 argument only needs Q Q^T = I, which holds for *any* row
+  subset), so the analysis constants carry over with n' -> c. Chunks align
+  with parameter shards: sketching needs zero cross-device communication.
+
+Both are linear operators with exact adjoints (`sketch_adjoint`), validated
+against dense materialization and autodiff transposition in the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels.ref import is_pow2
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Static description of one SRHT sketch operator Phi in R^{m x n}."""
+
+    n: int                 # input dimension (flattened model size)
+    m: int                 # total sketch dimension actually produced
+    chunk: int             # power-of-two block size (== n_pad for global mode)
+    m_chunk: int           # sketch rows per block
+    num_chunks: int
+    seed: int
+    mode: str              # "global" | "chunked"
+
+    @property
+    def n_pad(self) -> int:
+        return self.chunk * self.num_chunks
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.m / self.n
+
+    @property
+    def scale(self) -> float:
+        # sqrt(n'/m) per block (Lemma 2: exact spectral norm of Phi).
+        return math.sqrt(self.chunk / self.m_chunk)
+
+
+def make_sketch_spec(
+    n: int,
+    m_ratio: float = 0.1,
+    *,
+    chunk: int = 16384,
+    seed: int = 0,
+    mode: str = "auto",
+) -> SketchSpec:
+    """Build a sketch spec targeting m ~= m_ratio * n.
+
+    mode="auto" picks the paper's global SRHT when the padded size is a
+    single chunk, else the chunked block-diagonal variant.
+    """
+    assert 0 < m_ratio <= 1
+    assert is_pow2(chunk)
+    n_pad_global = next_pow2(n)
+    if mode == "auto":
+        mode = "global" if n_pad_global <= chunk else "chunked"
+    if mode == "global":
+        c = n_pad_global
+        m = max(1, round(m_ratio * n))
+        m = min(m, c)
+        return SketchSpec(n=n, m=m, chunk=c, m_chunk=m, num_chunks=1, seed=seed, mode=mode)
+    num_chunks = -(-n // chunk)
+    m_chunk = max(1, round(m_ratio * chunk))
+    return SketchSpec(
+        n=n, m=num_chunks * m_chunk, chunk=chunk, m_chunk=m_chunk,
+        num_chunks=num_chunks, seed=seed, mode="chunked",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-chunk randomness. Strided-random subsampling keeps index generation
+# O(m_chunk) per chunk (a length-c permutation per chunk would materialize
+# num_chunks * c indices — infeasible at n ~ 1e10). Rows are distinct by
+# construction: idx = offset + arange(m_chunk) * stride, stride = c // m_chunk.
+# ---------------------------------------------------------------------------
+
+def _chunk_key(spec: SketchSpec, i: jax.Array) -> jax.Array:
+    return jax.random.fold_in(jax.random.key(spec.seed), i)
+
+
+def _chunk_rand(spec: SketchSpec, i: jax.Array):
+    key = _chunk_key(spec, i)
+    kd, ks = jax.random.split(key)
+    d = jax.random.rademacher(kd, (spec.chunk,), dtype=jnp.float32)
+    stride = spec.chunk // spec.m_chunk
+    offset = jax.random.randint(ks, (), 0, stride)
+    idx = offset + jnp.arange(spec.m_chunk) * stride
+    return d, idx
+
+
+def _global_perm_idx(spec: SketchSpec) -> jax.Array:
+    """Uniform without-replacement rows for the global (paper-exact) mode."""
+    key = jax.random.fold_in(jax.random.key(spec.seed), 0)
+    _, ks = jax.random.split(key)
+    return jax.random.permutation(ks, spec.chunk)[: spec.m_chunk]
+
+
+def _pad_to(x: jax.Array, size: int) -> jax.Array:
+    return jnp.pad(x, (0, size - x.shape[0]))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def sketch_forward_2d(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
+    """z = Phi @ w in block layout: (n,) -> (num_chunks, m_chunk) float32.
+
+    The 2-D layout mirrors chunk ownership: when w's elements are laid out
+    sharded-axis-major, chunk rows (axis 0) are device-local, so the sketch
+    and everything downstream of it (consensus v, tanh, vote) shard on
+    axis 0 with zero collectives.
+    """
+    w = _pad_to(w.astype(jnp.float32), spec.n_pad)
+    x = w.reshape(spec.num_chunks, spec.chunk)
+
+    if spec.mode == "global":
+        d, _ = _chunk_rand(spec, jnp.int32(0))
+        idx = _global_perm_idx(spec)
+        y = kops.fht(x[0] * d, impl=impl)
+        return (spec.scale * y[idx]).reshape(1, spec.m_chunk)
+
+    def one(i, xc):
+        d, idx = _chunk_rand(spec, i)
+        y = kops.fht((xc * d)[None], impl=impl)[0]
+        return spec.scale * y[idx]
+
+    return jax.vmap(one)(jnp.arange(spec.num_chunks), x)
+
+
+def sketch_forward(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
+    """z = Phi @ w, matrix-free. w: (n,) -> z: (m,) float32."""
+    return sketch_forward_2d(spec, w, impl=impl).reshape(spec.m)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def sketch_adjoint(spec: SketchSpec, v: jax.Array, impl: str = "auto") -> jax.Array:
+    """w = Phi^T @ v, matrix-free. v: (m,) or (num_chunks, m_chunk) -> (n,)."""
+    v = v.reshape(-1).astype(jnp.float32)
+
+    if spec.mode == "global":
+        d, _ = _chunk_rand(spec, jnp.int32(0))
+        idx = _global_perm_idx(spec)
+        lifted = jnp.zeros(spec.chunk, jnp.float32).at[idx].set(spec.scale * v)
+        return (kops.fht(lifted, impl=impl) * d)[: spec.n]
+
+    vz = v.reshape(spec.num_chunks, spec.m_chunk)
+
+    def one(i, vc):
+        d, idx = _chunk_rand(spec, i)
+        lifted = jnp.zeros(spec.chunk, jnp.float32).at[idx].set(spec.scale * vc)
+        return kops.fht(lifted[None], impl=impl)[0] * d
+
+    x = jax.vmap(one)(jnp.arange(spec.num_chunks), vz)
+    return x.reshape(spec.n_pad)[: spec.n]
+
+
+def dense_gaussian_sketch(n: int, m: int, seed: int = 0) -> jax.Array:
+    """The paper's dense-Gaussian baseline projection (ablation §A.3).
+
+    Entries ~ N(0, 1/m) so that E||Phi w||^2 = ||w||^2. Only for small n.
+    """
+    key = jax.random.key(seed)
+    return jax.random.normal(key, (m, n), jnp.float32) / jnp.sqrt(m)
+
+
+def materialize(spec: SketchSpec) -> jax.Array:
+    """Densify Phi (tests only; m x n)."""
+    eye = jnp.eye(spec.n, dtype=jnp.float32)
+    return jax.vmap(lambda e: sketch_forward(spec, e))(eye).T

@@ -1,0 +1,165 @@
+"""Sharding-aware sketching of whole parameter pytrees.
+
+The paper sketches the flattened model w in R^n. At framework scale a literal
+ravel of a sharded pytree forces XLA to all-gather every parameter. Instead
+we exploit that the chunked SRHT (sketch.py) is block-diagonal: blocks can be
+assigned to *leaves* (each leaf gets its own independent SRHT blocks, seeded
+by the leaf path), and within a leaf the element order can be any fixed
+permutation — so we put the tensor-parallel-sharded axis outermost before
+flattening. Result: every FHT block lives entirely on one device; the sketch
+and its adjoint are collective-free, and only the m-bit consensus crosses
+the federation (pod) axis.
+
+Two layouts, selectable per experiment (§Perf records both):
+  flat  — paper-literal: ravel everything, then chunk (baseline).
+  leaf  — per-leaf, sharded-axis-major chunks (optimized; identical theory:
+          still a block-diagonal SRHT with exact ||Phi_i|| = sqrt(c/m_i)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), l) for p, l in flat]
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSketchSpec:
+    entries: tuple  # ((path, SketchSpec, m_offset, major_axis), ...)
+    m: int
+    n: int
+    chunk: int
+    m_ratio: float
+
+    @property
+    def compression_ratio(self):
+        return self.m / self.n
+
+
+def make_tree_sketch_spec(
+    template, m_ratio: float = 0.1, *, chunk: int = 16384, seed: int = 0,
+    major_axes=None,
+) -> TreeSketchSpec:
+    """template: pytree of arrays/ShapeDtypeStructs. major_axes: optional
+    matching pytree of int|None giving the axis to move outermost (the
+    tensor-parallel-sharded axis) before flattening each leaf."""
+    majors = None if major_axes is None else _leaf_paths(major_axes)
+    entries = []
+    off = 0
+    total_n = 0
+    for i, (path, leaf) in enumerate(_leaf_paths(template)):
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        leaf_chunk = min(chunk, sk.next_pow2(size))
+        leaf_seed = (zlib.crc32(path.encode()) ^ seed) & 0x7FFFFFFF
+        spec = sk.make_sketch_spec(
+            size, m_ratio, chunk=leaf_chunk, seed=leaf_seed, mode="chunked"
+        )
+        major = majors[i][1] if majors is not None else None
+        if major is not None and major < 0:
+            major = None
+        entries.append((path, spec, off, major))
+        off += spec.m
+        total_n += size
+    return TreeSketchSpec(
+        entries=tuple(entries), m=off, n=total_n, chunk=chunk, m_ratio=m_ratio
+    )
+
+
+def _to_major(x, major):
+    if major is not None and x.ndim > 1 and major != 0:
+        x = jnp.moveaxis(x, major, 0)
+    return x.reshape(-1)
+
+
+def _from_major(flat, shape, major):
+    if major is not None and len(shape) > 1 and major != 0:
+        perm_shape = (shape[major],) + tuple(s for i, s in enumerate(shape) if i != major)
+        return jnp.moveaxis(flat.reshape(perm_shape), 0, major)
+    return flat.reshape(shape)
+
+
+def tree_sketch_forward(tspec: TreeSketchSpec, tree) -> dict:
+    """z = Phi @ ravel(tree), leaf-block-diagonal. Returns a dict
+    {leaf_path: (num_chunks, m_chunk)} — each sketch block stays sharded
+    exactly like its source leaf (no concat => no resharding)."""
+    leaves = _leaf_paths(tree)
+    out = {}
+    for (path, spec, _, major), (path2, leaf) in zip(tspec.entries, leaves):
+        assert path == path2, f"tree mismatch: {path} vs {path2}"
+        out[path] = sk.sketch_forward_2d(spec, _to_major(leaf, major))
+    return out
+
+
+def tree_sketch_adjoint(tspec: TreeSketchSpec, v: dict, template):
+    """Phi^T v (v: dict of per-leaf blocks) back into template structure."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    outs = []
+    for (path, spec, off, major), (p2, leaf) in zip(tspec.entries, flat):
+        wi = sk.sketch_adjoint(spec, v[path])
+        outs.append(_from_major(wi, leaf.shape, major).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), outs
+    )
+
+
+def flat_view(tspec: TreeSketchSpec, z: dict) -> jax.Array:
+    """Concatenate a per-leaf sketch dict into one (m,) vector (small-model
+    paths / tests only — this DOES reshard)."""
+    return jnp.concatenate([z[path].reshape(-1) for path, *_ in tspec.entries])
+
+
+def zeros_like_sketch(tspec: TreeSketchSpec) -> dict:
+    """v^0 = 0 in the per-leaf block layout."""
+    return {
+        path: jnp.zeros((spec.num_chunks, spec.m_chunk), jnp.float32)
+        for path, spec, _, _ in tspec.entries
+    }
+
+
+def tree_reg_value_and_grad(tspec, tree, v: dict, gamma, lam, mu):
+    """lam*g~(v, Phi w) + (mu/2)||w||^2 and its gradient as a pytree.
+
+    Uses the explicit adjoint (Eq. 7) rather than autodiff so the backward
+    FHT reuses the forward's block structure exactly. v is a per-leaf block
+    dict (same layout as tree_sketch_forward's output)."""
+    from repro.core import regularizer as reg
+
+    z = tree_sketch_forward(tspec, tree)
+    val = 0.0
+    gz = {}
+    for path in z:
+        val = val + lam * reg.smoothed_reg(v[path].reshape(-1), z[path].reshape(-1), gamma)
+        gz[path] = lam * reg.reg_grad_z(v[path], z[path], gamma)
+    gtree = tree_sketch_adjoint(tspec, gz, tree)
+    l2 = 0.0
+    for leaf in jax.tree.leaves(tree):
+        l2 = l2 + jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+    val = val + 0.5 * mu * l2
+    gtree = jax.tree.map(
+        lambda g, w: g + (mu * w.astype(jnp.float32)).astype(g.dtype), gtree, tree
+    )
+    return val, gtree
+
+
+def sketch_pspecs(tspec: TreeSketchSpec, param_pspecs_tree, mesh) -> dict:
+    """PartitionSpecs for the per-leaf sketch blocks: chunk rows (axis 0)
+    shard over 'model' whenever the source leaf was model-sharded and the
+    row count divides."""
+    from jax.sharding import PartitionSpec as P
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(param_pspecs_tree)
+    msize = mesh.shape["model"]
+    out = {}
+    for (path, spec, _, major), (p2, pspec) in zip(tspec.entries, flat):
+        sharded = major is not None and spec.num_chunks % msize == 0
+        out[path] = P("model", None) if sharded else P(None, None)
+    return out

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (
+    FedClassification, FedLM, make_federated_classification, make_federated_lm,
+    sample_round_batches, sample_lm_batches,
+)

@@ -1,0 +1,143 @@
+"""Synthetic federated datasets (offline container: no dataset downloads).
+
+Two generators:
+
+* `make_federated_classification` — class-conditional image data with the
+  paper's label-skew protocol ("partition data among 20 clients based on
+  labels"): each client sees only `classes_per_client` of the classes.
+  Class templates are fixed random images; samples are template + noise,
+  so the Bayes classifier is learnable and personalization has signal:
+  a personalized model only needs its client's classes.
+
+* `make_federated_lm` — per-client skewed token streams for LM federated
+  fine-tuning (each client has its own favored vocabulary slice), used by
+  the LLM FL examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class FedClassification:
+    train_x: jax.Array  # (K, N, H, W, C)
+    train_y: jax.Array  # (K, N)
+    test_x: jax.Array   # (K, Nt, H, W, C)
+    test_y: jax.Array   # (K, Nt)
+    num_classes: int
+
+    @property
+    def num_clients(self):
+        return self.train_x.shape[0]
+
+    @property
+    def weights(self):
+        k = self.num_clients
+        return jnp.full((k,), 1.0 / k)
+
+
+def make_federated_classification(
+    key,
+    num_clients: int = 20,
+    num_classes: int = 10,
+    image_hw: int = 28,
+    channels: int = 1,
+    train_per_client: int = 256,
+    test_per_client: int = 128,
+    classes_per_client: int = 2,
+    noise: float = 0.6,
+    concept_shift: bool = False,
+) -> FedClassification:
+    """concept_shift=True additionally applies a per-client label permutation
+    (same inputs, client-specific labels) — the regime where a single global
+    model mathematically cannot fit all clients and personalization is
+    required (the paper's CIFAR-100 collapse phenomenon)."""
+    kt, kc, kn, ktn = jax.random.split(key, 4)
+    templates = jax.random.normal(kt, (num_classes, image_hw, image_hw, channels))
+
+    # label-skew assignment: client k draws labels from its own class subset
+    rng = np.random.RandomState(0)
+    client_classes = np.stack(
+        [rng.choice(num_classes, classes_per_client, replace=False) for _ in range(num_clients)]
+    )
+    perms = np.stack([
+        rng.permutation(num_classes) if concept_shift else np.arange(num_classes)
+        for _ in range(num_clients)
+    ])
+
+    def sample(key, classes, perm, n):
+        ky, kx = jax.random.split(key)
+        idx = jax.random.randint(ky, (n,), 0, classes_per_client)
+        c = jnp.asarray(classes)[idx]
+        y = jnp.asarray(perm)[c]
+        x = templates[c] + noise * jax.random.normal(kx, (n, image_hw, image_hw, channels))
+        return x, y
+
+    tr_keys = jax.random.split(kn, num_clients)
+    te_keys = jax.random.split(ktn, num_clients)
+    trs = [sample(tr_keys[k], client_classes[k], perms[k], train_per_client) for k in range(num_clients)]
+    tes = [sample(te_keys[k], client_classes[k], perms[k], test_per_client) for k in range(num_clients)]
+    return FedClassification(
+        train_x=jnp.stack([t[0] for t in trs]),
+        train_y=jnp.stack([t[1] for t in trs]),
+        test_x=jnp.stack([t[0] for t in tes]),
+        test_y=jnp.stack([t[1] for t in tes]),
+        num_classes=num_classes,
+    )
+
+
+def sample_round_batches(key, data: FedClassification, local_steps: int, batch: int):
+    """Per-round minibatches for every client: (K, R, B, ...) pytree."""
+    k = data.num_clients
+    n = data.train_x.shape[1]
+    idx = jax.random.randint(key, (k, local_steps, batch), 0, n)
+    x = jax.vmap(lambda xs, i: xs[i])(data.train_x, idx)
+    y = jax.vmap(lambda ys, i: ys[i])(data.train_y, idx)
+    return {"x": x, "y": y}
+
+
+@dataclasses.dataclass
+class FedLM:
+    tokens: jax.Array     # (K, N, S+1) int32 token streams
+    vocab: int
+
+    @property
+    def num_clients(self):
+        return self.tokens.shape[0]
+
+    @property
+    def weights(self):
+        k = self.num_clients
+        return jnp.full((k,), 1.0 / k)
+
+
+def make_federated_lm(
+    key, num_clients: int, vocab: int, seq: int, samples_per_client: int = 64,
+    skew: float = 0.8,
+) -> FedLM:
+    """Each client's stream mixes a shared uniform vocabulary with a
+    client-specific slice (probability `skew`) — label-skew for LM."""
+    slice_size = max(vocab // num_clients, 8)
+
+    def client(k_idx, kk):
+        lo = (k_idx * slice_size) % max(vocab - slice_size, 1)
+        ku, kc, km = jax.random.split(kk, 3)
+        uni = jax.random.randint(ku, (samples_per_client, seq + 1), 0, vocab)
+        loc = lo + jax.random.randint(kc, (samples_per_client, seq + 1), 0, slice_size)
+        mask = jax.random.bernoulli(km, skew, (samples_per_client, seq + 1))
+        return jnp.where(mask, loc, uni).astype(jnp.int32)
+
+    keys = jax.random.split(key, num_clients)
+    toks = jnp.stack([client(i, keys[i]) for i in range(num_clients)])
+    return FedLM(tokens=toks, vocab=vocab)
+
+
+def sample_lm_batches(key, data: FedLM, local_steps: int, batch: int):
+    k, n, _ = data.tokens.shape
+    idx = jax.random.randint(key, (k, local_steps, batch), 0, n)
+    seqs = jax.vmap(lambda xs, i: xs[i])(data.tokens, idx)  # (K,R,B,S+1)
+    return {"tokens": seqs[..., :-1], "labels": seqs[..., 1:]}

@@ -1,0 +1,2 @@
+# Federated-learning runtime: round scheduling, comms accounting, serving.
+from repro.fl import comms

@@ -1,0 +1,41 @@
+"""Bidirectional communication-cost accounting (paper Table 2 cost model).
+
+Per-round bits between the server and all S participating clients:
+
+  FedAvg    up S*32n, down S*32n
+  OBDA      up S*n,   down S*n        (1-bit both directions)
+  OBCSAA    up S*(m+32), down S*32n   (1-bit CS uplink + amplitude scalar)
+  zSignFed  up S*(n+32), down S*32n
+  EDEN      up S*(n+32), down S*32n
+  FedBAT    up S*(n+32*T), down S*32n (T = #tensors, one alpha each)
+  pFed1BS   up S*m,   down m          (one m-bit sketch each way; the
+                                       consensus is broadcast once)
+"""
+from __future__ import annotations
+
+FP_BITS = 32
+
+
+def round_bits(algo: str, *, n: int, m: int, s: int, num_tensors: int = 1) -> dict:
+    algo = algo.lower()
+    if algo == "fedavg":
+        up, down = s * FP_BITS * n, s * FP_BITS * n
+    elif algo == "obda":
+        up, down = s * n, s * n
+    elif algo == "obcsaa":
+        up, down = s * (m + FP_BITS), s * FP_BITS * n
+    elif algo in ("zsignfed", "fedbat", "eden"):
+        scalars = num_tensors if algo == "fedbat" else 1
+        up, down = s * (n + FP_BITS * scalars), s * FP_BITS * n
+    elif algo == "pfed1bs":
+        up, down = s * m, m
+    else:
+        raise ValueError(algo)
+    return {"uplink_bits": up, "downlink_bits": down, "total_bits": up + down,
+            "total_mb": (up + down) / 8e6}
+
+
+def reduction_vs_fedavg(algo: str, **kw) -> float:
+    base = round_bits("fedavg", **kw)["total_bits"]
+    this = round_bits(algo, **kw)["total_bits"]
+    return 1.0 - this / base

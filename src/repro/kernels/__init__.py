@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's compute hot-spots: the Fast Hadamard
+# Transform (the paper's own O(n log n) optimization, re-tiled for the MXU)
+# and one-bit pack/unpack/majority-vote transport.
+from repro.kernels import ops, ref
+from repro.kernels.ops import fht, pack_signs, unpack_signs, vote_packed
+
+__all__ = ["ops", "ref", "fht", "pack_signs", "unpack_signs", "vote_packed"]

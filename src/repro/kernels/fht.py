@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the Fast Hadamard Transform.
+
+TPU adaptation (see DESIGN.md §3): instead of a butterfly network (a GPU
+warp-shuffle pattern with no TPU analogue), we factor the Walsh-Hadamard
+matrix as a Kronecker product H_c = H_a (x) H_b with a, b <= 128, so the
+per-tile transform is two MXU matmuls on a VMEM-resident (block_rows, a, b)
+tile:
+
+    Y = H_a @ X @ H_b        where X = x.reshape(block_rows, a, b)
+
+Both H_a and H_b are normalized (orthonormal), so the composition is the
+normalized FHT. Tiles are hardware-aligned: a = b = 128 gives 128x128 MXU
+matmuls for the default chunk size c = 16384.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import hadamard_matrix, is_pow2
+
+
+def _split_pow2(c: int) -> tuple[int, int]:
+    """Split c = a*b with a, b powers of two and a, b <= 128."""
+    assert is_pow2(c) and c <= 128 * 128, f"kernel supports c <= 16384, got {c}"
+    log = c.bit_length() - 1
+    la = log // 2
+    return 1 << la, 1 << (log - la)
+
+
+def _fht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int):
+    """One grid step: FHT of a (block_rows, a*b) VMEM tile via two matmuls."""
+    br = x_ref.shape[0]
+    x = x_ref[...].reshape(br, a, b)
+    ha = ha_ref[...]
+    hb = hb_ref[...]
+    # X @ H_b: contract the trailing b axis (MXU matmul, b-aligned).
+    t = jax.lax.dot_general(
+        x, hb, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (br, a, b)
+    # H_a @ X: contract the a axis.
+    y = jax.lax.dot_general(
+        t, ha, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (br, b, a) -- note output axes order (br, b, a)
+    o_ref[...] = jnp.transpose(y, (0, 2, 1)).reshape(br, a * b).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fht_pallas(
+    x: jax.Array, *, block_rows: int = 8, interpret: bool = False
+) -> jax.Array:
+    """Normalized FHT along the last axis of x: (rows, c) with c = 2^k <= 16384.
+
+    Grid over row blocks; each step holds a (block_rows, c) tile plus the two
+    Hadamard factors in VMEM (c=16384, br=8: 8*16384*4B = 512KiB + 2*64KiB).
+    """
+    rows, c = x.shape
+    a, b = _split_pow2(c)
+    ha = hadamard_matrix(a, jnp.float32)
+    hb = hadamard_matrix(b, jnp.float32)
+
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    padded_rows = x.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_fht_kernel, a=a, b=b),
+        grid=(padded_rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, c), x.dtype),
+        interpret=interpret,
+    )(x, ha, hb)
+    return out[:rows] if pad else out

@@ -1,0 +1,98 @@
+"""Pallas TPU kernels for one-bit sketch transport.
+
+pFed1BS puts *bits* on the wire: sketches are sign vectors packed 32-per-word
+before crossing the pod (federation) axis, and the server's majority vote
+operates on the packed representation. These are VPU-bound elementwise
+kernels; blocking keeps each tile in VMEM and lane-aligned (last dim 128).
+
+Kernels:
+  pack_pallas    : (rows, 32*W) float -> (rows, W) uint32   (bit = x >= 0)
+  unpack_pallas  : (rows, W) uint32   -> (rows, 32*W) +/-1 float
+  vote_pallas    : (K, W) uint32, (K,) weights -> (W,) uint32 weighted majority
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(x_ref, o_ref):
+    rows, m = x_ref.shape
+    bits = (x_ref[...] >= 0).astype(jnp.uint32).reshape(rows, m // 32, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    o_ref[...] = jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+
+
+def _unpack_kernel(w_ref, o_ref):
+    rows, nw = w_ref.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (w_ref[...][..., None] >> shifts) & jnp.uint32(1)
+    pm = bits.astype(o_ref.dtype) * 2 - 1
+    o_ref[...] = pm.reshape(rows, nw * 32)
+
+
+def _vote_kernel(w_ref, p_ref, o_ref):
+    k, nw = w_ref.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (w_ref[...][..., None] >> shifts) & jnp.uint32(1)
+    pm = bits.astype(jnp.float32) * 2 - 1                    # (K, nw, 32)
+    s = jnp.einsum("k,kwb->wb", p_ref[...], pm)              # weighted sum
+    out_bits = (s >= 0).astype(jnp.uint32) << shifts[0]      # tie -> +1
+    o_ref[...] = jnp.sum(out_bits, axis=-1).astype(jnp.uint32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_words", "interpret"))
+def pack_pallas(x, *, block_rows: int = 8, block_words: int = 512, interpret: bool = False):
+    rows, m = x.shape
+    assert m % 32 == 0
+    nw = m // 32
+    block_rows = min(block_rows, rows)
+    block_words = min(block_words, nw)
+    assert rows % block_rows == 0 and nw % block_words == 0
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(rows // block_rows, nw // block_words),
+        in_specs=[pl.BlockSpec((block_rows, block_words * 32), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows, block_words), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, nw), jnp.uint32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_words", "interpret"))
+def unpack_pallas(words, *, block_rows: int = 8, block_words: int = 512, interpret: bool = False):
+    rows, nw = words.shape
+    block_rows = min(block_rows, rows)
+    block_words = min(block_words, nw)
+    assert rows % block_rows == 0 and nw % block_words == 0
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(rows // block_rows, nw // block_words),
+        in_specs=[pl.BlockSpec((block_rows, block_words), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows, block_words * 32), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, nw * 32), jnp.float32),
+        interpret=interpret,
+    )(words)
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "interpret"))
+def vote_pallas(words, weights, *, block_words: int = 256, interpret: bool = False):
+    """Weighted majority vote over K packed sketches -> packed consensus."""
+    k, nw = words.shape
+    block_words = min(block_words, nw)
+    assert nw % block_words == 0
+    out = pl.pallas_call(
+        _vote_kernel,
+        grid=(nw // block_words,),
+        in_specs=[
+            pl.BlockSpec((k, block_words), lambda j: (0, j)),
+            pl.BlockSpec((k,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_words), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, nw), jnp.uint32),
+        interpret=interpret,
+    )(words, weights.astype(jnp.float32))
+    return out[0]

@@ -1,0 +1,92 @@
+"""Jit'd public wrappers selecting kernel vs reference implementation.
+
+On TPU the Pallas kernels run compiled; on CPU hosts (this container) the
+default execution path is the pure-jnp reference (Pallas interpret mode is
+correct but slow — it is exercised in the test suite, not in production
+paths). `impl` can force either path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fht import fht_pallas
+from repro.kernels.onebit import pack_pallas, unpack_pallas, vote_pallas
+
+_KERNEL_MAX_C = 128 * 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if _on_tpu() else "ref"
+
+
+def fht(x: jax.Array, impl: str = "auto") -> jax.Array:
+    """Normalized FHT along the last axis (any power-of-two length).
+
+    Lengths above the single-tile kernel limit (2^14) are handled by the
+    Kronecker split H_{ab} = H_a (x) H_b: FHT along each factor of a
+    row-major (a, b) reshape.
+    """
+    impl = _auto(impl)
+    n = x.shape[-1]
+    assert _ref.is_pow2(n), f"FHT length must be a power of two, got {n}"
+    if impl == "ref":
+        return _ref.fht_ref(x)
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, n)
+
+    def go(y):  # y: (rows, c), c any pow2
+        c = y.shape[-1]
+        if c <= _KERNEL_MAX_C:
+            return fht_pallas(y, interpret=not _on_tpu())
+        b = _KERNEL_MAX_C
+        a = c // b
+        y = y.reshape(-1, a, b)
+        y = go(y.reshape(-1, b)).reshape(-1, a, b)          # H_b along last
+        y = jnp.swapaxes(y, 1, 2)                            # (rows, b, a)
+        y = go(y.reshape(-1, a)).reshape(-1, b, a)           # H_a along last
+        return jnp.swapaxes(y, 1, 2).reshape(-1, c)
+
+    return go(x2).reshape(*lead, n)
+
+
+def pack_signs(x: jax.Array, impl: str = "auto") -> jax.Array:
+    """Pack signs (x >= 0) of the last axis (multiple of 32) into uint32."""
+    impl = _auto(impl)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]) if lead else x[None]
+    if impl == "ref" or x2.shape[0] % 8 != 0 or (x2.shape[-1] // 32) % 512 != 0:
+        out = _ref.pack_ref(x2)
+    else:
+        out = pack_pallas(x2, interpret=not _on_tpu())
+    return out.reshape(*lead, -1) if lead else out[0]
+
+
+def unpack_signs(words: jax.Array, impl: str = "auto") -> jax.Array:
+    """Unpack uint32 words into +/-1 float32 along the last axis."""
+    impl = _auto(impl)
+    lead = words.shape[:-1]
+    w2 = words.reshape(-1, words.shape[-1]) if lead else words[None]
+    if impl == "ref" or w2.shape[0] % 8 != 0 or w2.shape[-1] % 512 != 0:
+        out = _ref.unpack_ref(w2)
+    else:
+        out = unpack_pallas(w2, interpret=not _on_tpu())
+    return out.reshape(*lead, -1) if lead else out[0]
+
+
+def vote_packed(words: jax.Array, weights: jax.Array, impl: str = "auto") -> jax.Array:
+    """Weighted majority vote over (K, W) packed sketches -> (W,) packed."""
+    impl = _auto(impl)
+    if impl == "ref" or words.shape[-1] % 256 != 0:
+        return _ref.vote_ref(words, weights)
+    return vote_pallas(words, weights, interpret=not _on_tpu())

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, real lowering on TPU). They are also the default execution path on
+CPU hosts, where Pallas interpret mode would be needlessly slow.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Normalized Walsh-Hadamard matrix H_n with H @ H.T = I (n power of 2)."""
+    assert is_pow2(n), f"Hadamard size must be a power of two, got {n}"
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return jnp.asarray(h / np.sqrt(n), dtype=dtype)
+
+
+def fht_ref(x: jax.Array) -> jax.Array:
+    """Normalized Fast Hadamard Transform along the last axis.
+
+    Iterative butterfly; length must be a power of two. Orthonormal:
+    fht_ref(fht_ref(x)) == x.
+    """
+    n = x.shape[-1]
+    assert is_pow2(n), f"FHT length must be a power of two, got {n}"
+    orig_shape = x.shape
+    x = x.reshape(-1, n)
+    h = 1
+    while h < n:
+        x = x.reshape(-1, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(-1, n)
+        h *= 2
+    return (x / jnp.sqrt(jnp.asarray(n, x.dtype))).reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# One-bit packing / majority vote
+# ---------------------------------------------------------------------------
+
+def pack_ref(x: jax.Array) -> jax.Array:
+    """Pack signs of x (last axis length divisible by 32) into uint32 words.
+
+    Convention: bit = 1 iff x >= 0 (zero maps to +1).
+    """
+    m = x.shape[-1]
+    assert m % 32 == 0, f"pack length must be divisible by 32, got {m}"
+    bits = (x >= 0).astype(jnp.uint32).reshape(*x.shape[:-1], m // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_ref(words: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Unpack uint32 words into +/-1 values (bit 1 -> +1, bit 0 -> -1)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    pm = bits.astype(dtype) * 2 - 1
+    return pm.reshape(*words.shape[:-1], words.shape[-1] * 32)
+
+
+def vote_ref(words: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted majority vote over packed one-bit sketches.
+
+    words: (K, W) uint32 packed sketches; weights: (K,) nonnegative.
+    Returns packed uint32 (W,) with ties (weighted sum == 0) broken to +1.
+    """
+    pm = unpack_ref(words)                       # (K, 32W)
+    s = jnp.einsum("k,km->m", weights, pm)       # weighted sign sum
+    return pack_ref(s)                           # >= 0 -> +1 handles tie->+1

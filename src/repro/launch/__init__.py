@@ -1,0 +1,1 @@
+# Launchers: production mesh factory, multi-pod dry-run, training driver.

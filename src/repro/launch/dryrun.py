@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config lowers and compiles for
+every (architecture x input shape x mesh) combination, and extract the
+roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 combos, single-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json and
+feed EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline.py.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import steps as st
+from repro.launch.mesh import make_production_mesh
+from repro.models import io, lm
+from repro.sharding import specs as sh
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# TPU v5e single-chip constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def skip_reason(cfg, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return (
+            "full-attention architecture without a sub-quadratic variant: "
+            "long_500k decode skipped per brief (see DESIGN.md §5)"
+        )
+    return None
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective in a post-SPMD module."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += size * nbytes
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float, chips: int) -> dict:
+    """Seconds per step for each roofline term (flops/bytes are PER-DEVICE —
+    post-SPMD modules are per-partition programs)."""
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+
+
+def model_flops(cfg, seq: int, batch: int, kind: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-compute reference."""
+    tmpl = st.param_template(cfg)
+    n_total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tmpl))
+    if cfg.n_experts:
+        # subtract non-active expert params
+        per_expert = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tmpl)[0]:
+            kp = jax.tree_util.keystr(path)
+            if "'w1'" in kp or "'w2'" in kp:
+                if leaf.ndim == 4:  # (L, E, ., .)
+                    per_expert += int(np.prod(leaf.shape)) // leaf.shape[1]
+        n_active = n_total - per_expert * (cfg.n_experts - cfg.top_k)
+    else:
+        n_active = n_total
+    tokens = batch * (seq if kind != "decode" else 1)
+    mult = 6 if kind == "train" else 2
+    return float(mult * n_active * tokens), n_total
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool, hyper: st.StepHyper,
+              reduced: bool = False, moe_impl: str = "dense", tag: str = "",
+              dtype: str = "bfloat16", attn_shard: str = "auto",
+              remat: bool = True):
+    cfg = configs.get(arch)
+    cfg = dataclasses.replace(cfg, param_dtype=dtype, compute_dtype=dtype,
+                              moe_impl=moe_impl, attn_shard=attn_shard,
+                              remat=remat)
+    if reduced:
+        cfg = dataclasses.replace(cfg.reduced(), param_dtype=dtype,
+                                  compute_dtype=dtype, moe_impl=moe_impl,
+                                  attn_shard=attn_shard, remat=remat)
+    sdesc = SHAPES[shape_name]
+    seq, batch, kind = sdesc["seq"], sdesc["batch"], sdesc["kind"]
+    if reduced:
+        seq, batch = min(seq, 512), min(batch, 16)
+        if cfg.family == "vlm":
+            seq = max(seq, cfg.num_patches + 64)
+
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(tuple(mesh.shape.values())))
+    record = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": dict(mesh.shape), "chips": chips, "multi_pod": multi_pod,
+        "seq": seq, "batch": batch, "dtype": dtype, "tag": tag,
+        "hyper": dataclasses.asdict(hyper),
+    }
+    t0 = time.time()
+
+    with mesh:
+        if kind == "train" and multi_pod:
+            npods = mesh.shape["pod"]
+            step, tspec = st.make_round_step(cfg, hyper, mesh, npods)
+            (tmpl, bspecs, v_sds), (pshard, bshard, vshard) = st.train_inputs(
+                cfg, hyper, mesh, batch // npods, seq, tspec, multi_client=npods
+            )
+            v_sds_c = v_sds  # consensus shared across pods
+            w_sds = jax.ShapeDtypeStruct((npods,), jnp.float32)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, bshard, vshard, sh.replicated(mesh)),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(tmpl, bspecs, v_sds_c, w_sds)
+        elif kind == "train":
+            step, tmpl, tspec, pspec, vspec = st.make_train_step(cfg, hyper, mesh)
+            (tmpl_i, bspecs, v_sds), (pshard, bshard, vshard) = st.train_inputs(
+                cfg, hyper, mesh, batch, seq, tspec
+            )
+            jitted = jax.jit(step, in_shardings=(pshard, bshard, vshard),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(tmpl_i, bspecs, v_sds)
+        elif kind == "prefill":
+            step = st.make_prefill_step(cfg)
+            tmpl = st.param_template(cfg)
+            pspec = sh.param_pspecs(cfg, tmpl, mesh)
+            bspecs = io.batch_specs(cfg, batch, seq)
+            # multi-pod serving shards the batch over ('pod','data') —
+            # handled inside batch_pspecs via _dp_axes
+            bspec = sh.batch_pspecs(cfg, bspecs, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(sh.to_named(mesh, pspec), sh.to_named(mesh, bspec)),
+            )
+            lowered = jitted.lower(tmpl, bspecs)
+        else:  # decode
+            step = st.make_serve_step(cfg)
+            sds, shardings = st.serve_inputs(cfg, mesh, batch, seq)
+            jitted = jax.jit(step, in_shardings=shardings, donate_argnums=(2,))
+            lowered = jitted.lower(*sds)
+
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    record["cost_analysis"] = {"flops": flops, "bytes_accessed": hbm}
+
+    try:
+        ma = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # noqa: BLE001 - backend-dependent availability
+        record["memory_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+    record["collectives"] = colls
+    coll_total = sum(v["bytes"] for v in colls.values())
+    record["roofline"] = roofline_terms(flops, hbm, coll_total, chips)
+    record["roofline"]["collective_bytes_total"] = coll_total
+    dom = max(record["roofline"], key=lambda k: record["roofline"][k] if k.endswith("_s") else -1)
+    record["roofline"]["dominant"] = dom
+    mf, n_total = model_flops(cfg, seq, batch, kind)
+    record["model_flops_global"] = mf
+    record["param_count"] = n_total
+    # compiled module is per-device: compare against per-device share
+    record["useful_flops_ratio"] = (mf / chips) / flops if flops else 0.0
+    record["status"] = "ok"
+    return record
+
+
+def artifact_path(arch, shape_name, multi_pod, tag=""):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(
+        "experiments", "dryrun", f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=configs.ARCH_NAMES + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true", help="smoke-scale shapes")
+    ap.add_argument("--moe-impl", default="dense", choices=["dense", "sorted", "grouped"])
+    ap.add_argument("--attn-shard", default="auto", choices=["auto", "seq"])
+    ap.add_argument("--packed-vote", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--sketch-layout", default="leaf", choices=["leaf", "flat"])
+    ap.add_argument("--no-sketch", action="store_true")
+    ap.add_argument("--chunk", type=int, default=16384)
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    hyper = st.StepHyper(
+        sketch_layout=args.sketch_layout,
+        include_sketch=not args.no_sketch,
+        chunk=args.chunk,
+        packed_vote=args.packed_vote,
+    )
+    combos = (
+        [(a, s) for a in configs.ARCH_NAMES for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = 0
+    for arch, shape_name in combos:
+        path = args.out or artifact_path(arch, shape_name, args.multi_pod, args.tag)
+        try:
+            rec = lower_one(
+                arch, shape_name, multi_pod=args.multi_pod, hyper=hyper,
+                reduced=args.reduced, moe_impl=args.moe_impl, tag=args.tag,
+                dtype=args.dtype, attn_shard=args.attn_shard,
+                remat=not args.no_remat,
+            )
+        except Exception as e:  # noqa: BLE001 - report & continue the sweep
+            rec = {"arch": arch, "shape": shape_name, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            failures += 1
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (
+                f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                f"coll={r['collective_s']:.3e}s dom={r['dominant']} "
+                f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)"
+            )
+        elif status == "skipped":
+            extra = rec["reason"][:80]
+        else:
+            extra = rec["error"][:160]
+        print(f"[{status:7s}] {arch:24s} {shape_name:12s} {extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} combos failed")
+
+
+if __name__ == "__main__":
+    main()

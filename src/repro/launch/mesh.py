@@ -1,0 +1,34 @@
+"""Production mesh factory (2 pods x 256 chips of TPU v5e target).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (required so smoke tests see 1 CPU device while the dry-run
+sees 512 forced host devices).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices but only {len(devs)} visible. "
+            "The dry-run launcher must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 BEFORE importing jax."
+        )
+    if len(devs) == ndev:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, devices=devs[:ndev])
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh on whatever devices exist (CPU tests)."""
+    import jax
+
+    return jax.make_mesh(shape, axes, devices=jax.devices()[: int(np.prod(shape))])

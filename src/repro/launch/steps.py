@@ -1,0 +1,232 @@
+"""Step builders shared by the dry-run, the trainer and the benchmarks.
+
+Four lowered programs per architecture:
+
+  train_step  — one pFed1BS client step at scale: task grad (CE over the
+                assigned LLM) + lam * Phi^T(tanh(gamma Phi w) - v) + mu*w,
+                SGD update. The sketch is the sharding-aware tree sketch.
+  round_step  — multi-pod federation round: pod axis = client axis; one
+                local step + fresh one-bit sketches + cross-pod weighted
+                majority vote (the only cross-pod traffic).
+  prefill     — forward over the prompt, last-position logits.
+  serve_step  — one new token against a seq_len KV cache / SSM state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import treesketch as ts
+from repro.models import io, lm
+from repro.models.config import ArchConfig
+from repro.sharding import specs as sh
+
+
+@dataclasses.dataclass(frozen=True)
+class StepHyper:
+    lr: float = 0.02
+    lam: float = 5e-4
+    mu: float = 1e-5
+    gamma: float = 1e4
+    m_ratio: float = 0.1
+    chunk: int = 16384
+    sketch_layout: str = "leaf"     # leaf (sharded) | flat (paper-literal)
+    include_sketch: bool = True     # regularizer+sketch inside train_step
+    packed_vote: bool = False       # cross-pod vote on packed uint32 words
+    #                                 (shard_map all-gather of m/32 words
+    #                                 instead of an f32 all-reduce; §Perf)
+
+
+def param_template(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k), jax.random.key(0))
+
+
+def build_tree_spec(cfg: ArchConfig, hyper: StepHyper, mesh):
+    tmpl = param_template(cfg)
+    majors = (
+        sh.param_major_axes(cfg, tmpl, mesh)
+        if hyper.sketch_layout == "leaf"
+        else None
+    )
+    return ts.make_tree_sketch_spec(
+        tmpl, hyper.m_ratio, chunk=hyper.chunk, major_axes=majors
+    )
+
+
+# ---------------------------------------------------------------------------
+# train_step (single client-cohort; one pod)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, hyper: StepHyper, mesh):
+    tmpl = param_template(cfg)
+    tspec = build_tree_spec(cfg, hyper, mesh) if hyper.include_sketch else None
+
+    def train_step(params, batch, v):
+        def obj(p):
+            loss, metrics = lm.loss_fn(cfg, p, batch)
+            return loss, metrics
+
+        (loss, _), grads = jax.value_and_grad(obj, has_aux=True)(params)
+        if tspec is not None:
+            rval, rgrad = ts.tree_reg_value_and_grad(
+                tspec, params, v, hyper.gamma, hyper.lam, hyper.mu
+            )
+            grads = jax.tree.map(lambda g, r: g + r.astype(g.dtype), grads, rgrad)
+            loss = loss + rval
+        params = jax.tree.map(
+            lambda p, g: p - hyper.lr * g.astype(p.dtype), params, grads
+        )
+        return params, loss
+
+    pspec = sh.param_pspecs(cfg, tmpl, mesh)
+    vspec = ts.sketch_pspecs(tspec, pspec, mesh) if tspec is not None else {}
+    return train_step, tmpl, tspec, pspec, vspec
+
+
+def train_inputs(cfg, hyper, mesh, batch, seq, tspec, multi_client=0):
+    """ShapeDtypeStructs + shardings for (params, batch, v)."""
+    tmpl = param_template(cfg)
+    pspec = sh.param_pspecs(cfg, tmpl, mesh)
+    bspecs = io.batch_specs(cfg, batch, seq)
+    if multi_client:  # stack the client axis BEFORE computing shardings
+        bspecs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((multi_client,) + s.shape, s.dtype), bspecs
+        )
+    bpspec = sh.batch_pspecs(cfg, bspecs, mesh, client_axis=bool(multi_client))
+    vspec_tree = ts.sketch_pspecs(tspec, pspec, mesh) if tspec is not None else {}
+    v_sds = (
+        {
+            path: jax.ShapeDtypeStruct((spec.num_chunks, spec.m_chunk), jnp.float32)
+            for path, spec, _, _ in tspec.entries
+        }
+        if tspec is not None
+        else {}
+    )
+    if multi_client:
+        tmpl = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((multi_client,) + s.shape, s.dtype), tmpl
+        )
+        pspec = jax.tree.map(lambda s: P(*(("pod",) + tuple(s))), pspec,
+                             is_leaf=lambda x: isinstance(x, P))
+    shardings = (
+        sh.to_named(mesh, pspec),
+        sh.to_named(mesh, bpspec),
+        sh.to_named(mesh, vspec_tree),
+    )
+    return (tmpl, bspecs, v_sds), shardings
+
+
+# ---------------------------------------------------------------------------
+# round_step (multi-pod: pod axis = federation axis)
+# ---------------------------------------------------------------------------
+
+def make_round_step(cfg: ArchConfig, hyper: StepHyper, mesh, n_clients: int):
+    tspec = build_tree_spec(cfg, hyper, mesh)
+    vspec_by_path = dict(
+        (path, spec) for path, spec, _, _ in tspec.entries
+    )
+    sharded_paths = {
+        path: pspec
+        for path, pspec in ts.sketch_pspecs(
+            tspec, sh.param_pspecs(cfg, param_template(cfg), mesh), mesh
+        ).items()
+    }
+
+    def _packed_vote_leaf(path, zz, weights):
+        """Cross-pod vote on PACKED words: all-gather m/32 uint32 per client
+        instead of all-reducing m float32 partial sums (32x wire reduction —
+        the honest one-bit downlink)."""
+        from jax.experimental.shard_map import shard_map
+        from repro.kernels import ops as kops
+
+        k, nc, mc = zz.shape
+        pad = (-mc) % 32
+        zp = kops.pack_signs(jnp.pad(zz, ((0, 0), (0, 0), (0, pad))))
+        row_spec = sharded_paths[path]  # P("model",None) or P(None,None)
+        row_axis = row_spec[0]          # "model" | None
+
+        def local(zp_l, w_l):
+            zall = jax.lax.all_gather(zp_l, "pod", axis=0, tiled=True)  # (K,...)
+            pm = kops.unpack_signs(zall)
+            s = jnp.einsum("k,kcm->cm", w_l, pm)
+            return jnp.where(s >= 0, 1.0, -1.0)
+
+        v = shard_map(
+            local, mesh=mesh,
+            in_specs=(P("pod", row_axis, None), P()),
+            out_specs=P(row_axis, None),
+            check_rep=False,
+        )(zp, weights)
+        return v[:, :mc]
+
+    def round_step(clients, batch, v, weights):
+        def one(p, b):
+            def obj(q):
+                loss, _ = lm.loss_fn(cfg, q, b)
+                return loss
+
+            loss, grads = jax.value_and_grad(obj)(p)
+            _, rgrad = ts.tree_reg_value_and_grad(
+                tspec, p, v, hyper.gamma, hyper.lam, hyper.mu
+            )
+            grads = jax.tree.map(lambda g, r: g + r.astype(g.dtype), grads, rgrad)
+            p = jax.tree.map(lambda a, g: a - hyper.lr * g.astype(a.dtype), p, grads)
+            z = ts.tree_sketch_forward(tspec, p)
+            z = {k: jnp.sign(zz) + (zz == 0) for k, zz in z.items()}
+            return p, z, loss
+
+        newp, zs, losses = jax.vmap(one)(clients, batch)
+        # weighted majority vote per sketch block — the ONLY cross-pod traffic
+        if hyper.packed_vote:
+            v_new = {k: _packed_vote_leaf(k, zz, weights) for k, zz in zs.items()}
+        else:
+            v_new = {
+                k: jnp.sign(jnp.einsum("k,kcm->cm", weights, zz))
+                for k, zz in zs.items()
+            }
+        return newp, v_new, jnp.mean(losses)
+
+    return round_step, tspec
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return lm.prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, token, cache, pos):
+        return lm.decode_step(cfg, params, token, cache, pos)
+
+    return serve_step
+
+
+def serve_inputs(cfg: ArchConfig, mesh, batch: int, seq: int):
+    """Specs + shardings for (params, token, cache, pos)."""
+    tmpl = param_template(cfg)
+    pspec = sh.param_pspecs(cfg, tmpl, mesh)
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, batch, seq, enc_len=seq))
+    cspec = sh.cache_pspecs(cfg, cache, mesh)
+    tok = io.decode_token_spec(cfg, batch)
+    tok_spec = jax.tree.leaves(
+        sh.batch_pspecs(cfg, {"t": tok}, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )[0]
+    shardings = (
+        sh.to_named(mesh, pspec),
+        NamedSharding(mesh, tok_spec),
+        sh.to_named(mesh, cspec),
+        NamedSharding(mesh, P()),
+    )
+    sds = (tmpl, tok, cache, jax.ShapeDtypeStruct((), jnp.int32))
+    return sds, shardings

@@ -1,0 +1,2 @@
+# Model substrate: transformer/SSM/MoE/hybrid/enc-dec families for the
+# assigned architecture pool, plus the paper's own MLP/VGG nets.

@@ -1,0 +1,118 @@
+"""Architecture configuration dataclass shared by all model families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+def pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """Static architecture description (hashable: usable as a jit static arg)."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int = 0                 # 0 => attention-free
+    n_kv: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    head_dim: int = 0                # 0 => d_model // n_heads
+    mlp_type: str = "gated"          # gated (silu) | plain (gelu)
+    rope_theta: float = 10000.0
+    window: int = 0                  # 0 => full causal attention, else SWA
+    attn_shard: str = "auto"         # auto (heads via weight sharding) | seq
+    #                                  (sequence-parallel attention; §Perf —
+    #                                  for head counts indivisible by the TP axis)
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_impl: str = "dense"          # dense (GShard one-hot) | sorted (gather)
+    #                                  | grouped (shard-local sort; §Perf)
+    moe_groups: int = 16             # grouped impl: groups aligned to data shards
+    capacity_factor: float = 1.25
+    # --- MLA (deepseek-v2) ---
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- SSM ---
+    ssm_state: int = 0
+    ssm_variant: str = ""            # mamba1 | mamba2
+    d_conv: int = 4
+    expand: int = 2
+    ssm_head_dim: int = 64           # mamba2 only
+    ssm_chunk: int = 256             # scan chunk length
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0       # apply ONE shared attn block every N ssm layers
+    # --- enc-dec (seamless) ---
+    enc_layers: int = 0
+    # --- modality frontends (stubs per brief) ---
+    num_patches: int = 0             # vlm: vision tokens prepended
+    # --- numerics ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = True               # activation checkpointing on layer blocks
+    # --- citation ---
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def vocab_pad(self) -> int:
+        return pad_to(self.vocab, 256)
+
+    @property
+    def dt_rank(self) -> int:
+        return pad_to(-(-self.d_model // 16), 8)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: SSM state, hybrid, or sliding-window attn."""
+        return self.family in ("ssm", "hybrid") or self.window > 0
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A smoke-test variant of the same family (<=2 layers, d_model<=256)."""
+        small = dict(
+            n_layers=2,
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv=min(self.n_kv, 2) if self.n_kv else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            head_dim=64 if self.n_heads else 0,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            q_lora=64 if self.q_lora else 0,
+            kv_lora=32 if self.kv_lora else 0,
+            qk_nope_dim=32 if self.qk_nope_dim else 0,
+            qk_rope_dim=16 if self.qk_rope_dim else 0,
+            v_head_dim=32 if self.v_head_dim else 0,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_variant == "mamba2" else self.ssm_head_dim,
+            ssm_chunk=32,
+            shared_attn_every=1 if self.shared_attn_every else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            num_patches=min(self.num_patches, 8),
+            window=min(self.window, 64) if self.window else 0,
+            name=self.name + "-reduced",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,62 @@
+"""Batch construction: concrete random batches (tests/examples) and
+ShapeDtypeStruct stand-ins (multi-pod dry-run; no device allocation).
+
+Modality frontends are STUBS per the brief: for [vlm] the ViT+projector and
+for [audio] the mel/conv feature extractor are not implemented — batches
+carry precomputed patch/frame embeddings of the right shape, and the
+language/decoder transformer consumes them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+def batch_shapes(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Shapes/dtypes of one training (or prefill) batch."""
+    emb_dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        st = seq - cfg.num_patches
+        return {
+            "patches": ((batch, cfg.num_patches, cfg.d_model), emb_dt),
+            "tokens": ((batch, st), jnp.int32),
+            "labels": ((batch, st), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": ((batch, seq, cfg.d_model), emb_dt),
+            "tokens": ((batch, seq), jnp.int32),
+            "labels": ((batch, seq), jnp.int32),
+        }
+    return {
+        "tokens": ((batch, seq), jnp.int32),
+        "labels": ((batch, seq), jnp.int32),
+    }
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    return {
+        k: jax.ShapeDtypeStruct(shape, dt)
+        for k, (shape, dt) in batch_shapes(cfg, batch, seq).items()
+    }
+
+
+def make_batch(cfg: ArchConfig, key, batch: int, seq: int) -> dict:
+    out = {}
+    for name, (shape, dt) in batch_shapes(cfg, batch, seq).items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(dt, jnp.integer):
+            out[name] = jax.random.randint(sub, shape, 0, cfg.vocab, dtype=dt)
+        else:
+            out[name] = jax.random.normal(sub, shape, dt)
+    return out
+
+
+def decode_token_spec(cfg: ArchConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def make_decode_token(cfg: ArchConfig, key, batch: int) -> jax.Array:
+    return jax.random.randint(key, (batch, 1), 0, cfg.vocab, dtype=jnp.int32)

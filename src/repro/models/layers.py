@@ -1,0 +1,431 @@
+"""Transformer building blocks: norms, RoPE, GQA/SWA/MLA attention, MLP, MoE.
+
+Conventions: x is (B, S, D); params are nested dicts of arrays; every init_*
+takes (key, cfg) and every apply takes (params, cfg, ...). Layer stacks are
+built by vmapping init over layer keys and scanned at apply time (lm.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta, rot_dim=None):
+    """Apply rotary embeddings. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    rot = rot_dim or hd
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype) if rot < hd else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full-causal, bidirectional, exact block-SWA, decode cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, h * hd), pdt(cfg)),
+        "wk": dense_init(k2, (d, kv * hd), pdt(cfg)),
+        "wv": dense_init(k3, (d, kv * hd), pdt(cfg)),
+        "wo": dense_init(k4, (h * hd, d), pdt(cfg)),
+    }
+
+
+def _qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, kv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, kv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Sq,H,hd) grouped against k/v: (B,Sk,KV,hd); mask broadcastable
+    to (B,KV,G,Sq,Sk) or (Sq,Sk)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / np.sqrt(hd)
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h * hd)
+
+
+def attention(p, cfg, x, positions, *, bidir=False, window=0):
+    """Full-sequence attention (train / prefill). Exact block-SWA used when
+    window > 0 and S is a multiple of the window (sub-quadratic).
+
+    cfg.attn_shard == "seq" enables sequence-parallel attention: queries are
+    sharded along S over the 'model' axis while the (small, GQA) K/V are
+    gathered — the right layout when head counts don't divide the TP axis
+    (e.g. starcoder2's 36 heads on a 16-way mesh), where head sharding would
+    otherwise force score-tensor all-reduces."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if cfg.attn_shard == "seq" and s > 1:
+        from jax.sharding import PartitionSpec as P
+        q = jax.lax.with_sharding_constraint(q, P("data", "model", None, None))
+        k = jax.lax.with_sharding_constraint(k, P("data", None, None, None))
+        v = jax.lax.with_sharding_constraint(v, P("data", None, None, None))
+    if window and not bidir and s > window and s % window == 0:
+        out = _block_swa(cfg, q, k, v, window)
+    else:
+        ar = jnp.arange(s)
+        mask = jnp.ones((s, s), bool) if bidir else (ar[None, :] <= ar[:, None])
+        if window and not bidir:
+            mask &= ar[:, None] - ar[None, :] < window
+        out = _sdpa(q, k, v, mask)
+    if cfg.attn_shard == "seq" and s > 1:
+        from jax.sharding import PartitionSpec as P
+        # keep the sequence sharding through wo: resharding the (q-sharded)
+        # probs/context to a feature layout forces SPMD to rematerialize the
+        # full (B,H,S,S) tensor; gathering the 42MB wo weight instead is free
+        out = jax.lax.with_sharding_constraint(out, P("data", "model", None))
+    return out @ p["wo"].astype(x.dtype)
+
+
+def _block_swa(cfg, q, k, v, w):
+    """Exact sliding-window attention via (current + previous) w-blocks."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    nb = s // w
+    qb = q.reshape(b, nb, w, h, hd)
+    kb = k.reshape(b, nb, w, kv, hd)
+    vb = v.reshape(b, nb, w, kv, hd)
+    shift = lambda t: jnp.concatenate([jnp.zeros_like(t[:, :1]), t[:, :-1]], axis=1)
+    kw = jnp.concatenate([shift(kb), kb], axis=2)   # (B, nb, 2w, kv, hd)
+    vw = jnp.concatenate([shift(vb), vb], axis=2)
+    i = jnp.arange(w)[:, None]
+    sidx = jnp.arange(2 * w)[None, :]
+    mask = (sidx > i) & (sidx <= i + w)             # causal AND within window
+    first = jnp.arange(nb)[:, None, None] > 0
+    mask = mask[None] & (first | (sidx[None] >= w))  # block 0 has no prev
+    g = h // kv
+    qg = qb.reshape(b, nb, w, kv, g, hd)
+    scores = jnp.einsum("bnqkgd,bnskd->bnkgqs", qg, kw) / np.sqrt(hd)
+    scores = jnp.where(mask[:, None, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnkgqs,bnskd->bnqkgd", probs, vw)
+    return out.reshape(b, s, h * hd)
+
+
+def init_kv_cache(cfg, batch, length, dtype=None):
+    kv, hd = cfg.n_kv, cfg.hd
+    cap = min(length, cfg.window) if cfg.window else length
+    dt = dtype or cdt(cfg)
+    return {
+        "k": jnp.zeros((batch, cap, kv, hd), dt),
+        "v": jnp.zeros((batch, cap, kv, hd), dt),
+    }
+
+
+def attention_decode(p, cfg, x, cache, pos):
+    """One-token decode against a (possibly ring) KV cache.
+
+    x: (B, 1, D); cache k/v: (B, cap, KV, hd) storing *roped* keys;
+    pos: scalar absolute position of the new token.
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    cap = cache["k"].shape[1]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, 1, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, 1, kv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, 1, kv, hd)
+    posv = jnp.full((1,), pos)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    slot = pos % cap
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    valid = (jnp.arange(cap) <= pos)  # pre-wrap fill mask; all-valid once wrapped
+    valid = valid | (pos >= cap)
+    out = _sdpa(q, ck, cv, valid[None, None, None, None, :])
+    return out @ p["wo"].astype(x.dtype), {"k": ck, "v": cv}
+
+
+def init_cross_cache(cfg, batch, length, dtype=None):
+    dt = dtype or cdt(cfg)
+    return {
+        "ck": jnp.zeros((batch, length, cfg.n_kv, cfg.hd), dt),
+        "cv": jnp.zeros((batch, length, cfg.n_kv, cfg.hd), dt),
+    }
+
+
+def cross_attention(p, cfg, x, enc_kv, decode=False):
+    """Decoder->encoder attention; enc_kv = (k, v) precomputed from encoder."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k, v = enc_kv
+    out = _sdpa(q, k, v, jnp.ones((1, 1, 1, s, k.shape[1]), bool))
+    return out @ p["wo"].astype(x.dtype)
+
+
+def encoder_kv(p, cfg, enc_out):
+    b, se, _ = enc_out.shape
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, se, cfg.n_kv, cfg.hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, se, cfg.n_kv, cfg.hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2) with compressed KV cache
+# and the absorbed-matmul decode path.
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora), pdt(cfg)),
+        "q_norm": jnp.ones((cfg.q_lora,), pdt(cfg)),
+        "wq_b": dense_init(ks[1], (cfg.q_lora, h * (nd + rd)), pdt(cfg)),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora + rd), pdt(cfg)),
+        "kv_norm": jnp.ones((cfg.kv_lora,), pdt(cfg)),
+        "wk_b": dense_init(ks[3], (cfg.kv_lora, h * nd), pdt(cfg)),
+        "wv_b": dense_init(ks[4], (cfg.kv_lora, h * vd), pdt(cfg)),
+        "wo": dense_init(ks[5], (h * vd, d), pdt(cfg)),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, nd, rd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"])
+    q = (ql @ p["wq_b"].astype(x.dtype)).reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p, cfg, x, positions):
+    """Training/prefill MLA (non-absorbed form, full causal)."""
+    b, s, _ = x.shape
+    h, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    kva = x @ p["wkv_a"].astype(x.dtype)
+    ckv = rms_norm(kva[..., : cfg.kv_lora], p["kv_norm"])
+    k_rope = rope(kva[..., cfg.kv_lora:][:, :, None, :], positions, cfg.rope_theta)
+    k_nope = (ckv @ p["wk_b"].astype(x.dtype)).reshape(b, s, h, nd)
+    v = (ckv @ p["wv_b"].astype(x.dtype)).reshape(b, s, h, vd)
+    ar = jnp.arange(s)
+    mask = ar[None, :] <= ar[:, None]
+    scale = 1.0 / np.sqrt(nd + rd)
+    scores = (
+        jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+        + jnp.einsum("bqhd,bsxd->bhqs", q_rope, jnp.broadcast_to(k_rope, (b, s, 1, rd)))
+    ) * scale
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(b, s, h * vd)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def init_mla_cache(cfg, batch, length, dtype=None):
+    dt = dtype or cdt(cfg)
+    return {
+        "ckv": jnp.zeros((batch, length, cfg.kv_lora), dt),
+        "krope": jnp.zeros((batch, length, cfg.qk_rope_dim), dt),
+    }
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    """Absorbed MLA decode: scores/values computed in the 512-d latent space —
+    the cache is (kv_lora + rope_dim) per token instead of 2*H*hd."""
+    b = x.shape[0]
+    h, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    posv = jnp.full((1,), pos)
+    q_nope, q_rope = _mla_q(p, cfg, x, posv)            # (B,1,H,nd),(B,1,H,rd)
+    kva = x @ p["wkv_a"].astype(x.dtype)
+    ckv_new = rms_norm(kva[..., : cfg.kv_lora], p["kv_norm"])
+    kr_new = rope(kva[..., cfg.kv_lora:][:, :, None, :], posv, cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos % cache["ckv"].shape[1], 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], kr_new.astype(cache["krope"].dtype), (0, pos % cache["krope"].shape[1], 0))
+    # absorb W_k_b into q: q_tilde (B,H,kv_lora)
+    wkb = p["wk_b"].astype(x.dtype).reshape(cfg.kv_lora, h, nd)
+    q_t = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], wkb)
+    scale = 1.0 / np.sqrt(nd + rd)
+    scores = (
+        jnp.einsum("bhl,bsl->bhs", q_t, ckv)
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], krope)
+    ) * scale
+    cap = ckv.shape[1]
+    valid = (jnp.arange(cap) <= pos) | (pos >= cap)
+    scores = jnp.where(valid[None, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhs,bsl->bhl", probs, ckv)        # latent context
+    wvb = p["wv_b"].astype(x.dtype).reshape(cfg.kv_lora, h, vd)
+    out = jnp.einsum("bhl,lhd->bhd", ctx, wvb).reshape(b, 1, h * vd)
+    return out @ p["wo"].astype(x.dtype), {"ckv": ckv, "krope": krope}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_model=None, d_ff=None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w1": dense_init(k1, (d, f), pdt(cfg)), "w2": dense_init(k2, (f, d), pdt(cfg))}
+    if cfg.mlp_type == "gated":
+        # separate gate/value projections (llama w1/w3): splitting a fused
+        # (D, 2F) tensor along a model-sharded 2F axis would reshard every
+        # layer (the halves live on disjoint device groups)
+        p["w3"] = dense_init(k3, (d, f), pdt(cfg))
+    return p
+
+
+def mlp(p, cfg, x):
+    if cfg.mlp_type == "gated":
+        h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["w1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE — top-k routing with either GShard one-hot dispatch (dense einsums,
+# the faithful TPU classic) or sort/gather dispatch (sub-quadratic; a §Perf
+# hillclimb lever). Shared experts (DeepSeek-V2) run densely for all tokens.
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "w1": dense_init(ks[1], (e, d, f), pdt(cfg)),
+        "w2": dense_init(ks[2], (e, f, d), pdt(cfg)),
+    }
+    if cfg.mlp_type == "gated":
+        p["w3"] = dense_init(ks[4], (e, d, f), pdt(cfg))
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[3], cfg, d_ff=f * cfg.n_shared_experts)
+    return p
+
+
+def _expert_ffn(cfg, p, xe):
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w1"].astype(xe.dtype))
+    if cfg.mlp_type == "gated":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xe, p["w3"].astype(xe.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(xe.dtype))
+
+
+def _route(p, cfg, xf):
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)                          # (T,k)
+    gate = gate / (jnp.sum(gate, axis=-1, keepdims=True) + 1e-9)
+    # aux losses: load-balance (Switch) + router z-loss
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=0)
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e), axis=0)
+    lb = e * jnp.sum(me * frac)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gate, idx, lb + 1e-3 * z
+
+
+def moe(p, cfg, x):
+    """Returns (y, aux_loss). x: (B,S,D)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    gate, idx, aux = _route(p, cfg, xf)
+    cap = max(int(cfg.capacity_factor * t * cfg.top_k / cfg.n_experts), 1)
+    if s == 1:
+        cap = t  # decode: drop-free (worst case: every token -> one expert)
+    if cfg.moe_impl == "sorted":
+        y = _moe_sorted(p, cfg, xf, gate, idx, cap)
+    elif cfg.moe_impl == "grouped":
+        g = math.gcd(cfg.moe_groups, t)
+        cap_g = max(cap // g, 1)
+        y = jax.vmap(
+            lambda xg, gg, ig: _moe_sorted(p, cfg, xg, gg, ig, cap_g)
+        )(
+            xf.reshape(g, t // g, -1),
+            gate.reshape(g, t // g, cfg.top_k),
+            idx.reshape(g, t // g, cfg.top_k),
+        ).reshape(t, -1)
+    else:
+        y = _moe_dense(p, cfg, xf, gate, idx, cap)
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], cfg, xf)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_dense(p, cfg, xf, gate, idx, cap):
+    t, e = xf.shape[0], cfg.n_experts
+    onehot = jax.nn.one_hot(idx, e, dtype=xf.dtype)                  # (T,k,E)
+    pos = jnp.cumsum(onehot.reshape(t * cfg.top_k, e), axis=0).reshape(t, cfg.top_k, e) - onehot
+    keep = onehot * (pos < cap)
+    # dispatch (T,E,C): sum over k of keep * one_hot(position-in-expert)
+    poh = jax.nn.one_hot(pos, cap, dtype=xf.dtype)                   # (T,k,E,C)
+    disp = jnp.einsum("tke,tkec->tec", keep, poh)
+    comb = jnp.einsum("tk,tke,tkec->tec", gate.astype(xf.dtype), keep, poh)
+    xe = jnp.einsum("td,tec->ecd", xf, disp)
+    ye = _expert_ffn(cfg, p, xe)
+    return jnp.einsum("tec,ecd->td", comb, ye)
+
+
+def _moe_sorted(p, cfg, xf, gate, idx, cap):
+    t, e, k = xf.shape[0], cfg.n_experts, cfg.top_k
+    flat_e = idx.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=e)
+    offsets = jnp.cumsum(counts) - counts                            # (E,)
+    slots = offsets[:, None] + jnp.arange(cap)[None, :]              # (E,C)
+    valid = jnp.arange(cap)[None, :] < jnp.minimum(counts, cap)[:, None]
+    src = order[jnp.clip(slots, 0, t * k - 1)]                       # (E,C)
+    tok = src // k
+    xe = xf[tok] * valid[..., None].astype(xf.dtype)                 # (E,C,D)
+    ye = _expert_ffn(cfg, p, xe)
+    w = gate.reshape(t * k)[src] * valid                             # (E,C)
+    y = jnp.zeros_like(xf)
+    return y.at[tok.reshape(-1)].add(
+        (ye * w[..., None].astype(xf.dtype)).reshape(e * cap, -1)
+    )

@@ -1,0 +1,386 @@
+"""Model assembly for all assigned architecture families.
+
+Functional API (cfg-dispatched, jit/vmap friendly):
+    init_params(cfg, key)                        -> params pytree
+    loss_fn(cfg, params, batch)                  -> (loss, metrics)
+    prefill(cfg, params, batch)                  -> (last_logits, cache)
+    decode_step(cfg, params, token, cache, pos)  -> (logits, cache)
+    init_cache(cfg, batch, seq_len)              -> cache pytree
+
+Layers are stacked (vmapped init) and applied with `lax.scan`, so HLO size is
+depth-independent (a 95-layer DeepSeek compiles the same program size as a
+24-layer Danube). Train blocks are rematerialized (cfg-controlled).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ArchConfig
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Per-family layer init
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(cfg):
+    def go(key):
+        k1, k2 = jax.random.split(key)
+        attn = L.init_mla(k1, cfg) if cfg.kv_lora else L.init_attention(k1, cfg)
+        ffn = L.init_moe(k2, cfg) if cfg.n_experts else L.init_mlp(k2, cfg)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "attn": attn,
+            "ln2": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "ffn": ffn,
+        }
+    return go
+
+
+def _init_ssm_layer(cfg):
+    def go(key):
+        return {
+            "ln": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "mamba": S.init_mamba1(key, cfg) if cfg.ssm_variant == "mamba1" else S.init_mamba2(key, cfg),
+        }
+    return go
+
+
+def _init_encdec_layers(cfg, key):
+    ke, kd = jax.random.split(key)
+
+    def enc(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "attn": L.init_attention(k1, cfg),
+            "ln2": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "mlp": L.init_mlp(k2, cfg),
+        }
+
+    def dec(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "self_attn": L.init_attention(k1, cfg),
+            "ln2": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "cross_attn": L.init_attention(k2, cfg),
+            "ln3": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "mlp": L.init_mlp(k3, cfg),
+        }
+
+    return (
+        _stack_init(enc, ke, cfg.enc_layers),
+        _stack_init(dec, kd, cfg.n_layers),
+    )
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    kemb, klay, khead, kextra = jax.random.split(key, 4)
+    params = {
+        "embed": L.dense_init(kemb, (cfg.vocab_pad, cfg.d_model), L.pdt(cfg), scale=0.02),
+        "ln_f": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+        "head": L.dense_init(khead, (cfg.d_model, cfg.vocab_pad), L.pdt(cfg)),
+    }
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["layers"] = _stack_init(_init_dense_layer(cfg), klay, cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["layers"] = _stack_init(_init_ssm_layer(cfg), klay, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        params["layers"] = _stack_init(_init_ssm_layer(cfg), klay, cfg.n_layers)
+        ka, kb = jax.random.split(kextra)
+        params["shared_attn"] = {
+            "ln1": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "attn": L.init_attention(ka, cfg),
+            "ln2": jnp.ones((cfg.d_model,), L.pdt(cfg)),
+            "mlp": L.init_mlp(kb, cfg),
+        }
+    elif cfg.family == "audio":
+        params["enc_layers"], params["layers"] = _init_encdec_layers(cfg, klay)
+        params["ln_enc"] = jnp.ones((cfg.d_model,), L.pdt(cfg))
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (full sequence)
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg, x, lp, positions, window):
+    h = L.rms_norm(x, lp["ln1"])
+    if cfg.kv_lora:
+        x = x + L.mla_attention(lp["attn"], cfg, h, positions)
+    else:
+        x = x + L.attention(lp["attn"], cfg, h, positions, window=window)
+    h = L.rms_norm(x, lp["ln2"])
+    if cfg.n_experts:
+        y, aux = L.moe(lp["ffn"], cfg, h)
+        return x + y, aux
+    return x + L.mlp(lp["ffn"], cfg, h), jnp.float32(0.0)
+
+
+def _run_layers(cfg, params, x, positions):
+    """Scanned layer stack -> (x, aux_loss)."""
+    window = cfg.window
+
+    if cfg.family == "hybrid":
+        return _run_hybrid(cfg, params, x, positions)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def blk(carry, lp):
+            y, aux = _dense_block(cfg, carry, lp, positions, window)
+            return y, aux
+    elif cfg.family == "ssm":
+        def blk(carry, lp):
+            y, _ = (S.mamba1 if cfg.ssm_variant == "mamba1" else S.mamba2)(
+                lp["mamba"], cfg, L.rms_norm(carry, lp["ln"])
+            )
+            return carry + y, jnp.float32(0.0)
+    else:
+        raise ValueError(cfg.family)
+
+    f = jax.checkpoint(blk) if _remat(cfg) else blk
+    x, aux = jax.lax.scan(f, x, params["layers"])
+    return x, jnp.sum(aux)
+
+
+def _remat(cfg):
+    return cfg.remat
+
+
+def _shared_attn_apply(cfg, sp, x, positions):
+    h = L.rms_norm(x, sp["ln1"])
+    x = x + L.attention(sp["attn"], cfg, h, positions, window=cfg.window)
+    h = L.rms_norm(x, sp["ln2"])
+    return x + L.mlp(sp["mlp"], cfg, h)
+
+
+def _run_hybrid(cfg, params, x, positions):
+    """zamba2: scan groups of `shared_attn_every` mamba2 layers, applying the
+    single shared attention block (same weights) after each group."""
+    k = cfg.shared_attn_every
+    ng = cfg.n_layers // k
+    grouped = jax.tree.map(lambda a: a.reshape((ng, k) + a.shape[1:]), params["layers"])
+    sp = params["shared_attn"]
+
+    def inner(carry, lp):
+        y, _ = S.mamba2(lp["mamba"], cfg, L.rms_norm(carry, lp["ln"]))
+        return carry + y, None
+
+    def group(carry, glp):
+        y, _ = jax.lax.scan(inner, carry, glp)
+        y = _shared_attn_apply(cfg, sp, y, positions)
+        return y, jnp.float32(0.0)
+
+    f = jax.checkpoint(group) if _remat(cfg) else group
+    x, aux = jax.lax.scan(f, x, grouped)
+    return x, jnp.sum(aux)
+
+
+def _run_encoder(cfg, params, frames):
+    positions = jnp.arange(frames.shape[1])
+
+    def blk(x, lp):
+        h = L.rms_norm(x, lp["ln1"])
+        x = x + L.attention(lp["attn"], cfg, h, positions, bidir=True)
+        h = L.rms_norm(x, lp["ln2"])
+        return x + L.mlp(lp["mlp"], cfg, h), None
+
+    f = jax.checkpoint(blk) if _remat(cfg) else blk
+    x, _ = jax.lax.scan(f, frames, params["enc_layers"])
+    return L.rms_norm(x, params["ln_enc"])
+
+
+def _run_decoder(cfg, params, x, enc_out, positions):
+    def blk(carry, lp):
+        h = L.rms_norm(carry, lp["ln1"])
+        carry = carry + L.attention(lp["self_attn"], cfg, h, positions)
+        h = L.rms_norm(carry, lp["ln2"])
+        enc_kv = L.encoder_kv(lp["cross_attn"], cfg, enc_out)
+        carry = carry + L.cross_attention(lp["cross_attn"], cfg, h, enc_kv)
+        h = L.rms_norm(carry, lp["ln3"])
+        return carry + L.mlp(lp["mlp"], cfg, h), None
+
+    f = jax.checkpoint(blk) if _remat(cfg) else blk
+    x, _ = jax.lax.scan(f, x, params["layers"])
+    return x
+
+
+def _embed(cfg, params, tokens):
+    return params["embed"].astype(L.cdt(cfg))[tokens]
+
+
+def forward(cfg: ArchConfig, params, batch):
+    """Full-sequence logits. Returns (logits over positions-with-labels, aux)."""
+    if cfg.family == "audio":
+        enc_out = _run_encoder(cfg, params, batch["frames"].astype(L.cdt(cfg)))
+        x = _embed(cfg, params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+        x = _run_decoder(cfg, params, x, enc_out, positions)
+        aux = jnp.float32(0.0)
+    elif cfg.family == "vlm":
+        tx = _embed(cfg, params, batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(L.cdt(cfg)), tx], axis=1)
+        positions = jnp.arange(x.shape[1])
+        x, aux = _run_layers(cfg, params, x, positions)
+        x = x[:, batch["patches"].shape[1]:]          # loss on text positions
+    else:
+        x = _embed(cfg, params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+        x, aux = _run_layers(cfg, params, x, positions)
+    x = L.rms_norm(x, params["ln_f"])
+    logits = (x @ params["head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll) + 0.01 * aux
+    return loss, {"task_loss": jnp.mean(nll), "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + one-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, length: int, enc_len: int = 0):
+    dt = L.cdt(cfg)
+    n = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.kv_lora:
+            one = L.init_mla_cache(cfg, batch, length, dt)
+        else:
+            one = L.init_kv_cache(cfg, batch, length, dt)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+    if cfg.family == "ssm":
+        one = (S.init_mamba1_state if cfg.ssm_variant == "mamba1" else S.init_mamba2_state)(cfg, batch, dt)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+    if cfg.family == "hybrid":
+        ng = cfg.n_layers // cfg.shared_attn_every
+        m = S.init_mamba2_state(cfg, batch, dt)
+        kvc = L.init_kv_cache(cfg, batch, length, dt)
+        return {
+            "mamba": jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), m),
+            "attn": jax.tree.map(lambda a: jnp.broadcast_to(a, (ng,) + a.shape), kvc),
+        }
+    if cfg.family == "audio":
+        kvc = L.init_kv_cache(cfg, batch, length, dt)
+        cc = L.init_cross_cache(cfg, batch, enc_len or length, dt)
+        return {
+            "self": jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), kvc),
+            "cross": jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), cc),
+        }
+    raise ValueError(cfg.family)
+
+
+def _decode_layers(cfg, params, x, cache, pos):
+    if cfg.family in ("dense", "moe", "vlm"):
+        def blk(carry, args):
+            lp, c = args
+            h = L.rms_norm(carry, lp["ln1"])
+            if cfg.kv_lora:
+                a, c2 = L.mla_decode(lp["attn"], cfg, h, c, pos)
+            else:
+                a, c2 = L.attention_decode(lp["attn"], cfg, h, c, pos)
+            carry = carry + a
+            h = L.rms_norm(carry, lp["ln2"])
+            if cfg.n_experts:
+                y, _ = L.moe(lp["ffn"], cfg, h)
+            else:
+                y = L.mlp(lp["ffn"], cfg, h)
+            return carry + y, c2
+        return jax.lax.scan(blk, x, (params["layers"], cache))
+
+    if cfg.family == "ssm":
+        step = S.mamba1_decode if cfg.ssm_variant == "mamba1" else S.mamba2_decode
+        def blk(carry, args):
+            lp, c = args
+            y, c2 = step(lp["mamba"], cfg, L.rms_norm(carry, lp["ln"]), c)
+            return carry + y, c2
+        return jax.lax.scan(blk, x, (params["layers"], cache))
+
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        ng = cfg.n_layers // k
+        grouped = jax.tree.map(lambda a: a.reshape((ng, k) + a.shape[1:]), params["layers"])
+        mcache = jax.tree.map(lambda a: a.reshape((ng, k) + a.shape[1:]), cache["mamba"])
+        sp = params["shared_attn"]
+
+        def inner(carry, args):
+            lp, c = args
+            y, c2 = S.mamba2_decode(lp["mamba"], cfg, L.rms_norm(carry, lp["ln"]), c)
+            return carry + y, c2
+
+        def group(carry, args):
+            glp, gmc, ac = args
+            y, mc2 = jax.lax.scan(inner, carry, (glp, gmc))
+            h = L.rms_norm(y, sp["ln1"])
+            a, ac2 = L.attention_decode(sp["attn"], cfg, h, ac, pos)
+            y = y + a
+            h = L.rms_norm(y, sp["ln2"])
+            y = y + L.mlp(sp["mlp"], cfg, h)
+            return y, (mc2, ac2)
+
+        x, (mc, ac) = jax.lax.scan(group, x, (grouped, mcache, cache["attn"]))
+        mc = jax.tree.map(lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), mc)
+        return x, {"mamba": mc, "attn": ac}
+
+    if cfg.family == "audio":
+        def blk(carry, args):
+            lp, c, cc = args
+            h = L.rms_norm(carry, lp["ln1"])
+            a, c2 = L.attention_decode(lp["self_attn"], cfg, h, c, pos)
+            carry = carry + a
+            h = L.rms_norm(carry, lp["ln2"])
+            carry = carry + L.cross_attention(lp["cross_attn"], cfg, h, (cc["ck"], cc["cv"]))
+            h = L.rms_norm(carry, lp["ln3"])
+            return carry + L.mlp(lp["mlp"], cfg, h), c2
+        x, c2 = jax.lax.scan(blk, x, (params["layers"], cache["self"], cache["cross"]))
+        return x, {"self": c2, "cross": cache["cross"]}
+
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, pos):
+    """One new token against a cache. token: (B,1) int32; pos: scalar."""
+    x = _embed(cfg, params, token)
+    x, cache = _decode_layers(cfg, params, x, cache, pos)
+    x = L.rms_norm(x, params["ln_f"])
+    logits = (x @ params["head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, cache
+
+
+def build_cross_cache(cfg: ArchConfig, params, frames):
+    """Audio serving: run the encoder once and cache per-decoder-layer
+    cross-attention K/V."""
+    enc_out = _run_encoder(cfg, params, frames.astype(L.cdt(cfg)))
+
+    def per_layer(_, lp):
+        k, v = L.encoder_kv(lp["cross_attn"], cfg, enc_out)
+        return None, {"ck": k, "cv": v}
+
+    _, cross = jax.lax.scan(per_layer, None, params["layers"])
+    return cross
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Forward over a prompt; returns last-position logits (inference-prefill).
+
+    Cache population for serving is done by stepping `decode_step` over the
+    prompt (see examples/serve_personalized.py); this function is the bulk
+    prefill compute that the prefill_32k dry-run shape exercises.
+    """
+    logits, _ = forward(cfg, params, batch)
+    return logits[:, -1]

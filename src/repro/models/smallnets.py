@@ -1,0 +1,81 @@
+"""The paper's own experiment models: 2-layer MLP (MNIST/FMNIST) and a
+small VGG (CIFAR-10/100, SVHN), as pure-JAX functional nets."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense(key, fan_in, fan_out):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (fan_in, fan_out)) * np.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((fan_out,))}
+
+
+def _conv(key, kh, kw, cin, cout):
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * np.sqrt(2.0 / (kh * kw * cin))
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+# --- MLP (paper: "two-layer MLP for MNIST and FMNIST") ---------------------
+
+def init_mlp(key, input_dim=784, hidden=200, classes=10):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": _dense(k1, input_dim, hidden), "fc2": _dense(k2, hidden, classes)}
+
+
+def apply_mlp(params, x):
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# --- VGG-small (paper: "VGG architectures for the other datasets") ---------
+
+def init_vgg(key, input_hw=32, channels=3, classes=10, widths=(32, 64, 128)):
+    ks = jax.random.split(key, len(widths) * 2 + 2)
+    params = {"convs": []}
+    cin = channels
+    i = 0
+    for w in widths:
+        params["convs"].append(
+            {"a": _conv(ks[i], 3, 3, cin, w), "b": _conv(ks[i + 1], 3, 3, w, w)}
+        )
+        cin = w
+        i += 2
+    feat_hw = input_hw // (2 ** len(widths))
+    feat = feat_hw * feat_hw * widths[-1]
+    params["fc1"] = _dense(ks[i], feat, 256)
+    params["fc2"] = _dense(ks[i + 1], 256, classes)
+    return params
+
+
+def _conv2d(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + p["b"]
+
+
+def apply_vgg(params, x):
+    for blk in params["convs"]:
+        x = jax.nn.relu(_conv2d(x, blk["a"]))
+        x = jax.nn.relu(_conv2d(x, blk["b"]))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,220 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+TPU adaptation: the CUDA selective-scan kernel becomes a *chunked* scan —
+`lax.scan` over sequence chunks with a `lax.associative_scan` inside each
+chunk. This bounds live state-expansion memory to (B, chunk, d, N) per step
+instead of (B, S, d, N) for the whole sequence, matching how VMEM-sized
+tiles would stream on real hardware. Decode is the O(1) single-step
+recurrence on a carried (B, d, N) state + a depthwise-conv ring buffer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, pdt, rms_norm
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along S. x: (B,S,C); w: (C,K); b: (C,)."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[None, None, :, i] for i in range(k))
+    return out + b
+
+
+def _conv_step(state, xt, w, b):
+    """One-token conv. state: (B,K-1,C) past inputs; xt: (B,C)."""
+    full = jnp.concatenate([state, xt[:, None, :]], axis=1)     # (B,K,C)
+    out = jnp.einsum("bkc,ck->bc", full, w) + b
+    return full[:, 1:], out
+
+
+def _chunked_ssm_scan(decay, inp, c_coef, h0, chunk):
+    """h_t = decay_t * h_{t-1} + inp_t ;  y_t = <h_t, C_t> over the state axis.
+
+    decay/inp: (B, S, ..., N); c_coef: (B, S, N); h0: (B, ..., N).
+    Returns (y: (B, S, ...), h_final). Never materializes (B,S,...,N) at once.
+    The scan itself runs in float32 (recurrent error accumulates in bf16).
+    """
+    out_dtype = inp.dtype
+    decay = decay.astype(jnp.float32)
+    inp = inp.astype(jnp.float32)
+    c_coef = c_coef.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+    b, s = decay.shape[0], decay.shape[1]
+    chunk = math.gcd(chunk, s)  # short/odd sequences: largest common chunk
+    nc = s // chunk
+    resh = lambda t: jnp.moveaxis(t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+    dc, ic, cc = resh(decay), resh(inp), resh(c_coef)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def step(h, args):
+        d, i, c = args                                  # (B, chunk, ..., N)
+        aprod, bacc = jax.lax.associative_scan(combine, (d, i), axis=1)
+        hs = aprod * h[:, None] + bacc                  # (B, chunk, ..., N)
+        c = c.reshape(c.shape[:2] + (1,) * (hs.ndim - 3) + c.shape[-1:])
+        y = jnp.sum(hs * c, axis=-1)                    # (B, chunk, ...)
+        return hs[:, -1], y
+
+    h_final, ys = jax.lax.scan(step, h0, (dc, ic, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape((b, s) + ys.shape[3:])
+    return y.astype(out_dtype), h_final.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg):
+    d, di, n, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), pdt(cfg)),
+        "conv_w": dense_init(ks[1], (di, cfg.d_conv), pdt(cfg), scale=0.5),
+        "conv_b": jnp.zeros((di,), pdt(cfg)),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n), pdt(cfg)),
+        "dt_proj": dense_init(ks[3], (dtr, di), pdt(cfg)),
+        "dt_bias": jnp.full((di,), -4.6, pdt(cfg)),  # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ).astype(pdt(cfg)),
+        "D": jnp.ones((di,), pdt(cfg)),
+        "out_proj": dense_init(ks[4], (di, d), pdt(cfg)),
+    }
+
+
+def _mamba1_coeffs(p, cfg, x_act):
+    n, dtr = cfg.ssm_state, cfg.dt_rank
+    proj = x_act @ p["x_proj"].astype(x_act.dtype)
+    dt_in, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(x_act.dtype) + p["dt_bias"].astype(x_act.dtype))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (di, N)
+    return dt, a, b_ssm, c_ssm
+
+
+def mamba1(p, cfg, x, state=None):
+    """Full-sequence Mamba-1. x: (B,S,D) -> (B,S,D). state optional (B,di,N)."""
+    b, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_act = jax.nn.silu(_causal_conv(x_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype)))
+    dt, a, b_ssm, c_ssm = _mamba1_coeffs(p, cfg, x_act)
+    decay = jnp.exp(dt[..., None] * a)                              # (B,S,di,N)
+    inp = (dt * x_act)[..., None] * b_ssm[:, :, None, :]
+    h0 = jnp.zeros((b, di, n), x.dtype) if state is None else state
+    y, h = _chunked_ssm_scan(decay, inp, c_ssm, h0, cfg.ssm_chunk)
+    y = y + p["D"].astype(x.dtype) * x_act
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(x.dtype)
+    return out, h
+
+
+def init_mamba1_state(cfg, batch, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba1_decode(p, cfg, x, state):
+    """One-token recurrence. x: (B,1,D)."""
+    xt = x[:, 0]
+    xz = xt @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    conv, xc = _conv_step(state["conv"], x_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    x_act = jax.nn.silu(xc)[:, None, :]                             # (B,1,di)
+    dt, a, b_ssm, c_ssm = _mamba1_coeffs(p, cfg, x_act)
+    decay = jnp.exp(dt[..., None] * a)[:, 0]                        # (B,di,N)
+    inp = ((dt * x_act)[..., None] * b_ssm[:, :, None, :])[:, 0]
+    h = (decay * state["h"].astype(jnp.float32) + inp).astype(state["h"].dtype)
+    y = jnp.sum(h.astype(x.dtype) * c_ssm[:, 0, None, :], axis=-1) + p["D"].astype(x.dtype) * x_act[:, 0]
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(x.dtype)
+    return out.astype(x.dtype)[:, None, :], {"h": h, "conv": conv}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD: scalar decay per head, (hd x N) state per head)
+# ---------------------------------------------------------------------------
+
+def _m2_heads(cfg):
+    assert cfg.d_inner % cfg.ssm_head_dim == 0
+    return cfg.d_inner // cfg.ssm_head_dim
+
+
+def init_mamba2(key, cfg):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h2 = _m2_heads(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h2), pdt(cfg)),
+        "conv_w": dense_init(ks[1], (di, cfg.d_conv), pdt(cfg), scale=0.5),
+        "conv_b": jnp.zeros((di,), pdt(cfg)),
+        "A_log": jnp.zeros((h2,), pdt(cfg)),
+        "dt_bias": jnp.full((h2,), -4.6, pdt(cfg)),
+        "D": jnp.ones((h2,), pdt(cfg)),
+        "norm_w": jnp.ones((di,), pdt(cfg)),
+        "out_proj": dense_init(ks[2], (di, d), pdt(cfg)),
+    }
+
+
+def _m2_split(p, cfg, x):
+    di, n = cfg.d_inner, cfg.ssm_state
+    h2 = _m2_heads(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    return jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+
+def mamba2(p, cfg, x, state=None):
+    b, s, _ = x.shape
+    di, n, hd2 = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h2 = _m2_heads(cfg)
+    z, x_in, b_ssm, c_ssm, dt_in = _m2_split(p, cfg, x)
+    x_act = jax.nn.silu(_causal_conv(x_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype)))
+    dt = jax.nn.softplus(dt_in + p["dt_bias"].astype(x.dtype))      # (B,S,H2)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (H2,)
+    xh = x_act.reshape(b, s, h2, hd2)
+    decay = jnp.exp(dt * a)[..., None, None]                        # (B,S,H2,1,1)
+    inp = (dt[..., None] * xh)[..., None] * b_ssm[:, :, None, None, :]
+    h0 = jnp.zeros((b, h2, hd2, n), x.dtype) if state is None else state
+    decay = jnp.broadcast_to(decay, inp.shape)
+    y, h = _chunked_ssm_scan(decay, inp, c_ssm, h0, cfg.ssm_chunk)  # (B,S,H2,hd2)
+    y = y + p["D"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"].astype(x.dtype), h
+
+
+def init_mamba2_state(cfg, batch, dtype):
+    h2 = _m2_heads(cfg)
+    return {
+        "h": jnp.zeros((batch, h2, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba2_decode(p, cfg, x, state):
+    b = x.shape[0]
+    di, n, hd2 = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h2 = _m2_heads(cfg)
+    z, x_in, b_ssm, c_ssm, dt_in = _m2_split(p, cfg, x[:, 0])
+    conv, xc = _conv_step(state["conv"], x_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    x_act = jax.nn.silu(xc)
+    dt = jax.nn.softplus(dt_in + p["dt_bias"].astype(x.dtype))      # (B,H2)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x_act.reshape(b, h2, hd2)
+    decay = jnp.exp(dt * a)[..., None, None]
+    inp = (dt[..., None] * xh)[..., None] * b_ssm[:, None, None, :]
+    h = (decay * state["h"].astype(jnp.float32) + inp).astype(state["h"].dtype)
+    y = jnp.sum(h.astype(x.dtype) * c_ssm[:, None, None, :], axis=-1) + p["D"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(b, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out.astype(x.dtype)[:, None, :], {"h": h, "conv": conv}

@@ -1,0 +1,1 @@
+from repro.optim.sgd import sgd_init, sgd_update, adam_init, adam_update

@@ -1,0 +1,38 @@
+"""Pure-pytree optimizers used by client updates and the launchers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return ()
+    return (jax.tree.map(jnp.zeros_like, params),)
+
+
+def sgd_update(params, grads, state, lr: float, momentum: float = 0.0):
+    if momentum == 0.0:
+        return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads), ()
+    (m,) = state
+    m = jax.tree.map(lambda mi, g: momentum * mi + g.astype(mi.dtype), m, grads)
+    return jax.tree.map(lambda p, mi: p - lr * mi, params, m), (m,)
+
+
+def adam_init(params):
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return (z, jax.tree.map(jnp.copy, z), jnp.int32(0))
+
+
+def adam_update(params, grads, state, lr: float, b1=0.9, b2=0.999, eps=1e-8):
+    m, v, t = state
+    t = t + 1
+    m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32), m, grads)
+    v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)), v, grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    params = jax.tree.map(
+        lambda p, mi, vi: p - (lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)).astype(p.dtype),
+        params, m, v,
+    )
+    return params, (m, v, t)

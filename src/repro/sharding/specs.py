@@ -1,0 +1,173 @@
+"""Partition-spec rules for every architecture family on the production mesh.
+
+Megatron-style tensor parallelism over the "model" axis (column-parallel
+up-projections, row-parallel down-projections, vocab-sharded embeddings),
+batch over "data" (and the federation/client axis over "pod" on the
+multi-pod mesh). Sequence dimensions of decode caches are model-sharded
+when heads aren't divisible. `fsdp=True` additionally shards parameter
+rows over "data" (a §Perf lever).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+STACK_KEYS = ("layers", "enc_layers")
+
+
+def _names(path):
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(k.key)
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            out.append(str(k.idx))
+    return out
+
+
+def _rule(names, shape, msize):
+    """PartitionSpec for an UNSTACKED leaf (layer axis handled by caller)."""
+    last = names[-1]
+    div = lambda d: d % msize == 0
+    rep = P(*([None] * len(shape)))
+
+    if last == "embed":
+        return P("model", None) if div(shape[0]) else rep
+    if last == "head":
+        return P(None, "model") if div(shape[1]) else rep
+    if last in ("wq", "wk", "wv", "wq_b", "wk_b", "wv_b", "w1", "w3", "in_proj", "dt_proj"):
+        if len(shape) == 3:  # MoE experts (E, D, F)
+            if div(shape[0]):
+                return P("model", None, None)
+            if div(shape[2]):
+                return P(None, None, "model")
+            return rep
+        return P(None, "model") if div(shape[-1]) else rep
+    if last in ("wo", "w2", "out_proj", "x_proj", "conv_w", "A_log"):
+        if len(shape) == 3:  # MoE experts (E, F, D)
+            if div(shape[0]):
+                return P("model", None, None)
+            if div(shape[1]):
+                return P(None, "model", None)
+            return rep
+        if len(shape) == 1:  # mamba2 scalar-per-head A_log
+            return P("model") if div(shape[0]) else rep
+        return P("model", None) if div(shape[0]) else rep
+    if last in ("conv_b", "dt_bias", "D", "norm_w") and len(shape) == 1:
+        return P("model") if div(shape[0]) else rep
+    # router, norms, small projections (wq_a, wkv_a), biases: replicated
+    return rep
+
+
+def param_pspecs(cfg: ArchConfig, template, mesh) -> object:
+    """Pytree of PartitionSpec matching a (stacked) param template."""
+    msize = mesh.shape["model"]
+
+    def go(path, leaf):
+        names = _names(path)
+        stacked = any(n in STACK_KEYS for n in names)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = _rule(names, shape, msize)
+        return P(*((None,) + tuple(spec))) if stacked else spec
+
+    return jax.tree_util.tree_map_with_path(go, template)
+
+
+def param_major_axes(cfg: ArchConfig, template, mesh) -> object:
+    """Index of the model-sharded axis per leaf (for sharding-aware
+    tree sketching), or -1 when replicated (-1, not None: None leaves
+    vanish under tree flattening)."""
+    specs = param_pspecs(cfg, template, mesh)
+
+    def major(spec):
+        for i, s in enumerate(spec):
+            if s == "model" or (isinstance(s, tuple) and "model" in s):
+                return i
+        return -1
+
+    return jax.tree.map(major, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_axes(mesh, client_axis: bool):
+    """Axes available for batch sharding: 'data', plus 'pod' when serving on
+    the multi-pod mesh (training multi-pod uses pod as the client axis)."""
+    if client_axis or "pod" not in mesh.shape:
+        return ("data",)
+    return ("pod", "data")
+
+
+def _batch_dim_spec(b: int, mesh, axes):
+    """Largest prefix of `axes` whose product divides the batch dim."""
+    got = []
+    prod = 1
+    for a in axes:
+        prod *= mesh.shape[a]
+        if b % prod == 0:
+            got.append(a)
+        else:
+            break
+    if not got:
+        return None
+    return tuple(got) if len(got) > 1 else got[0]
+
+
+def batch_pspecs(cfg: ArchConfig, template, mesh, client_axis: bool = False):
+    """Batch sharding: leading batch dim over 'data' (x 'pod' when serving
+    multi-pod); client_axis=True adds a leading 'pod' federation axis."""
+    axes = _dp_axes(mesh, client_axis)
+
+    def go(leaf):
+        shape = leaf.shape[1:] if client_axis else leaf.shape
+        spec = (_batch_dim_spec(shape[0], mesh, axes),) if shape else ()
+        spec = spec + (None,) * (len(shape) - 1)
+        return P(*((("pod",) if client_axis else ()) + spec))
+
+    return jax.tree.map(go, template)
+
+
+def cache_pspecs(cfg: ArchConfig, template, mesh, client_axis: bool = False):
+    """Decode-cache sharding. KV caches shard kv-heads over 'model' when
+    divisible, else the sequence/capacity dim; SSM states shard d_inner
+    (or heads) over 'model'. Batch over 'data' when divisible."""
+    msize = mesh.shape["model"]
+    axes = _dp_axes(mesh, client_axis)
+
+    def go(path, leaf):
+        names = _names(path)
+        last = names[-1]
+        shape = leaf.shape[1:] if client_axis else leaf.shape
+        spec = [None] * len(shape)
+        # all caches here are layer-stacked: axis0 layers, axis1 batch
+        if len(shape) >= 2:
+            spec[1] = _batch_dim_spec(shape[1], mesh, axes)
+        if last in ("k", "v", "ck", "cv"):          # (L,B,cap,kv,hd)
+            if shape[3] % msize == 0:
+                spec[3] = "model"
+            elif shape[2] % msize == 0:
+                spec[2] = "model"
+        elif last in ("ckv", "krope"):               # (L,B,S,lat)
+            if shape[2] % msize == 0:
+                spec[2] = "model"
+        elif last == "h":                            # (L,B,di,N)/(L,B,H2,hd,N)
+            if shape[2] % msize == 0:
+                spec[2] = "model"
+        elif last == "conv":                         # (L,B,K-1,di)
+            if shape[3] % msize == 0:
+                spec[3] = "model"
+        return P(*((("pod",) if client_axis else ()) + tuple(spec)))
+
+    return jax.tree_util.tree_map_with_path(go, template)
+
+
+def to_named(mesh, pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the host CPU with ONE device (the 512-device forcing is
+# strictly confined to the dry-run launcher, per the brief).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,91 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes, plus mathematical properties of the FHT."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fht import fht_pallas
+from repro.kernels.onebit import pack_pallas, unpack_pallas, vote_pallas
+
+
+@pytest.mark.parametrize("n", [2, 4, 16, 64, 128, 512, 2048, 16384])
+@pytest.mark.parametrize("rows", [1, 3, 8])
+def test_fht_pallas_matches_ref(n, rows):
+    x = jax.random.normal(jax.random.key(n + rows), (rows, n))
+    got = fht_pallas(x, interpret=True)
+    want = ref.fht_ref(x)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fht_pallas_dtypes(dtype):
+    x = jax.random.normal(jax.random.key(0), (4, 256)).astype(dtype)
+    got = fht_pallas(x, interpret=True).astype(jnp.float32)
+    want = ref.fht_ref(x.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_fht_ref_equals_dense_hadamard():
+    for n in (2, 8, 32, 128):
+        x = jax.random.normal(jax.random.key(n), (3, n))
+        h = ref.hadamard_matrix(n)
+        np.testing.assert_allclose(ref.fht_ref(x), x @ h.T, rtol=1e-5, atol=1e-5)
+
+
+def test_fht_is_involution_and_orthonormal():
+    x = jax.random.normal(jax.random.key(1), (2, 1024))
+    y = ref.fht_ref(x)
+    np.testing.assert_allclose(ref.fht_ref(y), x, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        jnp.sum(y * y, -1), jnp.sum(x * x, -1), rtol=1e-5
+    )  # Parseval
+
+
+def test_ops_fht_large_recursion():
+    """Lengths beyond the single-tile kernel limit use the Kronecker split."""
+    x = jax.random.normal(jax.random.key(2), (1, 2 ** 16))
+    got = ops.fht(x, impl="pallas")  # interpret on CPU
+    want = ref.fht_ref(x)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("rows,words", [(8, 512), (16, 1024)])
+def test_pack_unpack_pallas(rows, words):
+    z = jnp.sign(jax.random.normal(jax.random.key(3), (rows, words * 32)))
+    z = jnp.where(z == 0, 1.0, z)
+    packed = pack_pallas(z, interpret=True)
+    np.testing.assert_array_equal(packed, ref.pack_ref(z))
+    unpacked = unpack_pallas(packed, interpret=True)
+    np.testing.assert_allclose(unpacked, z)
+
+
+def test_vote_pallas_matches_ref():
+    k, words = 5, 256
+    z = jnp.sign(jax.random.normal(jax.random.key(4), (k, words * 32)))
+    z = jnp.where(z == 0, 1.0, z)
+    packed = ref.pack_ref(z)
+    p = jnp.array([0.3, 0.25, 0.2, 0.15, 0.1])
+    got = vote_pallas(packed, p, interpret=True)
+    np.testing.assert_array_equal(got, ref.vote_ref(packed, p))
+
+
+def test_vote_equals_sign_of_weighted_sum():
+    k, m = 7, 320
+    z = jnp.sign(jax.random.normal(jax.random.key(5), (k, m)))
+    z = jnp.where(z == 0, 1.0, z)
+    p = jax.nn.softmax(jax.random.normal(jax.random.key(6), (k,)))
+    v_packed = ref.vote_ref(ref.pack_ref(z), p)
+    v = ref.unpack_ref(v_packed)
+    s = jnp.einsum("k,km->m", p, z)
+    expect = jnp.where(s >= 0, 1.0, -1.0)
+    np.testing.assert_allclose(v, expect)
+
+
+def test_pack_roundtrip_random_floats():
+    x = jax.random.normal(jax.random.key(7), (4, 320))
+    w = ops.pack_signs(x)
+    back = ops.unpack_signs(w)
+    np.testing.assert_allclose(back, jnp.where(x >= 0, 1.0, -1.0))

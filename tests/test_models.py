@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests (REQUIRED per brief: reduced variant of the
+same family, one forward/train step on CPU, output shapes + no NaNs) plus
+decode-vs-forward consistency checks for every cache mechanism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import io, layers as L, lm
+from repro.models.config import ArchConfig
+
+SEQ, BATCH = 64, 2
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_arch_smoke_train_step(arch):
+    cfg = configs.get(arch).reduced()
+    params = lm.init_params(cfg, jax.random.key(0))
+    batch = io.make_batch(cfg, jax.random.key(1), BATCH, SEQ)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(cfg, p, batch), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    logits, _ = lm.forward(cfg, params, batch)
+    expect_s = SEQ - (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (BATCH, expect_s, cfg.vocab_pad)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN logits"
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert np.isfinite(np.asarray(g)).all(), f"{arch}: NaN grad at {path}"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_arch_smoke_serve_step(arch):
+    cfg = configs.get(arch).reduced()
+    params = lm.init_params(cfg, jax.random.key(0))
+    cache = lm.init_cache(cfg, BATCH, SEQ, enc_len=SEQ)
+    tok = io.make_decode_token(cfg, jax.random.key(2), BATCH)
+    logits, cache2 = lm.decode_step(cfg, params, tok, cache, jnp.int32(3))
+    assert logits.shape == (BATCH, 1, cfg.vocab_pad)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+def _decode_replay(cfg, params, tokens, cache):
+    """Feed tokens one at a time through decode_step, stacking logits."""
+    outs = []
+    for t in range(tokens.shape[1]):
+        logits, cache = lm.decode_step(
+            cfg, params, tokens[:, t : t + 1], cache, jnp.int32(t)
+        )
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1), cache
+
+
+@pytest.mark.parametrize("arch", [
+    "granite-8b",              # GQA + RoPE path
+    "h2o-danube-3-4b",         # SWA ring-cache path
+    "falcon-mamba-7b",         # mamba1 state path
+    "zamba2-2.7b",             # hybrid mamba2 + shared-attn path
+    "deepseek-v2-236b",        # MLA absorbed-decode path
+])
+def test_decode_matches_forward(arch):
+    """Sequential one-token decode must reproduce the full causal forward —
+    validates every cache/state mechanism end to end."""
+    cfg = configs.get(arch).reduced()
+    if cfg.n_experts:
+        # capacity dropping is data-dependent; make it non-binding so the
+        # forward and decode paths route identically
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    s = 16
+    params = lm.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (BATCH, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    full_logits, _ = lm.forward(cfg, params, batch)
+    cache = lm.init_cache(cfg, BATCH, s)
+    dec_logits, _ = _decode_replay(cfg, params, tokens, cache)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_audio_decode_matches_forward():
+    cfg = configs.get("seamless-m4t-medium").reduced()
+    s = 12
+    params = lm.init_params(cfg, jax.random.key(0))
+    frames = jax.random.normal(jax.random.key(1), (BATCH, s, cfg.d_model))
+    tokens = jax.random.randint(jax.random.key(2), (BATCH, s), 0, cfg.vocab)
+    batch = {"frames": frames, "tokens": tokens, "labels": tokens}
+    full_logits, _ = lm.forward(cfg, params, batch)
+    cache = lm.init_cache(cfg, BATCH, s, enc_len=s)
+    cache["cross"] = lm.build_cross_cache(cfg, params, frames)
+    dec_logits, _ = _decode_replay(cfg, params, tokens, cache)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_block_swa_equals_masked_full_attention():
+    """The sub-quadratic block-SWA path is EXACT vs the masked dense path."""
+    cfg = dataclasses.replace(
+        configs.get("h2o-danube-3-4b").reduced(), window=16
+    )
+    p = L.init_attention(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model))
+    pos = jnp.arange(64)
+    blocked = L.attention(p, cfg, x, pos, window=16)       # 64 > 16: block path
+    # force dense path by calling with window but s == window after reshape:
+    ar = jnp.arange(64)
+    mask = (ar[None, :] <= ar[:, None]) & (ar[:, None] - ar[None, :] < 16)
+    q, k, v = L._qkv(p, cfg, x, pos)
+    dense = L._sdpa(q, k, v, mask) @ p["wo"]
+    np.testing.assert_allclose(
+        np.asarray(blocked), np.asarray(dense), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_moe_sorted_matches_dense_dispatch():
+    """sort/gather dispatch == GShard one-hot dispatch (same tokens kept when
+    capacity is not binding)."""
+    cfg = dataclasses.replace(
+        configs.get("granite-moe-3b-a800m").reduced(), capacity_factor=4.0
+    )
+    p = L.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    y_dense, _ = L.moe(p, dataclasses.replace(cfg, moe_impl="dense"), x)
+    y_sorted, _ = L.moe(p, dataclasses.replace(cfg, moe_impl="sorted"), x)
+    np.testing.assert_allclose(
+        np.asarray(y_dense), np.asarray(y_sorted), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_long_context_support_flags():
+    assert configs.get("falcon-mamba-7b").supports_long_context
+    assert configs.get("zamba2-2.7b").supports_long_context
+    assert configs.get("h2o-danube-3-4b").supports_long_context
+    assert not configs.get("deepseek-67b").supports_long_context
+    assert not configs.get("starcoder2-7b").supports_long_context
+
+
+def test_smallnets():
+    from repro.models import smallnets as sn
+
+    mp = sn.init_mlp(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (4, 28, 28, 1))
+    assert sn.apply_mlp(mp, x).shape == (4, 10)
+    vp = sn.init_vgg(jax.random.key(2))
+    xi = jax.random.normal(jax.random.key(3), (2, 32, 32, 3))
+    logits = sn.apply_vgg(vp, xi)
+    assert logits.shape == (2, 10)
+    assert np.isfinite(np.asarray(logits)).all()

@@ -1,0 +1,93 @@
+"""Sign regularizer (Eqs. 2-7) and server consensus (Lemma 1) properties."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import consensus as cons
+from repro.core import regularizer as reg
+from repro.core import sketch as sk
+
+
+def test_logcosh_stable_large_inputs():
+    y = jnp.array([-1e6, -50.0, 0.0, 50.0, 1e6])
+    out = reg.logcosh(y)
+    assert np.isfinite(np.asarray(out)).all()
+    # log cosh(y) -> |y| - log 2 for large |y|
+    np.testing.assert_allclose(out[0], 1e6 - np.log(2), rtol=1e-6)
+
+
+def test_h_gamma_converges_to_l1():
+    z = jax.random.normal(jax.random.key(0), (64,))
+    for gamma, tol in [(10.0, 0.5), (1e3, 5e-3), (1e5, 1e-4)]:
+        err = abs(float(reg.h_gamma(z, gamma)) - float(jnp.sum(jnp.abs(z))))
+        assert err < tol * 64, (gamma, err)
+
+
+def test_eq3_equivalence_one_sided_l1():
+    """For v in {+-1}^m: ||[v . z]_-||_1 = (||z||_1 - <v, z>)/2 (Eq. 3)."""
+    key = jax.random.key(1)
+    z = jax.random.normal(key, (128,))
+    v = jnp.sign(jax.random.normal(jax.random.key(2), (128,)))
+    lhs = reg.one_sided_l1(v, z)
+    rhs = 0.5 * (jnp.sum(jnp.abs(z)) - jnp.vdot(v, z))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5)
+
+
+def test_reg_grad_matches_autodiff():
+    spec = sk.make_sketch_spec(300, 0.2, chunk=128)
+    x = jax.random.normal(jax.random.key(3), (300,))
+    v = jnp.sign(jax.random.normal(jax.random.key(4), (spec.m,)))
+    gamma = 500.0
+    f = lambda w: reg.smoothed_reg(v, sk.sketch_forward(spec, w), gamma)
+    _, man = reg.reg_value_and_grad_w(spec, x, v, gamma)
+    np.testing.assert_allclose(jax.grad(f)(x), man, rtol=1e-3, atol=1e-5)
+
+
+def test_tanh_gradient_approaches_sign_penalty():
+    """As gamma -> inf the z-gradient -> sign(z) - v (Remark 3)."""
+    z = jax.random.normal(jax.random.key(5), (64,))
+    v = jnp.sign(jax.random.normal(jax.random.key(6), (64,)))
+    g = reg.reg_grad_z(v, z, 1e6)
+    np.testing.assert_allclose(g, jnp.sign(z) - v, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=hst.integers(min_value=1, max_value=6),
+    m=hst.integers(min_value=1, max_value=8),
+    seed=hst.integers(min_value=0, max_value=2 ** 30),
+)
+def test_lemma1_majority_vote_is_optimal(k, m, seed):
+    """Exhaustive check that sign(sum p_k z_k) minimizes the server
+    objective over {+-1}^m (Lemma 1)."""
+    rng = np.random.RandomState(seed)
+    zs = np.sign(rng.randn(k, m)).astype(np.float32)
+    zs[zs == 0] = 1.0
+    p = rng.rand(k).astype(np.float32) + 0.1
+    p /= p.sum()
+    v_mv = np.asarray(cons.majority_vote(jnp.asarray(zs), jnp.asarray(p)))
+    v_mv = np.where(v_mv == 0, 1.0, v_mv).astype(np.float32)
+    obj_mv = float(cons.server_objective(jnp.asarray(v_mv), jnp.asarray(zs), jnp.asarray(p)))
+    best = min(
+        float(cons.server_objective(jnp.asarray(np.asarray(v, np.float32)), jnp.asarray(zs), jnp.asarray(p)))
+        for v in itertools.product((-1.0, 1.0), repeat=m)
+    )
+    assert obj_mv <= best + 1e-5
+
+
+def test_client_sampling_variance_lemma6():
+    """Empirical check of the without-replacement variance bound."""
+    rng = np.random.RandomState(0)
+    k, s, m = 12, 5, 32
+    zs = np.sign(rng.randn(k, m)).astype(np.float64)
+    zbar = zs.mean(0)
+    bound = (k - s) / (s * k * (k - 1)) * np.sum((zs - zbar) ** 2)
+    trials = []
+    for _ in range(4000):
+        idx = rng.choice(k, s, replace=False)
+        trials.append(np.sum((zs[idx].mean(0) - zbar) ** 2))
+    assert np.mean(trials) <= bound * 1.02, (np.mean(trials), bound)

@@ -1,0 +1,116 @@
+"""SRHT sketch operator properties (paper Lemma 2 + adjoint exactness),
+including hypothesis property tests over dimensions/seeds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import sketch as sk
+
+
+def _spec(n, ratio=0.1, chunk=256, seed=0, mode="auto"):
+    return sk.make_sketch_spec(n, ratio, chunk=chunk, seed=seed, mode=mode)
+
+
+@pytest.mark.parametrize("mode,chunk,n", [
+    ("chunked", 128, 1000), ("chunked", 256, 4096), ("global", 4096, 700),
+])
+def test_adjoint_identity(mode, chunk, n):
+    spec = _spec(n, chunk=chunk, mode=mode)
+    x = jax.random.normal(jax.random.key(1), (n,))
+    v = jax.random.normal(jax.random.key(2), (spec.m,))
+    lhs = jnp.vdot(sk.sketch_forward(spec, x), v)
+    rhs = jnp.vdot(x, sk.sketch_adjoint(spec, v))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+def test_spectral_norm_exact_lemma2():
+    """||Phi|| = sqrt(n'/m) EXACTLY (per block) — the paper's Lemma 2."""
+    for mode, chunk, n in [("global", 1024, 600), ("chunked", 128, 700)]:
+        spec = _spec(n, chunk=chunk, mode=mode)
+        phi = np.asarray(sk.materialize(spec))
+        sv = np.linalg.svd(phi, compute_uv=False)
+        np.testing.assert_allclose(sv[0], spec.scale, rtol=1e-5)
+
+
+def test_phi_phit_scaled_identity():
+    """Q Q^T = I => Phi Phi^T = (n'/m) I per block (any row subset).
+    Exact only when n is a chunk multiple (zero-padding truncates the
+    last block's row support otherwise)."""
+    spec = _spec(512, chunk=256, mode="chunked")
+    phi = np.asarray(sk.materialize(spec))
+    g = phi @ phi.T
+    np.testing.assert_allclose(
+        g, (spec.scale ** 2) * np.eye(spec.m), atol=1e-4
+    )
+
+
+def test_sketch_preserves_norm_in_expectation():
+    """JL behaviour: E||Phi x||^2 / ||x||^2 ~ n'/m * (m/n') ... after the
+    sqrt(n'/m) scaling, E||Phi x||^2 = ||x_pad||^2 for dense-H rows; check
+    the concentration is sane (within 3x) across seeds."""
+    n = 2048
+    x = jax.random.normal(jax.random.key(3), (n,))
+    ratios = []
+    for seed in range(8):
+        spec = _spec(n, ratio=0.25, chunk=512, seed=seed)
+        z = sk.sketch_forward(spec, x)
+        ratios.append(float(jnp.sum(z * z) / jnp.sum(x * x)))
+    assert 0.5 < np.mean(ratios) < 2.0, ratios
+
+
+def test_forward_2d_matches_flat():
+    spec = _spec(1000, chunk=256)
+    x = jax.random.normal(jax.random.key(4), (1000,))
+    z2 = sk.sketch_forward_2d(spec, x)
+    assert z2.shape == (spec.num_chunks, spec.m_chunk)
+    np.testing.assert_allclose(z2.reshape(-1), sk.sketch_forward(spec, x))
+
+
+def test_autodiff_transpose_matches_adjoint():
+    spec = _spec(512, chunk=128)
+    x = jax.random.normal(jax.random.key(5), (512,))
+    v = jax.random.normal(jax.random.key(6), (spec.m,))
+    f = lambda w: jnp.vdot(sk.sketch_forward(spec, w), v)
+    np.testing.assert_allclose(
+        jax.grad(f)(x), sk.sketch_adjoint(spec, v), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=hst.integers(min_value=10, max_value=2000),
+    seed=hst.integers(min_value=0, max_value=2 ** 30),
+    ratio=hst.sampled_from([0.05, 0.1, 0.3]),
+)
+def test_property_linearity_and_adjoint(n, seed, ratio):
+    spec = sk.make_sketch_spec(n, ratio, chunk=256, seed=seed)
+    kx, ky, kv = jax.random.split(jax.random.key(seed), 3)
+    x = jax.random.normal(kx, (n,))
+    y = jax.random.normal(ky, (n,))
+    a = 1.7
+    # linearity
+    np.testing.assert_allclose(
+        sk.sketch_forward(spec, a * x + y),
+        a * sk.sketch_forward(spec, x) + sk.sketch_forward(spec, y),
+        rtol=2e-3, atol=2e-3,
+    )
+    # adjoint identity
+    v = jax.random.normal(kv, (spec.m,))
+    np.testing.assert_allclose(
+        jnp.vdot(sk.sketch_forward(spec, x), v),
+        jnp.vdot(x, sk.sketch_adjoint(spec, v)),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_dense_gaussian_reference():
+    phi = sk.dense_gaussian_sketch(100, 50, seed=0)
+    x = jax.random.normal(jax.random.key(7), (100,))
+    # E||Phi x||^2 = ||x||^2 with entries N(0, 1/m)
+    norms = []
+    for s in range(10):
+        p = sk.dense_gaussian_sketch(100, 50, seed=s)
+        norms.append(float(jnp.sum((p @ x) ** 2)))
+    assert 0.5 < np.mean(norms) / float(jnp.sum(x * x)) < 1.5
