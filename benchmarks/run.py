@@ -12,6 +12,7 @@ same protocols); the full-scale numbers live in the dry-run roofline.
   ablation_fht    paper §A.3: FHT vs dense Gaussian accuracy
   sensitivity     paper §A.4: lambda/mu/gamma grids
   kernels         Pallas kernel ops: sketch fwd/adjoint, pack/vote
+  sketch          fused vs staged SRHT + round hot path (BENCH_sketch.json)
   roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
@@ -242,6 +243,25 @@ def bench_roofline(fast=False):
     return rows
 
 
+def bench_sketch(fast=False):
+    """Fused vs staged SRHT + round hot path — emits BENCH_sketch.json."""
+    from benchmarks import sketch_bench
+
+    out = {
+        "fast": fast,
+        "sketch": sketch_bench.bench_sketch_micro(fast=fast),
+        "round": sketch_bench.bench_round(fast=fast),
+    }
+    emit("sketch/fwd_fused", out["sketch"]["fwd_fused_us"],
+         f"staged_us={out['sketch']['fwd_staged_us']:.1f} "
+         f"speedup={out['sketch']['fwd_speedup']:.2f}x")
+    emit("sketch/round_fused", out["round"]["round_fused_us"],
+         f"staged_us={out['round']['round_staged_us']:.1f} "
+         f"speedup={out['round']['round_speedup']:.2f}x")
+    sketch_bench.write_artifacts(out)
+    return out
+
+
 BENCHES = {
     "table2": bench_table2,
     "fig3_fig4": bench_fig3_fig4,
@@ -251,6 +271,7 @@ BENCHES = {
     "ablation_fht": bench_ablation_fht,
     "sensitivity": bench_sensitivity,
     "kernels": bench_kernels,
+    "sketch": bench_sketch,
     "roofline": bench_roofline,
 }
 

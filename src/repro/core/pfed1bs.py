@@ -3,16 +3,23 @@
 Round t:
   1. Each participating client runs R local SGD steps on the smoothed
      objective F~_k(w; v^t) = f_k(w) + lam*(h_gamma(Phi w) - <v, Phi w>)
-     + (mu/2)||w||^2 (Eq. 6); gradient per Eq. 11.
+     + (mu/2)||w||^2 (Eq. 6); gradient per Eq. 11 — the sketch carries a
+     custom VJP so every local step pays one fused forward + one fused
+     adjoint instead of autodiff transposing the sketch trace.
   2. Each client uploads the one-bit sketch z_k = sign(Phi w_k^{t+1})
      (bit-packed: m bits on the wire).
   3. Server aggregates v^{t+1} = sign(sum_{k in S} p_k z_k) (Lemma 1) and
      broadcasts the m-bit consensus.
 
-Clients are a leading pytree axis (vmapped ClientUpdate); partial
-participation is a mask — non-sampled clients keep their models and their
-stale sketches (the weighted vote uses fresh sketches of sampled clients
-only, exactly Algorithm 1 line 8).
+Hot-path layout (DESIGN.md §4): the round gathers the S sampled clients,
+runs the vmapped local update on those S only, and scatters the results
+back — non-sampled clients never pay local SGD. Each sampled client is
+sketched exactly once per round; that sketch feeds the uplink signs, the
+majority vote, the sign-agreement metric AND the potential Psi^t (the
+staged seed path updated and sketched all K clients and re-sketched every
+one of them inside the potential). The seed round is preserved behind
+`PFed1BSConfig(fused_round=False)` for benchmarking
+(benchmarks/sketch_bench.py) and parity tests.
 """
 from __future__ import annotations
 
@@ -41,6 +48,9 @@ class PFed1BSConfig:
     chunk: int = 4096              # sketch block size (see DESIGN.md §3.2)
     sketch_seed: int = 0
     sketch_mode: str = "auto"      # global (paper-exact) | chunked | auto
+    fused_round: bool = True       # gather/scatter round with one sketch per
+    #                                client per round (DESIGN.md §4); False
+    #                                reproduces the seed's all-K staged round.
     # --- beyond-paper extension ---
     error_feedback: bool = False   # EF residual on the one-bit sketch:
     #                                z_k = sign(Phi w_k + e_k),
@@ -116,10 +126,104 @@ class PFed1BS:
     def round(self, state: FLState, batches, weights, key):
         """batches: (K, R, B, ...) pytree; weights: (K,) p_k. Returns
         (state', metrics)."""
+        if self.cfg.fused_round:
+            return self._round_fused(state, batches, weights, key)
+        return self._round_staged(state, batches, weights, key)
+
+    def _round_fused(self, state: FLState, batches, weights, key):
+        """Gather sampled clients -> vmapped update -> scatter; one sketch
+        per sampled client per round, threaded through vote, metrics and
+        Psi (on the pre-EF sketches, matching Eq. 28)."""
         cfg = self.cfg
         k = cfg.num_clients
 
         # partial participation: sample S clients without replacement
+        perm = jax.random.permutation(key, k)
+        idx = perm[: cfg.participate]
+
+        take = lambda tree: jax.tree.map(lambda a: a[idx], tree)
+        upd, task_loss = jax.vmap(
+            lambda p, b: self._client_update(p, b, state.v)
+        )(take(state.clients), take(batches))
+
+        # scatter updated models back; non-sampled clients keep theirs
+        clients = jax.tree.map(
+            lambda old, new: old.at[idx].set(new.astype(old.dtype)),
+            state.clients, upd,
+        )
+
+        # uplink: only the S sampled clients are sketched — exactly once per
+        # round; non-sampled clients kept their params and transmit nothing,
+        # so their (unchanged) sketches are never recomputed.
+        zs = jax.vmap(self._sketch_client)(upd)                # (S, m)
+        zs_phi = zs            # pre-EF sketches Phi w (the Eq. 28 potential)
+        new_ef = state.ef
+        if cfg.error_feedback:
+            # EF residual: quantize (Phi w + e); e <- (Phi w + e) - alpha*z.
+            # Only sampled clients transmit => only their residuals flush.
+            zs = zs + state.ef[idx]
+            signs_ef = jnp.sign(zs) + (zs == 0)
+            alpha = jnp.mean(jnp.abs(zs), axis=1, keepdims=True)
+            new_ef = state.ef.at[idx].set(zs - alpha * signs_ef)
+        signs = jnp.sign(zs) + (zs == 0)                       # {-1,+1}
+        pad = (-self.spec.m) % 32
+        packed = kops.pack_signs(jnp.pad(signs, ((0, 0), (0, pad))))
+
+        # server: weighted majority vote over the sampled clients (Lemma 1).
+        # Vote in natural client order with zero weights for non-sampled
+        # rows: summing the S rows in permutation order changes float
+        # accumulation and can flip near-zero consensus signs, so the fused
+        # round would diverge from the staged one on the algorithm's core
+        # discrete object.
+        w_s = weights[idx]
+        signs_full = jnp.zeros((k, self.spec.m), jnp.float32).at[idx].set(signs)
+        v_new = consensus.majority_vote(
+            signs_full, jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
+        )
+
+        potential = self._potential_from_sketches(
+            upd, zs_phi, v_new, task_loss, w_s
+        )
+        w_norm = jnp.maximum(jnp.sum(w_s), 1e-9)
+        metrics = {
+            "task_loss": jnp.sum(task_loss * w_s) / w_norm,
+            "potential": potential,
+            "uplink_bits": jnp.float32(cfg.participate * self.spec.m),
+            "downlink_bits": jnp.float32(self.spec.m),
+            "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
+            "packed_words": jnp.float32(packed.shape[-1]),
+        }
+        return (
+            FLState(clients=clients, v=v_new, round=state.round + 1, ef=new_ef),
+            metrics,
+        )
+
+    def _potential_from_sketches(self, clients, zs, v, task_loss, weights):
+        """Psi^t = sum_k p_k F~_k(w_k; v) (Eq. 28) over the sampled clients
+        (importance-normalized; exact at full participation), with f_k
+        estimated by the round's minibatch losses and the regularizer
+        evaluated on the already-computed sketches — no re-sketching."""
+        cfg = self.cfg
+
+        def fk(params, z, task):
+            w = flatten.ravel(params)
+            return (
+                task
+                + cfg.lam * regularizer.smoothed_reg(v, z, cfg.gamma)
+                + 0.5 * cfg.mu * jnp.sum(w * w)
+            )
+
+        vals = jax.vmap(fk)(clients, zs, task_loss)
+        return jnp.sum(weights * vals) / jnp.maximum(jnp.sum(weights), 1e-9)
+
+    # -- seed round (kept for parity tests + before/after benchmarking) -------
+
+    def _round_staged(self, state: FLState, batches, weights, key):
+        """The seed hot path: update all K clients then mask, re-sketch in
+        the potential. Quadratically wasteful at S << K; see DESIGN.md §4."""
+        cfg = self.cfg
+        k = cfg.num_clients
+
         perm = jax.random.permutation(key, k)
         mask = jnp.zeros((k,), jnp.float32).at[perm[: cfg.participate]].set(1.0)
 
@@ -127,30 +231,25 @@ class PFed1BS:
             lambda p, b: self._client_update(p, b, state.v)
         )(state.clients, batches)
 
-        # non-participating clients keep their previous model
         def keep(new, old):
             m = mask.reshape((k,) + (1,) * (new.ndim - 1))
             return jnp.where(m > 0, new, old)
 
         clients = jax.tree.map(keep, new_clients, state.clients)
 
-        # uplink: one-bit sketches (packed words = the wire format)
         zs = jax.vmap(self._sketch_client)(clients)            # (K, m)
         new_ef = state.ef
         if cfg.error_feedback:
-            # EF residual: quantize (Phi w + e); e <- (Phi w + e) - alpha*z
             corrected = zs + state.ef
             signs_ef = jnp.sign(corrected) + (corrected == 0)
             alpha = jnp.mean(jnp.abs(corrected), axis=1, keepdims=True)
             updated = corrected - alpha * signs_ef
-            # only sampled clients transmit => only they flush residuals
             new_ef = jnp.where(mask[:, None] > 0, updated, state.ef)
             zs = jnp.where(mask[:, None] > 0, corrected, zs)
         signs = jnp.sign(zs) + (zs == 0)                       # {-1,+1}
         pad = (-self.spec.m) % 32
         packed = kops.pack_signs(jnp.pad(signs, ((0, 0), (0, pad))))
 
-        # server: weighted majority vote over sampled clients (Lemma 1)
         pw = weights * mask
         v_new = consensus.majority_vote(signs, pw)
 
@@ -169,8 +268,7 @@ class PFed1BS:
         )
 
     def _potential(self, clients, v, task_loss, weights):
-        """Psi^t = sum_k p_k F~_k(w_k; v) (Eq. 28), with f_k estimated by the
-        round's minibatch losses."""
+        """Seed potential: re-sketches every client from scratch."""
         cfg = self.cfg
 
         def fk(params, task):

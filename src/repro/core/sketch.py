@@ -18,8 +18,18 @@ in two flavors:
   subset), so the analysis constants carry over with n' -> c. Chunks align
   with parameter shards: sketching needs zero cross-device communication.
 
-Both are linear operators with exact adjoints (`sketch_adjoint`), validated
-against dense materialization and autodiff transposition in the tests.
+Execution (DESIGN.md §3.3): on the kernel path the whole pipeline — sign
+flip, Kronecker FHT, strided subsample, sqrt(c/m) scale — runs as ONE fused
+Pallas pass per chunk tile (`kernels/srht.py`); the staged multi-op pipeline
+remains available as `sketch_forward_2d_staged` / `sketch_adjoint_staged`
+for parity tests and benchmarking. `sketch_forward_2d` carries a
+`jax.custom_vjp` whose backward pass is the hand-written fused adjoint, so
+the regularizer gradient Phi^T(tanh(gamma Phi w) - v) of Eq. 11 never pays
+autodiff to transpose the sketch trace.
+
+Both flavors are linear operators with exact adjoints (`sketch_adjoint`),
+validated against dense materialization and autodiff transposition in the
+tests.
 """
 from __future__ import annotations
 
@@ -106,14 +116,29 @@ def _chunk_key(spec: SketchSpec, i: jax.Array) -> jax.Array:
     return jax.random.fold_in(jax.random.key(spec.seed), i)
 
 
-def _chunk_rand(spec: SketchSpec, i: jax.Array):
+def _chunk_rand_offset(spec: SketchSpec, i: jax.Array):
+    """Sign diagonal + strided-subsample offset for chunk i."""
     key = _chunk_key(spec, i)
     kd, ks = jax.random.split(key)
     d = jax.random.rademacher(kd, (spec.chunk,), dtype=jnp.float32)
     stride = spec.chunk // spec.m_chunk
     offset = jax.random.randint(ks, (), 0, stride)
+    return d, offset
+
+
+def _chunk_rand(spec: SketchSpec, i: jax.Array):
+    d, offset = _chunk_rand_offset(spec, i)
+    stride = spec.chunk // spec.m_chunk
     idx = offset + jnp.arange(spec.m_chunk) * stride
     return d, idx
+
+
+def _all_chunk_rand(spec: SketchSpec):
+    """(num_chunks, chunk) sign diagonals + (num_chunks, 1) int32 offsets —
+    the operand layout of the fused kernels."""
+    ii = jnp.arange(spec.num_chunks)
+    d, off = jax.vmap(lambda i: _chunk_rand_offset(spec, i))(ii)
+    return d, off.astype(jnp.int32).reshape(-1, 1)
 
 
 def _global_perm_idx(spec: SketchSpec) -> jax.Array:
@@ -127,17 +152,39 @@ def _pad_to(x: jax.Array, size: int) -> jax.Array:
     return jnp.pad(x, (0, size - x.shape[0]))
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "impl"))
-def sketch_forward_2d(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
-    """z = Phi @ w in block layout: (n,) -> (num_chunks, m_chunk) float32.
+def _use_fused(spec: SketchSpec, impl: str) -> bool:
+    """The fused single-pass kernels cover chunks up to the single-tile
+    Kronecker limit; larger chunks fall back to the staged recursion."""
+    return kops.resolve_impl(impl) == "pallas" and spec.chunk <= kops.KERNEL_MAX_C
 
-    The 2-D layout mirrors chunk ownership: when w's elements are laid out
-    sharded-axis-major, chunk rows (axis 0) are device-local, so the sketch
-    and everything downstream of it (consensus v, tanh, vote) shard on
-    axis 0 with zero collectives.
-    """
+
+def _as_blocks(spec: SketchSpec, w: jax.Array) -> jax.Array:
     w = _pad_to(w.astype(jnp.float32), spec.n_pad)
-    x = w.reshape(spec.num_chunks, spec.chunk)
+    return w.reshape(spec.num_chunks, spec.chunk)
+
+
+# ---------------------------------------------------------------------------
+# Forward / adjoint dispatch (fused kernel vs staged pipeline)
+# ---------------------------------------------------------------------------
+
+def _forward_2d(spec: SketchSpec, w: jax.Array, impl: str) -> jax.Array:
+    if _use_fused(spec, impl):
+        x = _as_blocks(spec, w)
+        d, off = _all_chunk_rand(spec)
+        if spec.mode == "global":
+            # paper-exact permutation subsample: fuse D + FHT + scale in one
+            # pass, gather the m permuted rows from the kernel output.
+            y = kops.dfht(x, d, scale=spec.scale, impl=impl)
+            return y[:, _global_perm_idx(spec)]
+        return kops.srht_forward_2d(
+            x, d, off, m_chunk=spec.m_chunk, scale=spec.scale, impl=impl
+        )
+    return _forward_2d_staged(spec, w, impl)
+
+
+def _forward_2d_staged(spec: SketchSpec, w: jax.Array, impl: str) -> jax.Array:
+    """The seed's four-stage pipeline (sign flip, FHT, gather, scale)."""
+    x = _as_blocks(spec, w)
 
     if spec.mode == "global":
         d, _ = _chunk_rand(spec, jnp.int32(0))
@@ -153,14 +200,21 @@ def sketch_forward_2d(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax
     return jax.vmap(one)(jnp.arange(spec.num_chunks), x)
 
 
-def sketch_forward(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
-    """z = Phi @ w, matrix-free. w: (n,) -> z: (m,) float32."""
-    return sketch_forward_2d(spec, w, impl=impl).reshape(spec.m)
+def _adjoint_2d(spec: SketchSpec, v: jax.Array, impl: str) -> jax.Array:
+    v = v.reshape(spec.num_chunks, spec.m_chunk).astype(jnp.float32)
+    if _use_fused(spec, impl):
+        d, off = _all_chunk_rand(spec)
+        if spec.mode == "global":
+            idx = _global_perm_idx(spec)
+            lifted = jnp.zeros((1, spec.chunk), jnp.float32).at[0, idx].set(v[0])
+            x = kops.dfht(lifted, d, scale=spec.scale, d_post=True, impl=impl)
+        else:
+            x = kops.srht_adjoint_2d(v, d, off, scale=spec.scale, impl=impl)
+        return x.reshape(spec.n_pad)[: spec.n]
+    return _adjoint_staged(spec, v, impl)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "impl"))
-def sketch_adjoint(spec: SketchSpec, v: jax.Array, impl: str = "auto") -> jax.Array:
-    """w = Phi^T @ v, matrix-free. v: (m,) or (num_chunks, m_chunk) -> (n,)."""
+def _adjoint_staged(spec: SketchSpec, v: jax.Array, impl: str) -> jax.Array:
     v = v.reshape(-1).astype(jnp.float32)
 
     if spec.mode == "global":
@@ -178,6 +232,91 @@ def sketch_adjoint(spec: SketchSpec, v: jax.Array, impl: str = "auto") -> jax.Ar
 
     x = jax.vmap(one)(jnp.arange(spec.num_chunks), vz)
     return x.reshape(spec.n_pad)[: spec.n]
+
+
+# ---------------------------------------------------------------------------
+# Public API. sketch_forward_2d carries a custom VJP: the cotangent of a
+# linear operator is exactly its adjoint, so the backward pass is one fused
+# adjoint kernel call instead of autodiff transposing the sketch trace
+# (Eq. 11: grad_w = Phi^T (tanh(gamma Phi w) - v)).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2))
+def _sketch_forward_2d(spec: SketchSpec, w: jax.Array, impl: str) -> jax.Array:
+    return _forward_2d(spec, w, impl)
+
+
+def _sketch_forward_2d_fwd(spec, w, impl):
+    return _forward_2d(spec, w, impl), None
+
+
+def _sketch_forward_2d_bwd(spec, impl, _res, g):
+    return (_adjoint_2d(spec, g, impl),)
+
+
+_sketch_forward_2d.defvjp(_sketch_forward_2d_fwd, _sketch_forward_2d_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def sketch_forward_2d(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
+    """z = Phi @ w in block layout: (n,) -> (num_chunks, m_chunk) float32.
+
+    The 2-D layout mirrors chunk ownership: when w's elements are laid out
+    sharded-axis-major, chunk rows (axis 0) are device-local, so the sketch
+    and everything downstream of it (consensus v, tanh, vote) shard on
+    axis 0 with zero collectives.
+    """
+    assert w.shape == (spec.n,), f"expected ({spec.n},), got {w.shape}"
+    return _sketch_forward_2d(spec, w, impl)
+
+
+def sketch_forward(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
+    """z = Phi @ w, matrix-free. w: (n,) -> z: (m,) float32."""
+    return sketch_forward_2d(spec, w, impl=impl).reshape(spec.m)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def sketch_forward_2d_staged(
+    spec: SketchSpec, w: jax.Array, impl: str = "auto"
+) -> jax.Array:
+    """Seed pipeline, no custom VJP — parity/benchmark reference."""
+    return _forward_2d_staged(spec, w, impl)
+
+
+def sketch_forward_staged(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
+    return sketch_forward_2d_staged(spec, w, impl=impl).reshape(spec.m)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def sketch_forward_packed(
+    spec: SketchSpec, w: jax.Array, impl: str = "auto"
+) -> jax.Array:
+    """Uplink wire format straight from the kernel: packed uint32 signs of
+    Phi w, (num_chunks, m_chunk // 32). Requires m_chunk % 32 == 0 (pad the
+    spec's m_chunk or pack the float sketch for odd sizes)."""
+    assert spec.m_chunk % 32 == 0
+    if _use_fused(spec, impl) and spec.mode != "global":
+        x = _as_blocks(spec, w)
+        d, off = _all_chunk_rand(spec)
+        return kops.srht_forward_packed_2d(
+            x, d, off, m_chunk=spec.m_chunk, scale=spec.scale, impl=impl
+        )
+    z = sketch_forward_2d(spec, w, impl=impl)
+    return kops.pack_signs(z, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def sketch_adjoint(spec: SketchSpec, v: jax.Array, impl: str = "auto") -> jax.Array:
+    """w = Phi^T @ v, matrix-free. v: (m,) or (num_chunks, m_chunk) -> (n,)."""
+    return _adjoint_2d(spec, v, impl)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def sketch_adjoint_staged(
+    spec: SketchSpec, v: jax.Array, impl: str = "auto"
+) -> jax.Array:
+    """Seed adjoint pipeline — parity/benchmark reference."""
+    return _adjoint_staged(spec, v, impl)
 
 
 def dense_gaussian_sketch(n: int, m: int, seed: int = 0) -> jax.Array:

@@ -31,21 +31,30 @@ def _split_pow2(c: int) -> tuple[int, int]:
     return 1 << la, 1 << (log - la)
 
 
-def _fht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int):
-    """One grid step: FHT of a (block_rows, a*b) VMEM tile via two matmuls."""
-    br = x_ref.shape[0]
-    x = x_ref[...].reshape(br, a, b)
-    ha = ha_ref[...]
-    hb = hb_ref[...]
+def _fht_tile(x: jax.Array, ha: jax.Array, hb: jax.Array, a: int, b: int):
+    """FHT of a (rows, a*b) tile via the two-matmul Kronecker factorization.
+
+    Shared by the standalone FHT kernel below and the fused SRHT kernels
+    (kernels/srht.py) — the tile math must stay identical between them.
+    """
+    rows = x.shape[0]
+    x = x.reshape(rows, a, b)
     # X @ H_b: contract the trailing b axis (MXU matmul, b-aligned).
     t = jax.lax.dot_general(
         x, hb, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (br, a, b)
+    )  # (rows, a, b)
     # H_a @ X: contract the a axis.
     y = jax.lax.dot_general(
         t, ha, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (br, b, a) -- note output axes order (br, b, a)
-    o_ref[...] = jnp.transpose(y, (0, 2, 1)).reshape(br, a * b).astype(o_ref.dtype)
+    )  # (rows, b, a) -- note output axes order (rows, b, a)
+    return jnp.transpose(y, (0, 2, 1)).reshape(rows, a * b)
+
+
+def _fht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int):
+    """One grid step: FHT of a (block_rows, a*b) VMEM tile via two matmuls."""
+    o_ref[...] = _fht_tile(
+        x_ref[...], ha_ref[...], hb_ref[...], a, b
+    ).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

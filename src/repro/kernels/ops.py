@@ -15,18 +15,25 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.fht import fht_pallas
 from repro.kernels.onebit import pack_pallas, unpack_pallas, vote_pallas
+from repro.kernels.srht import dfht_pallas, srht_adj_pallas, srht_fwd_pallas
 
-_KERNEL_MAX_C = 128 * 128
+# Largest chunk the single-tile Kronecker kernels handle (a = b = 128).
+KERNEL_MAX_C = 128 * 128
+_KERNEL_MAX_C = KERNEL_MAX_C  # backwards-compat alias
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _auto(impl: str) -> str:
+def resolve_impl(impl: str) -> str:
+    """Resolve "auto" to the concrete path for this host."""
     if impl != "auto":
         return impl
     return "pallas" if _on_tpu() else "ref"
+
+
+_auto = resolve_impl  # backwards-compat alias
 
 
 def fht(x: jax.Array, impl: str = "auto") -> jax.Array:
@@ -36,7 +43,7 @@ def fht(x: jax.Array, impl: str = "auto") -> jax.Array:
     Kronecker split H_{ab} = H_a (x) H_b: FHT along each factor of a
     row-major (a, b) reshape.
     """
-    impl = _auto(impl)
+    impl = resolve_impl(impl)
     n = x.shape[-1]
     assert _ref.is_pow2(n), f"FHT length must be a power of two, got {n}"
     if impl == "ref":
@@ -47,9 +54,9 @@ def fht(x: jax.Array, impl: str = "auto") -> jax.Array:
 
     def go(y):  # y: (rows, c), c any pow2
         c = y.shape[-1]
-        if c <= _KERNEL_MAX_C:
+        if c <= KERNEL_MAX_C:
             return fht_pallas(y, interpret=not _on_tpu())
-        b = _KERNEL_MAX_C
+        b = KERNEL_MAX_C
         a = c // b
         y = y.reshape(-1, a, b)
         y = go(y.reshape(-1, b)).reshape(-1, a, b)          # H_b along last
@@ -60,33 +67,144 @@ def fht(x: jax.Array, impl: str = "auto") -> jax.Array:
     return go(x2).reshape(*lead, n)
 
 
+# ---------------------------------------------------------------------------
+# Fused SRHT (single-pass sign-flip + FHT + subsample + scale per tile)
+# ---------------------------------------------------------------------------
+
+def srht_forward_2d(
+    x: jax.Array,
+    d: jax.Array,
+    offsets: jax.Array,
+    *,
+    m_chunk: int,
+    scale: float,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused forward SRHT over chunk rows -> (num_chunks, m_chunk)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.srht_fwd_ref(x, d, offsets, m_chunk=m_chunk, scale=scale)
+    return srht_fwd_pallas(
+        x, d, offsets, m_chunk=m_chunk, scale=scale, interpret=not _on_tpu()
+    )
+
+
+def srht_forward_packed_2d(
+    x: jax.Array,
+    d: jax.Array,
+    offsets: jax.Array,
+    *,
+    m_chunk: int,
+    scale: float,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused forward SRHT with the sign + bit-pack epilogue (uplink wire
+    format): (num_chunks, m_chunk // 32) uint32. Requires m_chunk % 32 == 0."""
+    assert m_chunk % 32 == 0
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        z = _ref.srht_fwd_ref(x, d, offsets, m_chunk=m_chunk, scale=scale)
+        return _ref.pack_ref(z)
+    return srht_fwd_pallas(
+        x, d, offsets, m_chunk=m_chunk, scale=scale, pack=True,
+        interpret=not _on_tpu(),
+    )
+
+
+def srht_adjoint_2d(
+    v: jax.Array,
+    d: jax.Array,
+    offsets: jax.Array,
+    *,
+    scale: float,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused adjoint SRHT (scatter-lift + FHT + sign-flip) -> (num_chunks, c)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.srht_adj_ref(v, d, offsets, scale=scale)
+    return srht_adj_pallas(v, d, offsets, scale=scale, interpret=not _on_tpu())
+
+
+def dfht(
+    x: jax.Array, d: jax.Array, *, scale: float, d_post: bool = False,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused sign-flip + FHT + scale per row (the global-mode fast path)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.dfht_ref(x, d, scale=scale, d_post=d_post)
+    return dfht_pallas(x, d, scale=scale, d_post=d_post, interpret=not _on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# One-bit transport
+# ---------------------------------------------------------------------------
+
+def _block_words_for(nw: int, biggest: int) -> int:
+    """Largest hardware-friendly block size dividing nw."""
+    if nw <= biggest:
+        return nw
+    for bw in (biggest, biggest // 2, biggest // 4):
+        if nw % bw == 0:
+            return bw
+    return 128
+
+
 def pack_signs(x: jax.Array, impl: str = "auto") -> jax.Array:
-    """Pack signs (x >= 0) of the last axis (multiple of 32) into uint32."""
-    impl = _auto(impl)
+    """Pack signs (x >= 0) of the last axis (multiple of 32) into uint32.
+
+    The Pallas path handles arbitrary row counts / word counts by padding
+    internally to the (8-row, 128-word) alignment and slicing the result.
+    """
+    impl = resolve_impl(impl)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1]) if lead else x[None]
-    if impl == "ref" or x2.shape[0] % 8 != 0 or (x2.shape[-1] // 32) % 512 != 0:
+    if impl == "ref":
         out = _ref.pack_ref(x2)
     else:
-        out = pack_pallas(x2, interpret=not _on_tpu())
+        rows, m = x2.shape
+        nw = m // 32
+        rpad = (-rows) % 8
+        # always pad the word count to a 128-lane multiple: Mosaic wants the
+        # trailing block dim lane-aligned, and small unaligned widths are
+        # exactly the shapes the old ref-fallback guard was protecting
+        wpad = (-nw) % 128
+        xp = jnp.pad(x2, ((0, rpad), (0, wpad * 32)))
+        bw = _block_words_for(nw + wpad, 512)
+        out = pack_pallas(xp, block_words=bw, interpret=not _on_tpu())[:rows, :nw]
     return out.reshape(*lead, -1) if lead else out[0]
 
 
 def unpack_signs(words: jax.Array, impl: str = "auto") -> jax.Array:
-    """Unpack uint32 words into +/-1 float32 along the last axis."""
-    impl = _auto(impl)
+    """Unpack uint32 words into +/-1 float32 along the last axis.
+
+    Arbitrary shapes are padded internally on the Pallas path (see
+    pack_signs) and sliced back out.
+    """
+    impl = resolve_impl(impl)
     lead = words.shape[:-1]
     w2 = words.reshape(-1, words.shape[-1]) if lead else words[None]
-    if impl == "ref" or w2.shape[0] % 8 != 0 or w2.shape[-1] % 512 != 0:
+    if impl == "ref":
         out = _ref.unpack_ref(w2)
     else:
-        out = unpack_pallas(w2, interpret=not _on_tpu())
+        rows, nw = w2.shape
+        rpad = (-rows) % 8
+        wpad = (-nw) % 128
+        wp = jnp.pad(w2, ((0, rpad), (0, wpad)))
+        bw = _block_words_for(nw + wpad, 512)
+        out = unpack_pallas(wp, block_words=bw, interpret=not _on_tpu())
+        out = out[:rows, : nw * 32]
     return out.reshape(*lead, -1) if lead else out[0]
 
 
 def vote_packed(words: jax.Array, weights: jax.Array, impl: str = "auto") -> jax.Array:
     """Weighted majority vote over (K, W) packed sketches -> (W,) packed."""
-    impl = _auto(impl)
-    if impl == "ref" or words.shape[-1] % 256 != 0:
+    impl = resolve_impl(impl)
+    if impl == "ref":
         return _ref.vote_ref(words, weights)
-    return vote_pallas(words, weights, interpret=not _on_tpu())
+    nw = words.shape[-1]
+    wpad = (-nw) % 128
+    wp = jnp.pad(words, ((0, 0), (0, wpad)))
+    bw = _block_words_for(nw + wpad, 256)
+    return vote_pallas(wp, weights, block_words=bw, interpret=not _on_tpu())[:nw]

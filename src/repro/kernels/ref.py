@@ -45,6 +45,41 @@ def fht_ref(x: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Fused SRHT oracles (staged pipeline; ground truth for kernels/srht.py)
+# ---------------------------------------------------------------------------
+
+def srht_fwd_ref(x, d, offsets, *, m_chunk, scale):
+    """Staged forward SRHT: z = scale * FHT(x * d)[offset + arange(m)*stride].
+
+    x, d: (rows, c); offsets: (rows, 1) int32 in [0, c // m_chunk).
+    """
+    c = x.shape[-1]
+    stride = c // m_chunk
+    y = fht_ref(x * d)
+    idx = offsets + jnp.arange(m_chunk)[None, :] * stride   # (rows, m_chunk)
+    return scale * jnp.take_along_axis(y, idx, axis=-1)
+
+
+def srht_adj_ref(v, d, offsets, *, scale):
+    """Staged adjoint SRHT: w = FHT(S^T (scale * v)) * d. v: (rows, m_chunk)."""
+    rows, m_chunk = v.shape
+    c = d.shape[-1]
+    stride = c // m_chunk
+    idx = offsets + jnp.arange(m_chunk)[None, :] * stride
+    lifted = jnp.zeros((rows, c), jnp.float32).at[
+        jnp.arange(rows)[:, None], idx
+    ].set(scale * v)
+    return fht_ref(lifted) * d
+
+
+def dfht_ref(x, d, *, scale, d_post=False):
+    """scale * FHT(x * d) per row, or scale * FHT(x) * d when d_post."""
+    if d_post:
+        return scale * fht_ref(x) * d
+    return scale * fht_ref(x * d)
+
+
+# ---------------------------------------------------------------------------
 # One-bit packing / majority vote
 # ---------------------------------------------------------------------------
 

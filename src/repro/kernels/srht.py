@@ -1,0 +1,211 @@
+"""Fused SRHT Pallas kernels (DESIGN.md §3.3).
+
+The sketch operator Phi = sqrt(c/m) * S @ H @ D (paper Eq. 15-18) is a
+four-stage pipeline when executed naively: Rademacher sign flip, FHT,
+strided row subsample, scale — four HBM round trips per chunk. The kernels
+here perform the whole pipeline in one VMEM-resident pass per
+(block_rows, chunk) tile:
+
+  srht_fwd_pallas        x, D, offsets -> z = sqrt(c/m) * S(FHT(D x))
+  srht_fwd_packed_pallas same, with a sign + bit-pack epilogue so the uplink
+                         wire format (uint32 words) comes straight out of
+                         the kernel
+  srht_adj_pallas        v, D, offsets -> w = sqrt(c/m) * D FHT(S^T v)
+  dfht_pallas            scale * FHT(D x)  (or scale * FHT(x) * D) — the
+                         fused sign-flip + transform used by the global
+                         (paper-exact, permutation-subsampled) mode, whose
+                         arbitrary row gather happens on the kernel output
+
+The FHT itself is the Kronecker two-matmul factorization of kernels/fht.py
+(DESIGN.md §3): H_c = H_a (x) H_b with a, b <= 128, so each tile costs two
+MXU matmuls. The strided subsample idx = offset + arange(m) * stride
+(stride = c // m, offset < stride) is fused as a one-hot select over the
+stride axis of the first m*stride transform coefficients — no gather
+instruction, just a VPU compare + multiply + reduce. The adjoint scatters
+through the same one-hot mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fht import _fht_tile, _split_pow2
+from repro.kernels.ref import hadamard_matrix
+
+
+def _subsample_mask(off, br: int, stride: int):
+    """One-hot (br, 1, stride) mask: lane s of row r is selected iff
+    s == offsets[r]. off: (br, 1) int32."""
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (br, 1, stride), 2)
+    return lanes == off[:, :, None]
+
+
+def _srht_fwd_kernel(
+    x_ref, d_ref, off_ref, ha_ref, hb_ref, o_ref,
+    *, a: int, b: int, stride: int, m_chunk: int, scale: float, pack: bool,
+):
+    br = x_ref.shape[0]
+    y = _fht_tile(x_ref[...] * d_ref[...], ha_ref[...], hb_ref[...], a, b)
+    # strided subsample: y[off + j*stride] == y[:m*stride].reshape(m, stride)[j, off]
+    y3 = y[:, : m_chunk * stride].reshape(br, m_chunk, stride)
+    sel = _subsample_mask(off_ref[...], br, stride)
+    z = scale * jnp.sum(y3 * sel.astype(jnp.float32), axis=-1)   # (br, m_chunk)
+    if pack:
+        bits = (z >= 0).astype(jnp.uint32).reshape(br, m_chunk // 32, 32)
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+        o_ref[...] = jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+    else:
+        o_ref[...] = z.astype(o_ref.dtype)
+
+
+def _srht_adj_kernel(
+    v_ref, d_ref, off_ref, ha_ref, hb_ref, o_ref,
+    *, a: int, b: int, stride: int, m_chunk: int, scale: float,
+):
+    br = v_ref.shape[0]
+    c = a * b
+    sel = _subsample_mask(off_ref[...], br, stride)
+    lifted = (scale * v_ref[...])[:, :, None] * sel.astype(jnp.float32)
+    lifted = lifted.reshape(br, m_chunk * stride)
+    if m_chunk * stride < c:
+        lifted = jnp.pad(lifted, ((0, 0), (0, c - m_chunk * stride)))
+    y = _fht_tile(lifted, ha_ref[...], hb_ref[...], a, b)
+    o_ref[...] = (y * d_ref[...]).astype(o_ref.dtype)
+
+
+def _dfht_kernel(x_ref, d_ref, ha_ref, hb_ref, o_ref, *, a, b, scale, d_post):
+    x = x_ref[...]
+    d = d_ref[...]
+    if d_post:
+        y = _fht_tile(x, ha_ref[...], hb_ref[...], a, b) * d
+    else:
+        y = _fht_tile(x * d, ha_ref[...], hb_ref[...], a, b)
+    o_ref[...] = (scale * y).astype(o_ref.dtype)
+
+
+def _pad_rows(arrs, block_rows: int):
+    rows = arrs[0].shape[0]
+    pad = (-rows) % block_rows
+    if pad:
+        arrs = [jnp.pad(z, ((0, pad), (0, 0))) for z in arrs]
+    return arrs, rows, arrs[0].shape[0]
+
+
+def _row_blocked_call(kernel, ins, widths, out_width, out_dtype, block_rows, interpret):
+    """pallas_call gridded over row blocks.
+
+    The first len(widths) operands are (rows, width_i) and get row-blocked;
+    the rest (the Hadamard factors) are broadcast whole to every grid step.
+    """
+    blocked, rows, padded = _pad_rows(ins[: len(widths)], block_rows)
+    bcast = ins[len(widths):]
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)) for w in widths
+        ] + [
+            pl.BlockSpec(h.shape, lambda i: (0, 0)) for h in bcast
+        ],
+        out_specs=pl.BlockSpec((block_rows, out_width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, out_width), out_dtype),
+        interpret=interpret,
+    )(*blocked, *bcast)
+    return out[:rows]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m_chunk", "scale", "pack", "block_rows", "interpret")
+)
+def srht_fwd_pallas(
+    x: jax.Array,
+    d: jax.Array,
+    offsets: jax.Array,
+    *,
+    m_chunk: int,
+    scale: float,
+    pack: bool = False,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused forward SRHT over chunk rows.
+
+    x, d: (num_chunks, c) float32; offsets: (num_chunks, 1) int32 in
+    [0, c // m_chunk). Returns (num_chunks, m_chunk) float32, or packed
+    (num_chunks, m_chunk // 32) uint32 signs when pack=True.
+    """
+    rows, c = x.shape
+    a, b = _split_pow2(c)
+    stride = c // m_chunk
+    assert offsets.shape == (rows, 1)
+    if pack:
+        assert m_chunk % 32 == 0, "packed epilogue needs m_chunk % 32 == 0"
+    ha = hadamard_matrix(a, jnp.float32)
+    hb = hadamard_matrix(b, jnp.float32)
+    block_rows = min(block_rows, rows)
+    kernel = functools.partial(
+        _srht_fwd_kernel, a=a, b=b, stride=stride, m_chunk=m_chunk,
+        scale=scale, pack=pack,
+    )
+    out_w = m_chunk // 32 if pack else m_chunk
+    out_dt = jnp.uint32 if pack else jnp.float32
+    return _row_blocked_call(
+        kernel, [x, d, offsets.astype(jnp.int32), ha, hb],
+        [c, c, 1], out_w, out_dt, block_rows, interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_rows", "interpret"))
+def srht_adj_pallas(
+    v: jax.Array,
+    d: jax.Array,
+    offsets: jax.Array,
+    *,
+    scale: float,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused adjoint SRHT: v (num_chunks, m_chunk) -> (num_chunks, c)."""
+    rows, m_chunk = v.shape
+    c = d.shape[-1]
+    a, b = _split_pow2(c)
+    stride = c // m_chunk
+    assert offsets.shape == (rows, 1)
+    ha = hadamard_matrix(a, jnp.float32)
+    hb = hadamard_matrix(b, jnp.float32)
+    block_rows = min(block_rows, rows)
+    kernel = functools.partial(
+        _srht_adj_kernel, a=a, b=b, stride=stride, m_chunk=m_chunk, scale=scale,
+    )
+    return _row_blocked_call(
+        kernel, [v, d, offsets.astype(jnp.int32), ha, hb],
+        [m_chunk, c, 1], c, jnp.float32, block_rows, interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "d_post", "block_rows", "interpret")
+)
+def dfht_pallas(
+    x: jax.Array,
+    d: jax.Array,
+    *,
+    scale: float,
+    d_post: bool = False,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """scale * FHT(x * d) per row (d_post=False) or scale * FHT(x) * d
+    (d_post=True — the adjoint-side ordering). x, d: (rows, c)."""
+    rows, c = x.shape
+    a, b = _split_pow2(c)
+    ha = hadamard_matrix(a, jnp.float32)
+    hb = hadamard_matrix(b, jnp.float32)
+    block_rows = min(block_rows, rows)
+    kernel = functools.partial(_dfht_kernel, a=a, b=b, scale=scale, d_post=d_post)
+    return _row_blocked_call(
+        kernel, [x, d, ha, hb], [c, c], c, jnp.float32, block_rows, interpret
+    )

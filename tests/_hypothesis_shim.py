@@ -1,0 +1,45 @@
+"""Optional-import shim for hypothesis.
+
+The property tests use hypothesis when it is installed; on hosts without it
+the suite must still *collect* cleanly (the container image does not ship
+hypothesis). Importing ``given``/``settings``/``hst`` from here instead of
+from hypothesis directly turns each property test into an explicit skip when
+the dependency is absent, while every plain test in the module keeps running.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # NB: do not functools.wraps here — copying the wrapped signature
+            # makes pytest treat the strategy kwargs as fixtures.
+            def skipped():
+                pytest.skip("hypothesis not installed")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Stub mirroring the strategies used in this test suite."""
+
+        def __getattr__(self, name):
+            def strategy(*_a, **_k):
+                return None
+
+            return strategy
+
+    hst = _Strategies()

@@ -12,6 +12,9 @@ from repro.data import synthetic as ds
 from repro.fl import comms
 from repro.models import smallnets as sn
 
+# multi-round end-to-end FL runs; deselect with -m "not slow" for tier-1 fast
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def fed_setup():
@@ -129,6 +132,43 @@ def test_fedavg_iid_sanity(fed_setup):
         lambda x, y: sn.accuracy(sn.apply_mlp(state.params, x), y)
     )(data.test_x, data.test_y)
     assert float(acc.mean()) > 0.7
+
+
+@pytest.mark.parametrize("error_feedback", [False, True])
+def test_fused_round_matches_staged_round(fed_setup, error_feedback):
+    """The restructured gather/scatter round (fused_round=True) must be
+    behaviorally identical to the seed all-K round at full participation:
+    same consensus v, same client params, same EF residuals, and the
+    potential/sign-agreement metrics agree (the fused potential is the
+    importance-normalized estimate — exact when everyone participates)."""
+    import dataclasses
+
+    data, loss_fn, init_fn = fed_setup
+    cfg_f = PFed1BSConfig(num_clients=6, participate=6, local_steps=3,
+                          m_ratio=0.05, chunk=2048,
+                          error_feedback=error_feedback)
+    cfg_s = dataclasses.replace(cfg_f, fused_round=False)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    eng_f, eng_s = PFed1BS(cfg_f, loss_fn, template), PFed1BS(cfg_s, loss_fn, template)
+    st_f, st_s = eng_f.init(init_fn, jax.random.key(2)), eng_s.init(init_fn, jax.random.key(2))
+    for r in range(3):
+        kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(11), r))
+        batches = ds.sample_round_batches(kb, data, 3, 24)
+        st_f, m_f = eng_f.round(st_f, batches, data.weights, kr)
+        st_s, m_s = eng_s.round(st_s, batches, data.weights, kr)
+    np.testing.assert_array_equal(np.asarray(st_f.v), np.asarray(st_s.v))
+    for a, b in zip(jax.tree.leaves(st_f.clients), jax.tree.leaves(st_s.clients)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    if error_feedback:
+        np.testing.assert_allclose(
+            np.asarray(st_f.ef), np.asarray(st_s.ef), atol=1e-6
+        )
+    np.testing.assert_allclose(
+        float(m_f["potential"]), float(m_s["potential"]), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(m_f["sign_agreement"]), float(m_s["sign_agreement"]), rtol=1e-6
+    )
 
 
 def test_error_feedback_variant_runs_and_is_stable(fed_setup):

@@ -12,6 +12,9 @@ from repro import configs
 from repro.models import io, layers as L, lm
 from repro.models.config import ArchConfig
 
+# per-arch smoke sweeps dominate suite wall time; deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 SEQ, BATCH = 64, 2
 
 

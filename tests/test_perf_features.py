@@ -3,6 +3,7 @@ packed cross-pod vote, grouped MoE dispatch."""
 import dataclasses
 
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
@@ -26,6 +27,7 @@ def test_seq_attention_constraints_preserve_values():
     np.testing.assert_allclose(np.asarray(ya), np.asarray(ys), rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_packed_vote_matches_f32_vote():
     """The shard_map packed vote computes the same consensus as the f32
     einsum vote (ties broken to +1 in both paths here: weights irrational)."""
@@ -62,6 +64,7 @@ def test_packed_vote_matches_f32_vote():
         np.testing.assert_array_equal(a[mask], b[mask])
 
 
+@pytest.mark.slow
 def test_round_step_executes_on_debug_mesh():
     """Concrete multi-client round: params move, consensus becomes +-1."""
     cfg = configs.get("granite-8b").reduced()

@@ -40,6 +40,7 @@ def test_param_pspecs_rank_and_divisibility(arch):
     assert n_sharded > 0, f"{arch}: nothing is model-sharded"
 
 
+@pytest.mark.slow
 def test_train_step_runs_on_debug_mesh():
     """The full lowered train step (loss+sketch+vote-ready grads) executes
     on a real (1,1) mesh with concrete values."""

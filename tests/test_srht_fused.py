@@ -1,0 +1,177 @@
+"""Fused SRHT subsystem: single-pass Pallas kernels vs staged pipeline,
+adjoint exactness vs dense materialization, custom-VJP gradient vs autodiff
+on the full client objective, and the packed uplink epilogue."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import regularizer as reg
+from repro.core import sketch as sk
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.srht import dfht_pallas, srht_adj_pallas, srht_fwd_pallas
+
+
+def _rand_operands(rows, c, m, seed=0):
+    key = jax.random.key(seed)
+    kx, kd, ko = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (rows, c))
+    d = jax.vmap(
+        lambda k: jax.random.rademacher(k, (c,), dtype=jnp.float32)
+    )(jax.random.split(kd, rows))
+    off = jax.random.randint(ko, (rows, 1), 0, c // m)
+    return x, d, off
+
+
+# -- kernel vs staged oracle -------------------------------------------------
+
+@pytest.mark.parametrize("rows,c,m", [
+    (5, 256, 26), (8, 1024, 102), (1, 4096, 409), (3, 512, 512), (11, 2048, 64),
+])
+def test_srht_fwd_kernel_matches_staged_oracle(rows, c, m):
+    x, d, off = _rand_operands(rows, c, m, seed=rows)
+    scale = float(np.sqrt(c / m))
+    got = srht_fwd_pallas(x, d, off, m_chunk=m, scale=scale, interpret=True)
+    want = ref.srht_fwd_ref(x, d, off, m_chunk=m, scale=scale)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("rows,c,m", [(5, 256, 26), (8, 1024, 102), (3, 512, 512)])
+def test_srht_adj_kernel_matches_staged_oracle(rows, c, m):
+    _, d, off = _rand_operands(rows, c, m, seed=rows + 100)
+    v = jax.random.normal(jax.random.key(rows), (rows, m))
+    scale = float(np.sqrt(c / m))
+    got = srht_adj_pallas(v, d, off, scale=scale, interpret=True)
+    want = ref.srht_adj_ref(v, d, off, scale=scale)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("d_post", [False, True])
+def test_dfht_kernel_matches_oracle(d_post):
+    x, d, _ = _rand_operands(4, 2048, 128, seed=7)
+    got = dfht_pallas(x, d, scale=1.7, d_post=d_post, interpret=True)
+    want = ref.dfht_ref(x, d, scale=1.7, d_post=d_post)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_srht_fwd_packed_epilogue_bit_exact():
+    x, d, off = _rand_operands(4, 4096, 512, seed=9)
+    z = ref.srht_fwd_ref(x, d, off, m_chunk=512, scale=1.0)
+    got = srht_fwd_pallas(x, d, off, m_chunk=512, scale=1.0, pack=True,
+                          interpret=True)
+    np.testing.assert_array_equal(got, ref.pack_ref(z))
+
+
+# -- fused dispatch vs staged sketch, both modes ------------------------------
+
+@pytest.mark.parametrize("mode,chunk,n", [
+    ("chunked", 256, 1000), ("chunked", 128, 700), ("global", 4096, 700),
+    ("global", 1024, 1024),
+])
+def test_fused_forward_matches_staged(mode, chunk, n):
+    spec = sk.make_sketch_spec(n, 0.1, chunk=chunk, mode=mode)
+    x = jax.random.normal(jax.random.key(1), (n,))
+    z_staged = sk.sketch_forward_2d_staged(spec, x, impl="ref")
+    z_fused = sk.sketch_forward_2d(spec, x, impl="pallas")
+    # float32 tolerance: matmul-FHT vs butterfly-FHT rounding differs
+    np.testing.assert_allclose(z_fused, z_staged, rtol=3e-4, atol=3e-4)
+    # same math, same kernels => ref dispatch is bit-identical to staged
+    z_ref = sk.sketch_forward_2d(spec, x, impl="ref")
+    np.testing.assert_array_equal(np.asarray(z_ref), np.asarray(z_staged))
+
+
+@pytest.mark.parametrize("mode,chunk,n", [
+    ("chunked", 256, 1000), ("global", 2048, 1500),
+])
+def test_fused_adjoint_matches_staged_and_materialization(mode, chunk, n):
+    spec = sk.make_sketch_spec(n, 0.1, chunk=chunk, mode=mode)
+    v = jax.random.normal(jax.random.key(2), (spec.m,))
+    a_staged = sk.sketch_adjoint_staged(spec, v, impl="ref")
+    a_fused = sk.sketch_adjoint(spec, v, impl="pallas")
+    np.testing.assert_allclose(a_fused, a_staged, rtol=3e-4, atol=3e-4)
+    phi = np.asarray(sk.materialize(spec))
+    np.testing.assert_allclose(a_fused, phi.T @ np.asarray(v), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("mode,chunk,n", [
+    ("chunked", 128, 1000), ("chunked", 256, 4096), ("global", 4096, 700),
+])
+def test_fused_adjoint_dot_product_identity(mode, chunk, n):
+    """<Phi w, v> == <w, Phi^T v> with both sides on the fused kernels."""
+    spec = sk.make_sketch_spec(n, 0.1, chunk=chunk, mode=mode)
+    x = jax.random.normal(jax.random.key(3), (n,))
+    v = jax.random.normal(jax.random.key(4), (spec.m,))
+    lhs = jnp.vdot(sk.sketch_forward(spec, x, impl="pallas"), v)
+    rhs = jnp.vdot(x, sk.sketch_adjoint(spec, v, impl="pallas"))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3)
+
+
+def test_sketch_forward_packed_matches_pack_of_forward():
+    spec = sk.make_sketch_spec(2048, 0.25, chunk=512, mode="chunked")
+    assert spec.m_chunk % 32 == 0
+    x = jax.random.normal(jax.random.key(5), (spec.n,))
+    z = sk.sketch_forward_2d(spec, x, impl="ref")
+    for impl in ("ref", "pallas"):
+        got = sk.sketch_forward_packed(spec, x, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.pack_ref(z)))
+
+
+# -- custom VJP ---------------------------------------------------------------
+
+def test_custom_vjp_matches_autodiff_on_client_objective():
+    """grad of the full smoothed client objective (Eq. 6): hand-written
+    adjoint VJP vs autodiff through the staged (no-custom-VJP) pipeline."""
+    spec = sk.make_sketch_spec(500, 0.2, chunk=128)
+    gamma, lam, mu = 500.0, 5e-4, 1e-5
+    w0 = jax.random.normal(jax.random.key(6), (spec.n,))
+    tgt = jax.random.normal(jax.random.key(7), (spec.n,))
+    v = jnp.sign(jax.random.normal(jax.random.key(8), (spec.m,)))
+
+    def objective(fwd):
+        def f(w):
+            task = 0.5 * jnp.sum((w - tgt) ** 2)
+            z = fwd(spec, w)
+            return task + lam * reg.smoothed_reg(v, z, gamma) + 0.5 * mu * jnp.sum(w * w)
+        return f
+
+    g_vjp = jax.grad(objective(sk.sketch_forward))(w0)
+    g_auto = jax.grad(objective(sk.sketch_forward_staged))(w0)
+    np.testing.assert_allclose(g_vjp, g_auto, rtol=1e-4, atol=1e-6)
+
+
+def test_custom_vjp_under_vmap():
+    spec = sk.make_sketch_spec(300, 0.2, chunk=128)
+    v = jnp.sign(jax.random.normal(jax.random.key(9), (spec.m,)))
+    W = jax.random.normal(jax.random.key(10), (4, spec.n))
+    f = lambda w: reg.smoothed_reg(v, sk.sketch_forward(spec, w), 100.0)
+    got = jax.vmap(jax.grad(f))(W)
+    want = jax.vmap(jax.grad(lambda w: reg.smoothed_reg(
+        v, sk.sketch_forward_staged(spec, w), 100.0)))(W)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+# -- ops padding paths --------------------------------------------------------
+
+@pytest.mark.parametrize("rows,words", [(3, 7), (5, 600), (1, 130), (9, 513)])
+def test_pack_unpack_pallas_arbitrary_shapes(rows, words):
+    """The Pallas pack path pads internally — no silent ref fallback for
+    rows % 8 != 0 or unaligned word counts."""
+    x = jax.random.normal(jax.random.key(rows * 1000 + words), (rows, words * 32))
+    np.testing.assert_array_equal(
+        kops.pack_signs(x, impl="pallas"), ref.pack_ref(x)
+    )
+    w = ref.pack_ref(x)
+    np.testing.assert_allclose(
+        kops.unpack_signs(w, impl="pallas"), ref.unpack_ref(w)
+    )
+
+
+def test_vote_packed_pallas_arbitrary_width():
+    z = jnp.sign(jax.random.normal(jax.random.key(11), (5, 300 * 32)))
+    z = jnp.where(z == 0, 1.0, z)
+    p = jnp.arange(1, 6, dtype=jnp.float32) / 15.0
+    packed = ref.pack_ref(z)
+    np.testing.assert_array_equal(
+        kops.vote_packed(packed, p, impl="pallas"), ref.vote_ref(packed, p)
+    )
