@@ -1,0 +1,191 @@
+"""Round-scaling benchmark for the sharded federation executor.
+
+Grid over (sampled clients S) x (fed mesh size F): one full
+`PFed1BS.round` through the shard_map executor (launch/fedexec.py,
+DESIGN.md §6) per cell, best-observed (minimum) per-round wall time over
+several timed rounds — see bench_cell for why min, not median. Emits
+BENCH_round_sharded.json at the repo root (and a copy under
+experiments/bench/) with, per mesh size, the time ratio when S doubles —
+the acceptance signal is that this ratio stays below 2 (sub-linear
+scaling: the executor amortizes fixed round overhead and parallelizes the
+client shards) on at least two mesh sizes.
+
+Multi-device federations are SIMULATED on the CPU host: XLA only exposes
+multiple host devices if --xla_force_host_platform_device_count is set
+before jax is imported, so this script re-spawns itself as a subprocess
+with that flag baked into XLA_FLAGS (device count = the largest mesh in
+the grid, constant across all cells so every cell runs on the identical
+backend).
+
+Run:  PYTHONPATH=src python -m benchmarks.round_sharded_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+_CHILD_ENV = "_ROUND_SHARDED_BENCH_CHILD"
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--rounds", type=int, default=0, help="0 => auto")
+    return ap.parse_args(argv)
+
+
+def grid(fast: bool):
+    mesh_sizes = [1, 2] if fast else [1, 2, 4]
+    clients = [4, 8] if fast else [4, 8, 16, 32]
+    return mesh_sizes, clients
+
+
+def _respawn_with_devices(n: int) -> None:
+    """Re-exec this module with the forced host device count (must land in
+    XLA_FLAGS before the child imports jax)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}"
+    ).strip()
+    env[_CHILD_ENV] = "1"
+    ret = subprocess.call(
+        [sys.executable, "-m", "benchmarks.round_sharded_bench", *sys.argv[1:]],
+        env=env,
+    )
+    sys.exit(ret)
+
+
+def bench_cell(mesh_size: int, s: int, *, rounds: int):
+    """Best-observed per-round us for one (mesh, clients) cell.
+
+    Min, not median: the forced-host-device simulation oversubscribes the
+    container's cores, so wall-clock swings multiples between rounds; the
+    minimum over `rounds` timed rounds approximates the uncontended round
+    time (same reasoning as sketch_bench's interleaved-median, but robust
+    to a grid too large to interleave)."""
+    import jax
+
+    from benchmarks.fl_bench import make_task
+    from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+    from repro.data import synthetic as ds
+
+    local_steps, batch = 2, 16
+    data, init_fn, loss_fn, _ = make_task(num_clients=s, hidden=32)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    cfg = PFed1BSConfig(
+        num_clients=s, participate=s, local_steps=local_steps, chunk=4096,
+        sharded_round=True, fed_shards=mesh_size,
+        diagnostics=False,            # the production wire path
+    )
+    eng = PFed1BS(cfg, loss_fn, template)
+    state = eng.init(init_fn, jax.random.key(2))
+
+    batch_sets, keys = [], []
+    for r in range(rounds + 2):
+        kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(4), r))
+        batch_sets.append(jax.block_until_ready(
+            ds.sample_round_batches(kb, data, local_steps, batch)))
+        keys.append(kr)
+
+    # warmup: compile + two executed rounds (the first post-compile round
+    # still pays allocator/thread-pool startup)
+    for r in range(2):
+        state, m = eng.round(state, batch_sets[r], data.weights, keys[r])
+        jax.block_until_ready(m["task_loss"])
+    times = []
+    for r in range(2, rounds + 2):
+        t0 = time.perf_counter()
+        state, m = eng.round(state, batch_sets[r], data.weights, keys[r])
+        jax.block_until_ready(m["task_loss"])
+        times.append(time.perf_counter() - t0)
+    return min(times) * 1e6  # us
+
+
+def run_grid(args):
+    import jax
+
+    mesh_sizes, clients = grid(args.fast)
+    rounds = args.rounds or (3 if args.fast else 8)
+    cells = []
+    for f in mesh_sizes:
+        for s in clients:
+            if s % f:
+                continue
+            us = bench_cell(f, s, rounds=rounds)
+            cells.append({"mesh": f, "clients": s, "round_us": us})
+            print(f"round_sharded/mesh={f}/S={s},{us:.1f},", flush=True)
+
+    # scaling: per-doubling ratios (detail) + the endpoint criterion —
+    # sub-linear iff total time growth < total client growth over the whole
+    # S range (per-doubling ratios alone are too noisy on a contended host)
+    scaling = {}
+    sublinear = []
+    for f in mesh_sizes:
+        row = {c["clients"]: c["round_us"] for c in cells if c["mesh"] == f}
+        if len(row) < 2:
+            continue
+        ratios = {}
+        for s in sorted(row):
+            if 2 * s in row:
+                ratios[f"S={s}->S={2 * s}"] = row[2 * s] / row[s]
+        lo, hi = min(row), max(row)
+        growth = row[hi] / row[lo]
+        scaling[f"mesh={f}"] = {
+            "doubling_ratios": ratios,
+            "time_growth": growth,          # time(S_max) / time(S_min)
+            "client_growth": hi / lo,       # S_max / S_min
+            "sublinear": growth < hi / lo,
+        }
+        if growth < hi / lo:
+            sublinear.append(f)
+    return {
+        "fast": args.fast,
+        "device_count": len(jax.devices()),
+        "rounds_timed": rounds,
+        "local_steps": 2,
+        "grid": cells,
+        "scaling": scaling,
+        "sublinear_mesh_sizes": sublinear,
+    }
+
+
+def write_artifacts(results: dict, out_path: str | None = None) -> str:
+    """--fast smoke runs land in BENCH_round_sharded.fast.json and never
+    touch the canonical artifact (mirrors sketch_bench.write_artifacts)."""
+    fast = bool(results.get("fast"))
+    if out_path is None:
+        out_path = (
+            "BENCH_round_sharded.fast.json" if fast else "BENCH_round_sharded.json"
+        )
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    if not fast:
+        os.makedirs("experiments/bench", exist_ok=True)
+        with open("experiments/bench/BENCH_round_sharded.json", "w") as f:
+            json.dump(results, f, indent=2)
+    return out_path
+
+
+def main() -> None:
+    args = parse_args()
+    mesh_sizes, _ = grid(args.fast)
+    if os.environ.get(_CHILD_ENV) != "1":
+        _respawn_with_devices(max(mesh_sizes))
+    results = run_grid(args)
+    for f, rec in results["scaling"].items():
+        print(f"# {f}: S x{rec['client_growth']:.0f} -> time "
+              f"x{rec['time_growth']:.2f} "
+              f"({'sub' if rec['sublinear'] else 'SUPER'}-linear)")
+    print(f"# sub-linear on mesh sizes: {results['sublinear_mesh_sizes']}")
+    out_path = write_artifacts(results, args.out)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

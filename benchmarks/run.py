@@ -13,6 +13,9 @@ same protocols); the full-scale numbers live in the dry-run roofline.
   sensitivity     paper §A.4: lambda/mu/gamma grids
   kernels         Pallas kernel ops: sketch fwd/adjoint, pack/vote
   sketch          fused vs staged SRHT + round hot path (BENCH_sketch.json)
+  round_sharded   shard_map executor scaling: clients x fed-mesh grid
+                  (BENCH_round_sharded.json; runs in a subprocess because
+                  the simulated mesh needs XLA_FLAGS set before jax import)
   roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
@@ -262,6 +265,37 @@ def bench_sketch(fast=False):
     return out
 
 
+def bench_round_sharded(fast=False):
+    """Sharded-executor round scaling — emits BENCH_round_sharded.json.
+
+    Delegates to benchmarks/round_sharded_bench.py in a fresh subprocess:
+    the multi-device federation is simulated with
+    --xla_force_host_platform_device_count, which must be in XLA_FLAGS
+    before jax is imported (and this process imported jax long ago)."""
+    import subprocess
+    import sys
+
+    cmd = [sys.executable, "-m", "benchmarks.round_sharded_bench"]
+    if fast:
+        cmd.append("--fast")
+    res = subprocess.run(cmd, capture_output=True, text=True)
+    if res.returncode != 0:
+        print(res.stdout, flush=True)
+        print(res.stderr, flush=True)
+        raise RuntimeError("round_sharded_bench failed")
+    for line in res.stdout.splitlines():   # scaling summary lines only;
+        if line.startswith("#"):           # grid rows are emit()ed below
+            print(line, flush=True)
+    path = ("BENCH_round_sharded.fast.json" if fast
+            else "BENCH_round_sharded.json")
+    out = json.load(open(path))
+    for rec in out["grid"]:
+        emit(f"round_sharded/mesh={rec['mesh']}/S={rec['clients']}",
+             rec["round_us"],
+             f"devices={out['device_count']}")
+    return out
+
+
 BENCHES = {
     "table2": bench_table2,
     "fig3_fig4": bench_fig3_fig4,
@@ -272,6 +306,7 @@ BENCHES = {
     "sensitivity": bench_sensitivity,
     "kernels": bench_kernels,
     "sketch": bench_sketch,
+    "round_sharded": bench_round_sharded,
     "roofline": bench_roofline,
 }
 

@@ -24,8 +24,23 @@ def majority_vote(zs: jax.Array, p: jax.Array) -> jax.Array:
 
 
 def majority_vote_packed(words: jax.Array, p: jax.Array) -> jax.Array:
-    """Vote directly on packed uint32 sketches (the wire format)."""
+    """Vote directly on packed uint32 sketches (the wire format).
+
+    words: (K, W) uint32; p: (K,) float weights -> (W,) uint32, tie -> +1.
+    """
     return kops.vote_packed(words, p)
+
+
+def majority_vote_popcount(words: jax.Array) -> jax.Array:
+    """Uniform-weight vote on packed words, fully word-level (DESIGN.md §6.2).
+
+    The p_k = 1/K specialization of Lemma 1: consensus bit = at least
+    ceil(K/2) of the K clients set it (tie -> +1). Integer-exact — unlike
+    the float paths, an exact tie can never be perturbed by rounding.
+
+    words: (K, W) uint32 -> (W,) uint32 packed consensus.
+    """
+    return kops.vote_popcount(words)
 
 
 def server_objective(v: jax.Array, zs: jax.Array, p: jax.Array) -> jax.Array:

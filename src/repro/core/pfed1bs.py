@@ -20,6 +20,20 @@ staged seed path updated and sketched all K clients and re-sketched every
 one of them inside the potential). The seed round is preserved behind
 `PFed1BSConfig(fused_round=False)` for benchmarking
 (benchmarks/sketch_bench.py) and parity tests.
+
+Executors (DESIGN.md §6): with `sharded_round=True` the round runs through
+the shard_map federation executor (launch/fedexec.py): sampled clients are
+laid out along a 1-D `fed` mesh axis and the federation axis is crossed
+only by packed uint32 sign words (uplink) and the broadcast consensus
+(downlink). On a 1-device mesh at full participation the executor is
+bit-exact with the fused round (tests/test_fedexec.py).
+
+Sketch layouts: `layout="flat"` is the paper-literal global ravel of the
+client pytree into w in R^n; `layout="leaf"` routes through
+core/treesketch.py — every leaf gets its own block-diagonal SRHT (no
+global ravel, so a sharded model never all-gathers its parameters just to
+be sketched). The two layouts are different (equally valid) sketch
+operators; see tests/test_treesketch.py for the parity contract.
 """
 from __future__ import annotations
 
@@ -32,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core import consensus, flatten, regularizer
 from repro.core import sketch as sk
+from repro.core import treesketch as ts
 from repro.kernels import ops as kops
 
 
@@ -51,6 +66,26 @@ class PFed1BSConfig:
     fused_round: bool = True       # gather/scatter round with one sketch per
     #                                client per round (DESIGN.md §4); False
     #                                reproduces the seed's all-K staged round.
+    # --- round executor (DESIGN.md §6) ---
+    sharded_round: bool = False    # run the round through the shard_map
+    #                                executor (launch/fedexec.py): clients on
+    #                                a `fed` mesh axis, packed-bits wire path.
+    fed_shards: int = 1            # size of the `fed` mesh axis (must divide
+    #                                `participate`; needs that many devices).
+    layout: str = "flat"           # "flat": sketch the global ravel (paper-
+    #                                literal); "leaf": per-leaf block-diagonal
+    #                                SRHT via core/treesketch.py (no global
+    #                                ravel — collective-free on sharded models).
+    vote: str = "exact"            # "exact": server unpacks the wire words and
+    #                                votes sign(sum p_k z_k) (Lemma 1, ties->0,
+    #                                bit-exact vs the fused round); "popcount":
+    #                                word-level integer majority (uniform p_k,
+    #                                ties->+1, never unpacks — DESIGN.md §6.2).
+    diagnostics: bool = True       # compute potential/sign-agreement metrics.
+    #                                False + no EF lets the sharded executor
+    #                                emit uplink words straight from the packed
+    #                                kernel epilogue (float sketches never hit
+    #                                HBM) — the production wire path.
     # --- beyond-paper extension ---
     error_feedback: bool = False   # EF residual on the one-bit sketch:
     #                                z_k = sign(Phi w_k + e_k),
@@ -67,16 +102,60 @@ class FLState(NamedTuple):
 
 
 class PFed1BS:
-    """Engine binding the algorithm to a task (loss over params+batch)."""
+    """Engine binding Algorithm 1 to a task (loss over params+batch).
 
-    def __init__(self, cfg: PFed1BSConfig, loss_fn: Callable, params_template):
+    Public surface:
+      __init__(cfg, loss_fn, params_template, mesh=None) — `params_template`
+        is a pytree of arrays/ShapeDtypeStructs defining the per-client model;
+        `mesh` optionally overrides the executor's `fed` mesh (a 1-D mesh with
+        a "fed" axis; default: launch.mesh.make_fed_mesh(cfg.fed_shards)).
+      init(init_params_fn, key) -> FLState — stacked client params (leading
+        axis K), consensus v^0 = 0 in float32 (m,), EF residuals (K, m) when
+        enabled.
+      round(state, batches, weights, key) -> (state', metrics) — one
+        communication round (Alg. 1). batches: (K, R, B, ...) pytree;
+        weights: (K,) float p_k. Dispatches to the shard_map executor
+        (cfg.sharded_round), the fused gather/scatter round (cfg.fused_round,
+        default) or the seed staged round.
+
+    `self.m` is the sketch dimension actually produced (uplink bits per
+    client); `self.spec` is the flat SketchSpec (None under layout="leaf",
+    where `self.tspec` is the TreeSketchSpec instead).
+    """
+
+    def __init__(self, cfg: PFed1BSConfig, loss_fn: Callable, params_template,
+                 mesh=None):
+        assert cfg.layout in ("flat", "leaf"), cfg.layout
+        assert cfg.vote in ("exact", "popcount"), cfg.vote
         self.cfg = cfg
         self.loss_fn = loss_fn     # loss_fn(params, batch) -> scalar
         self.n = flatten.tree_size(params_template)
-        self.spec = sk.make_sketch_spec(
-            self.n, cfg.m_ratio, chunk=cfg.chunk, seed=cfg.sketch_seed,
-            mode=cfg.sketch_mode,
-        )
+        if cfg.layout == "leaf":
+            self.spec = None
+            self.tspec = ts.make_tree_sketch_spec(
+                params_template, cfg.m_ratio, chunk=cfg.chunk,
+                seed=cfg.sketch_seed,
+            )
+            self.m = self.tspec.m
+        else:
+            self.spec = sk.make_sketch_spec(
+                self.n, cfg.m_ratio, chunk=cfg.chunk, seed=cfg.sketch_seed,
+                mode=cfg.sketch_mode,
+            )
+            self.tspec = None
+            self.m = self.spec.m
+        self.fed_mesh = None
+        if cfg.sharded_round:
+            assert cfg.participate % cfg.fed_shards == 0, (
+                f"participate={cfg.participate} must divide evenly over "
+                f"fed_shards={cfg.fed_shards}"
+            )
+            if mesh is None:
+                from repro.launch.mesh import make_fed_mesh
+
+                mesh = make_fed_mesh(cfg.fed_shards)
+            assert mesh.shape.get("fed") == cfg.fed_shards, mesh.shape
+            self.fed_mesh = mesh
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -84,13 +163,13 @@ class PFed1BS:
         keys = jax.random.split(key, self.cfg.num_clients)
         clients = jax.vmap(init_params_fn)(keys)
         ef = (
-            jnp.zeros((self.cfg.num_clients, self.spec.m), jnp.float32)
+            jnp.zeros((self.cfg.num_clients, self.m), jnp.float32)
             if self.cfg.error_feedback
             else None
         )
         return FLState(
             clients=clients,
-            v=jnp.zeros((self.spec.m,), jnp.float32),   # v^0 = 0 (Alg. 1)
+            v=jnp.zeros((self.m,), jnp.float32),        # v^0 = 0 (Alg. 1)
             round=jnp.int32(0),
             ef=ef,
         )
@@ -98,15 +177,28 @@ class PFed1BS:
     # -- client side ---------------------------------------------------------
 
     def _client_update(self, params, batches, v):
-        """R local steps of Eq. 11; batches: (R, B, ...) pytree."""
+        """R local SGD steps on the smoothed objective F~_k (Eq. 6).
+
+        params: one client's pytree; batches: (R, B, ...) pytree; v: (m,)
+        consensus. Gradient per Eq. 11 — the sketch's custom VJP makes each
+        step one fused forward + one fused adjoint. Returns (params', mean
+        task loss over the R steps).
+        """
         cfg = self.cfg
 
         def objective(p, batch):
             task = self.loss_fn(p, batch)
-            w = flatten.ravel(p)
-            z = sk.sketch_forward(self.spec, w)
+            z = self._sketch_client(p)
             reg = regularizer.smoothed_reg(v, z, cfg.gamma)
-            l2 = 0.5 * jnp.sum(w * w)
+            if cfg.layout == "leaf":
+                # no global ravel: the l2 term sums per leaf (same value)
+                l2 = 0.5 * sum(
+                    jnp.sum(jnp.square(l.astype(jnp.float32)))
+                    for l in jax.tree.leaves(p)
+                )
+            else:
+                w = flatten.ravel(p)
+                l2 = 0.5 * jnp.sum(w * w)
             return task + cfg.lam * reg + cfg.mu * l2, task
 
         def step(p, batch):
@@ -118,14 +210,64 @@ class PFed1BS:
         return params, jnp.mean(task_losses)
 
     def _sketch_client(self, params):
+        """z = Phi w_k for one client: (m,) float32. layout="flat" sketches
+        the global ravel (Eq. 15-18); layout="leaf" concatenates the
+        per-leaf block-diagonal sketches (treesketch leaf order)."""
+        if self.cfg.layout == "leaf":
+            return ts.flat_view(
+                self.tspec, ts.tree_sketch_forward(self.tspec, params)
+            )
         return sk.sketch_forward(self.spec, flatten.ravel(params))
+
+    def _sketch_client_packed(self, params):
+        """One client's uplink wire words: (ceil(m/32),) uint32, bit = z >= 0.
+
+        When the flat chunked spec supports it (m_chunk % 32 == 0), the words
+        come straight from the fused kernel's pack epilogue — the float
+        sketch never round-trips HBM. Otherwise: float sketch, sign, pack
+        (identical bits either way; tests/test_srht_fused.py pins that)."""
+        if (
+            self.cfg.layout == "flat"
+            and self.spec.mode != "global"
+            and self.spec.m_chunk % 32 == 0
+        ):
+            return sk.sketch_forward_packed(
+                self.spec, flatten.ravel(params)
+            ).reshape(-1)
+        z = self._sketch_client(params)
+        return self._pack_uplink(jnp.sign(z) + (z == 0))
+
+    def _pack_uplink(self, signs):
+        """Pack {-1,+1} signs into the uplink wire words, zero-padding the
+        last axis up to a 32-bit word boundary (pad bits pack as +1).
+        (..., m) float -> (..., ceil(m/32)) uint32."""
+        pad = (-self.m) % 32
+        widths = [(0, 0)] * (signs.ndim - 1) + [(0, pad)]
+        return kops.pack_signs(jnp.pad(signs, widths))
+
+    def _ef_quantize(self, zs, ef):
+        """EF sign-quantization (the config's error_feedback formulas):
+        corrected = Phi w + e; z = sign(corrected); e' = corrected -
+        alpha * z with the l1-optimal alpha = mean|corrected| per client.
+        zs, ef: (rows, m) float32 -> (corrected, signs, new_ef) same shape.
+        Single source of truth for all three round executors."""
+        corrected = zs + ef
+        signs = jnp.sign(corrected) + (corrected == 0)
+        alpha = jnp.mean(jnp.abs(corrected), axis=1, keepdims=True)
+        return corrected, signs, corrected - alpha * signs
 
     # -- one communication round ----------------------------------------------
 
     @functools.partial(jax.jit, static_argnums=0)
     def round(self, state: FLState, batches, weights, key):
-        """batches: (K, R, B, ...) pytree; weights: (K,) p_k. Returns
-        (state', metrics)."""
+        """One round of Algorithm 1: batches (K, R, B, ...) pytree, weights
+        (K,) p_k. Returns (state', metrics). Executor dispatch order:
+        sharded_round (shard_map, DESIGN.md §6) > fused_round (§4) > staged
+        seed round."""
+        if self.cfg.sharded_round:
+            from repro.launch import fedexec  # trace-time import; no cycle
+
+            return fedexec.sharded_round(self, state, batches, weights, key)
         if self.cfg.fused_round:
             return self._round_fused(state, batches, weights, key)
         return self._round_staged(state, batches, weights, key)
@@ -159,15 +301,12 @@ class PFed1BS:
         zs_phi = zs            # pre-EF sketches Phi w (the Eq. 28 potential)
         new_ef = state.ef
         if cfg.error_feedback:
-            # EF residual: quantize (Phi w + e); e <- (Phi w + e) - alpha*z.
             # Only sampled clients transmit => only their residuals flush.
-            zs = zs + state.ef[idx]
-            signs_ef = jnp.sign(zs) + (zs == 0)
-            alpha = jnp.mean(jnp.abs(zs), axis=1, keepdims=True)
-            new_ef = state.ef.at[idx].set(zs - alpha * signs_ef)
-        signs = jnp.sign(zs) + (zs == 0)                       # {-1,+1}
-        pad = (-self.spec.m) % 32
-        packed = kops.pack_signs(jnp.pad(signs, ((0, 0), (0, pad))))
+            zs, signs, ef_rows = self._ef_quantize(zs, state.ef[idx])
+            new_ef = state.ef.at[idx].set(ef_rows)
+        else:
+            signs = jnp.sign(zs) + (zs == 0)                   # {-1,+1}
+        packed = self._pack_uplink(signs)
 
         # server: weighted majority vote over the sampled clients (Lemma 1).
         # Vote in natural client order with zero weights for non-sampled
@@ -176,7 +315,7 @@ class PFed1BS:
         # round would diverge from the staged one on the algorithm's core
         # discrete object.
         w_s = weights[idx]
-        signs_full = jnp.zeros((k, self.spec.m), jnp.float32).at[idx].set(signs)
+        signs_full = jnp.zeros((k, self.m), jnp.float32).at[idx].set(signs)
         v_new = consensus.majority_vote(
             signs_full, jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
         )
@@ -188,8 +327,8 @@ class PFed1BS:
         metrics = {
             "task_loss": jnp.sum(task_loss * w_s) / w_norm,
             "potential": potential,
-            "uplink_bits": jnp.float32(cfg.participate * self.spec.m),
-            "downlink_bits": jnp.float32(self.spec.m),
+            "uplink_bits": jnp.float32(cfg.participate * self.m),
+            "downlink_bits": jnp.float32(self.m),
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),
         }
@@ -240,15 +379,11 @@ class PFed1BS:
         zs = jax.vmap(self._sketch_client)(clients)            # (K, m)
         new_ef = state.ef
         if cfg.error_feedback:
-            corrected = zs + state.ef
-            signs_ef = jnp.sign(corrected) + (corrected == 0)
-            alpha = jnp.mean(jnp.abs(corrected), axis=1, keepdims=True)
-            updated = corrected - alpha * signs_ef
+            corrected, _, updated = self._ef_quantize(zs, state.ef)
             new_ef = jnp.where(mask[:, None] > 0, updated, state.ef)
             zs = jnp.where(mask[:, None] > 0, corrected, zs)
         signs = jnp.sign(zs) + (zs == 0)                       # {-1,+1}
-        pad = (-self.spec.m) % 32
-        packed = kops.pack_signs(jnp.pad(signs, ((0, 0), (0, pad))))
+        packed = self._pack_uplink(signs)
 
         pw = weights * mask
         v_new = consensus.majority_vote(signs, pw)
@@ -257,8 +392,8 @@ class PFed1BS:
         metrics = {
             "task_loss": jnp.sum(task_loss * weights * mask) / jnp.maximum(jnp.sum(weights * mask), 1e-9),
             "potential": potential,
-            "uplink_bits": jnp.float32(cfg.participate * self.spec.m),
-            "downlink_bits": jnp.float32(self.spec.m),
+            "uplink_bits": jnp.float32(cfg.participate * self.m),
+            "downlink_bits": jnp.float32(self.m),
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),
         }
@@ -273,7 +408,7 @@ class PFed1BS:
 
         def fk(params, task):
             w = flatten.ravel(params)
-            z = sk.sketch_forward(self.spec, w)
+            z = self._sketch_client(params)  # layout-aware (flat or leaf)
             return (
                 task
                 + cfg.lam * regularizer.smoothed_reg(v, z, cfg.gamma)

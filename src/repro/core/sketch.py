@@ -259,8 +259,10 @@ _sketch_forward_2d.defvjp(_sketch_forward_2d_fwd, _sketch_forward_2d_bwd)
 
 @functools.partial(jax.jit, static_argnames=("spec", "impl"))
 def sketch_forward_2d(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
-    """z = Phi @ w in block layout: (n,) -> (num_chunks, m_chunk) float32.
+    """z = Phi @ w (Eq. 15-18): (n,) float -> (num_chunks, m_chunk) float32.
 
+    Carries the custom VJP whose backward pass is the fused adjoint, so
+    autodiff through this is exactly Eq. 11's Phi^T cotangent.
     The 2-D layout mirrors chunk ownership: when w's elements are laid out
     sharded-axis-major, chunk rows (axis 0) are device-local, so the sketch
     and everything downstream of it (consensus v, tanh, vote) shard on
@@ -271,7 +273,7 @@ def sketch_forward_2d(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax
 
 
 def sketch_forward(spec: SketchSpec, w: jax.Array, impl: str = "auto") -> jax.Array:
-    """z = Phi @ w, matrix-free. w: (n,) -> z: (m,) float32."""
+    """z = Phi @ w (Eq. 15-18), matrix-free. w: (n,) float -> (m,) float32."""
     return sketch_forward_2d(spec, w, impl=impl).reshape(spec.m)
 
 
@@ -307,7 +309,9 @@ def sketch_forward_packed(
 
 @functools.partial(jax.jit, static_argnames=("spec", "impl"))
 def sketch_adjoint(spec: SketchSpec, v: jax.Array, impl: str = "auto") -> jax.Array:
-    """w = Phi^T @ v, matrix-free. v: (m,) or (num_chunks, m_chunk) -> (n,)."""
+    """w = Phi^T @ v, matrix-free — the adjoint of Eq. 15-18 (the operator
+    every Eq. 11 gradient applies). v: (m,) or (num_chunks, m_chunk) float
+    -> (n,) float32."""
     return _adjoint_2d(spec, v, impl)
 
 

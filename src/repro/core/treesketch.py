@@ -49,9 +49,17 @@ def make_tree_sketch_spec(
     template, m_ratio: float = 0.1, *, chunk: int = 16384, seed: int = 0,
     major_axes=None,
 ) -> TreeSketchSpec:
-    """template: pytree of arrays/ShapeDtypeStructs. major_axes: optional
-    matching pytree of int|None giving the axis to move outermost (the
-    tensor-parallel-sharded axis) before flattening each leaf."""
+    """Build the per-leaf block-diagonal SRHT spec (Eq. 15-18 per leaf).
+
+    template: pytree of arrays/ShapeDtypeStructs (shapes+dtypes only are
+    read). Each leaf gets an independent chunked SketchSpec (chunk size
+    min(chunk, next_pow2(leaf size)), m_i ~= m_ratio * leaf size) seeded by
+    crc32(leaf path) ^ seed, so leaf sketches are independent and stable
+    under tree reordering. major_axes: optional matching pytree of
+    int|-1 giving the axis to move outermost (the tensor-parallel-sharded
+    axis) before flattening each leaf — a fixed element permutation, which
+    the SRHT analysis is invariant to, chosen so FHT chunks never straddle
+    device shards."""
     majors = None if major_axes is None else _leaf_paths(major_axes)
     entries = []
     off = 0
@@ -88,9 +96,13 @@ def _from_major(flat, shape, major):
 
 
 def tree_sketch_forward(tspec: TreeSketchSpec, tree) -> dict:
-    """z = Phi @ ravel(tree), leaf-block-diagonal. Returns a dict
-    {leaf_path: (num_chunks, m_chunk)} — each sketch block stays sharded
-    exactly like its source leaf (no concat => no resharding)."""
+    """z = Phi @ ravel(tree) with Phi leaf-block-diagonal (Eq. 15-18).
+
+    tree: pytree matching the spec's template. Returns a dict
+    {leaf_path: (num_chunks, m_chunk) float32} — each sketch block stays
+    sharded exactly like its source leaf (no concat => no resharding).
+    Differentiable; gradients flow through sketch_forward_2d's custom VJP,
+    so d/dw of the Eq. 5 regularizer is the Eq. 11 adjoint per leaf."""
     leaves = _leaf_paths(tree)
     out = {}
     for (path, spec, _, major), (path2, leaf) in zip(tspec.entries, leaves):
@@ -100,7 +112,11 @@ def tree_sketch_forward(tspec: TreeSketchSpec, tree) -> dict:
 
 
 def tree_sketch_adjoint(tspec: TreeSketchSpec, v: dict, template):
-    """Phi^T v (v: dict of per-leaf blocks) back into template structure."""
+    """w = Phi^T v, the exact adjoint of tree_sketch_forward (Eq. 7/11).
+
+    v: dict {leaf_path: (num_chunks, m_chunk) float} as produced by
+    tree_sketch_forward. Returns a pytree shaped/dtyped like template
+    (values cast back to each leaf dtype)."""
     flat, _ = jax.tree_util.tree_flatten_with_path(template)
     outs = []
     for (path, spec, off, major), (p2, leaf) in zip(tspec.entries, flat):
@@ -112,8 +128,10 @@ def tree_sketch_adjoint(tspec: TreeSketchSpec, v: dict, template):
 
 
 def flat_view(tspec: TreeSketchSpec, z: dict) -> jax.Array:
-    """Concatenate a per-leaf sketch dict into one (m,) vector (small-model
-    paths / tests only — this DOES reshard)."""
+    """Concatenate a per-leaf sketch dict into one (m,) float32 vector in
+    spec entry order (the layout PFed1BS's consensus/EF buffers use).
+    Cheap for single-host clients; on a sharded model this DOES reshard —
+    keep the dict layout there (launch/steps.py does)."""
     return jnp.concatenate([z[path].reshape(-1) for path, *_ in tspec.entries])
 
 
@@ -126,11 +144,13 @@ def zeros_like_sketch(tspec: TreeSketchSpec) -> dict:
 
 
 def tree_reg_value_and_grad(tspec, tree, v: dict, gamma, lam, mu):
-    """lam*g~(v, Phi w) + (mu/2)||w||^2 and its gradient as a pytree.
+    """lam * g~(v, Phi w) + (mu/2)||w||^2 (Eq. 5-6 terms) and its gradient.
 
-    Uses the explicit adjoint (Eq. 7) rather than autodiff so the backward
-    FHT reuses the forward's block structure exactly. v is a per-leaf block
-    dict (same layout as tree_sketch_forward's output)."""
+    Uses the explicit adjoint (Eq. 7: grad = lam * Phi^T(tanh(gamma Phi w)
+    - v) + mu * w) rather than autodiff so the backward FHT reuses the
+    forward's block structure exactly. v: per-leaf block dict (the
+    tree_sketch_forward layout). Returns (scalar float32 value, gradient
+    pytree shaped like `tree`)."""
     from repro.core import regularizer as reg
 
     z = tree_sketch_forward(tspec, tree)

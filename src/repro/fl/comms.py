@@ -1,15 +1,39 @@
 """Bidirectional communication-cost accounting (paper Table 2 cost model).
 
-Per-round bits between the server and all S participating clients:
+Per-round bits between the server and the S participating clients, with
+n = model parameters, m = sketch rows, T = `num_tensors`:
 
-  FedAvg    up S*32n, down S*32n
-  OBDA      up S*n,   down S*n        (1-bit both directions)
-  OBCSAA    up S*(m+32), down S*32n   (1-bit CS uplink + amplitude scalar)
-  zSignFed  up S*(n+32), down S*32n
-  EDEN      up S*(n+32), down S*32n
-  FedBAT    up S*(n+32*T), down S*32n (T = #tensors, one alpha each)
-  pFed1BS   up S*m,   down m          (one m-bit sketch each way; the
-                                       consensus is broadcast once)
+  algorithm   uplink (client->server)   downlink (server->client)
+  ---------   -----------------------   -------------------------
+  FedAvg      S * 32n                   S * 32n      (fp32 both ways)
+  OBDA        S * n                     S * n        (1 bit both ways)
+  OBCSAA      S * (m + 32)              S * 32n      (1-bit CS sketch +
+                                                      one fp32 amplitude)
+  zSignFed    S * (n + 32)              S * 32n      (sign vector + one
+                                                      fp32 scale)
+  EDEN        S * (n + 32)              S * 32n      (1-bit lattice code +
+                                                      one fp32 scale)
+  FedBAT      S * (n + 32*T)            S * 32n      (binarized tensors,
+                                                      one fp32 alpha EACH)
+  pFed1BS     S * m                     m            (one m-bit sketch up
+                                                      per client; ONE m-bit
+                                                      consensus broadcast)
+
+`num_tensors` semantics: FedBAT binarizes each parameter tensor separately
+and ships one fp32 scale alpha per tensor, so its uplink carries 32 bits
+per tensor per client; callers should pass the leaf count of the model
+pytree (benchmarks/fl_bench.py passes len(jax.tree.leaves(template))).
+Every other algorithm ignores it — their scales are per-model, already
+counted in the +32 terms above.
+
+pFed1BS's downlink is NOT multiplied by S: the consensus v is one
+broadcast message (every client receives the same m bits), which is how
+the paper counts it and how the sharded executor realizes it
+(launch/fedexec.py broadcasts one consensus over the `fed` axis).
+
+These formulas are pinned, with concrete numbers, by
+tests/test_comms_table2.py — the same numbers shown in README.md. Change
+all three together.
 """
 from __future__ import annotations
 
@@ -17,6 +41,13 @@ FP_BITS = 32
 
 
 def round_bits(algo: str, *, n: int, m: int, s: int, num_tensors: int = 1) -> dict:
+    """Table-2 wire cost of one round.
+
+    n: model parameters; m: sketch rows (pFed1BS/OBCSAA only); s: number of
+    participating clients S; num_tensors: pytree leaf count (FedBAT only —
+    see module docstring). Returns integer bit counts
+    {uplink_bits, downlink_bits, total_bits} plus total_mb (float, MB).
+    """
     algo = algo.lower()
     if algo == "fedavg":
         up, down = s * FP_BITS * n, s * FP_BITS * n
@@ -36,6 +67,7 @@ def round_bits(algo: str, *, n: int, m: int, s: int, num_tensors: int = 1) -> di
 
 
 def reduction_vs_fedavg(algo: str, **kw) -> float:
+    """Fraction of FedAvg's per-round traffic removed (1 - this/fedavg)."""
     base = round_bits("fedavg", **kw)["total_bits"]
     this = round_bits(algo, **kw)["total_bits"]
     return 1.0 - this / base

@@ -6,9 +6,15 @@ operates on the packed representation. These are VPU-bound elementwise
 kernels; blocking keeps each tile in VMEM and lane-aligned (last dim 128).
 
 Kernels:
-  pack_pallas    : (rows, 32*W) float -> (rows, W) uint32   (bit = x >= 0)
-  unpack_pallas  : (rows, W) uint32   -> (rows, 32*W) +/-1 float
-  vote_pallas    : (K, W) uint32, (K,) weights -> (W,) uint32 weighted majority
+  pack_pallas          : (rows, 32*W) float -> (rows, W) uint32  (bit = x >= 0)
+  unpack_pallas        : (rows, W) uint32   -> (rows, 32*W) +/-1 float
+  vote_pallas          : (K, W) uint32, (K,) weights -> (W,) uint32 weighted
+                         majority (unpacks to float lanes internally)
+  vote_popcount_pallas : (K, W) uint32 -> (W,) uint32 UNWEIGHTED majority,
+                         fully word-level: per-position counts are held as
+                         ceil(log2(K+1)) bit-sliced uint32 planes and the
+                         majority test is one carry-propagating constant add
+                         — no 32x unpack, no float math (DESIGN.md §6.2)
 """
 from __future__ import annotations
 
@@ -76,6 +82,53 @@ def unpack_pallas(words, *, block_rows: int = 8, block_words: int = 512, interpr
         out_shape=jax.ShapeDtypeStruct((rows, nw * 32), jnp.float32),
         interpret=interpret,
     )(words)
+
+
+def _popcount_vote_kernel(w_ref, o_ref):
+    """Bit-sliced majority vote: counts live as uint32 bit planes.
+
+    For each of the 32 bit positions of every word lane we need
+    cnt = #clients whose bit is set, then the majority bit cnt >= ceil(K/2).
+    Instead of unpacking to (K, W, 32) lanes, keep the per-position count as
+    P = bitlength(K) "vertical" planes c_0..c_{P-1} (plane j holds bit j of
+    every count) and ripple-carry each client word in: ~K*P bitwise VPU ops
+    on (1, W) words total. The threshold 2*cnt >= K is evaluated bit-sliced
+    too: the carry-out of adding the constant 2^P - ceil(K/2) to the counter
+    is exactly the majority mask (tie -> +1 for even K).
+    """
+    k, nw = w_ref.shape
+    p = k.bit_length()
+    x = w_ref[...]
+    zero = jnp.zeros((1, nw), jnp.uint32)
+    planes = [zero] * p
+    for i in range(k):                       # static unroll over clients
+        carry = x[i : i + 1]
+        for j in range(p):                   # half-adder ripple into planes
+            planes[j], carry = planes[j] ^ carry, planes[j] & carry
+    thresh = (1 << p) - ((k + 1) // 2)       # cnt + thresh overflows 2^P
+    ones = jnp.full((1, nw), 0xFFFFFFFF, dtype=jnp.uint32)
+    carry = zero                             # iff cnt >= ceil(K/2)
+    for j in range(p):
+        b = ones if (thresh >> j) & 1 else zero
+        carry = (planes[j] & b) | (carry & (planes[j] ^ b))
+    o_ref[...] = carry
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "interpret"))
+def vote_popcount_pallas(words, *, block_words: int = 512, interpret: bool = False):
+    """Unweighted word-level majority vote: (K, W) uint32 -> (W,) uint32."""
+    k, nw = words.shape
+    block_words = min(block_words, nw)
+    assert nw % block_words == 0
+    out = pl.pallas_call(
+        _popcount_vote_kernel,
+        grid=(nw // block_words,),
+        in_specs=[pl.BlockSpec((k, block_words), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, block_words), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, nw), jnp.uint32),
+        interpret=interpret,
+    )(words)
+    return out[0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_words", "interpret"))

@@ -14,7 +14,12 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.fht import fht_pallas
-from repro.kernels.onebit import pack_pallas, unpack_pallas, vote_pallas
+from repro.kernels.onebit import (
+    pack_pallas,
+    unpack_pallas,
+    vote_pallas,
+    vote_popcount_pallas,
+)
 from repro.kernels.srht import dfht_pallas, srht_adj_pallas, srht_fwd_pallas
 
 # Largest chunk the single-tile Kronecker kernels handle (a = b = 128).
@@ -80,7 +85,13 @@ def srht_forward_2d(
     scale: float,
     impl: str = "auto",
 ) -> jax.Array:
-    """Fused forward SRHT over chunk rows -> (num_chunks, m_chunk)."""
+    """Fused forward SRHT (Eq. 15-18 per block): one pass per chunk tile.
+
+    x, d: (num_chunks, c) float32 (signal rows, Rademacher diagonals);
+    offsets: (num_chunks, 1) int32 strided-subsample offsets in
+    [0, c // m_chunk). Returns (num_chunks, m_chunk) float32 =
+    scale * FHT(x * d)[offset + arange(m_chunk) * stride] per row.
+    """
     impl = resolve_impl(impl)
     if impl == "ref":
         return _ref.srht_fwd_ref(x, d, offsets, m_chunk=m_chunk, scale=scale)
@@ -98,8 +109,12 @@ def srht_forward_packed_2d(
     scale: float,
     impl: str = "auto",
 ) -> jax.Array:
-    """Fused forward SRHT with the sign + bit-pack epilogue (uplink wire
-    format): (num_chunks, m_chunk // 32) uint32. Requires m_chunk % 32 == 0."""
+    """Forward SRHT with the sign + bit-pack epilogue — the uplink wire
+    format of Alg. 1 step 2 (z_k = sign(Phi w_k), bit = value >= 0).
+
+    Same operands as srht_forward_2d; returns (num_chunks, m_chunk // 32)
+    uint32. Requires m_chunk % 32 == 0. On the kernel path the float
+    sketch never leaves VMEM."""
     assert m_chunk % 32 == 0
     impl = resolve_impl(impl)
     if impl == "ref":
@@ -119,7 +134,12 @@ def srht_adjoint_2d(
     scale: float,
     impl: str = "auto",
 ) -> jax.Array:
-    """Fused adjoint SRHT (scatter-lift + FHT + sign-flip) -> (num_chunks, c)."""
+    """Fused adjoint SRHT — the Phi^T of every Eq. 11 gradient step.
+
+    v: (num_chunks, m_chunk) float32 cotangents; d: (num_chunks, c)
+    diagonals; offsets: (num_chunks, 1) int32. Returns (num_chunks, c)
+    float32 = FHT(scatter(scale * v)) * d per row (exact transpose of
+    srht_forward_2d)."""
     impl = resolve_impl(impl)
     if impl == "ref":
         return _ref.srht_adj_ref(v, d, offsets, scale=scale)
@@ -130,7 +150,10 @@ def dfht(
     x: jax.Array, d: jax.Array, *, scale: float, d_post: bool = False,
     impl: str = "auto",
 ) -> jax.Array:
-    """Fused sign-flip + FHT + scale per row (the global-mode fast path)."""
+    """Fused scale * FHT(x * d) per row — the global-mode (paper-exact
+    single-block SRHT) fast path; d_post applies d after the transform
+    instead (the adjoint's order). x, d: (rows, c) float32, c a power of
+    two <= 2^14; returns (rows, c) float32."""
     impl = resolve_impl(impl)
     if impl == "ref":
         return _ref.dfht_ref(x, d, scale=scale, d_post=d_post)
@@ -199,7 +222,13 @@ def unpack_signs(words: jax.Array, impl: str = "auto") -> jax.Array:
 
 
 def vote_packed(words: jax.Array, weights: jax.Array, impl: str = "auto") -> jax.Array:
-    """Weighted majority vote over (K, W) packed sketches -> (W,) packed."""
+    """Weighted majority vote on the wire format (server side of Lemma 1).
+
+    words: (K, W) uint32 packed sketches; weights: (K,) float p_k.
+    Returns (W,) uint32 — the packed consensus sign(sum_k p_k z_k) with
+    ties broken to +1. Word count W is padded internally to the 128-lane
+    alignment on the Pallas path and sliced back.
+    """
     impl = resolve_impl(impl)
     if impl == "ref":
         return _ref.vote_ref(words, weights)
@@ -208,3 +237,25 @@ def vote_packed(words: jax.Array, weights: jax.Array, impl: str = "auto") -> jax
     wp = jnp.pad(words, ((0, 0), (0, wpad)))
     bw = _block_words_for(nw + wpad, 256)
     return vote_pallas(wp, weights, block_words=bw, interpret=not _on_tpu())[:nw]
+
+
+def vote_popcount(words: jax.Array, impl: str = "auto") -> jax.Array:
+    """UNWEIGHTED majority vote, fully word-level (no unpack, no floats).
+
+    The uniform-p_k specialization of Lemma 1: consensus bit b is set iff
+    at least ceil(K/2) of the K clients set bit b (tie -> +1). The Pallas
+    kernel keeps per-position counts as bit-sliced uint32 planes
+    (kernels/onebit.py); the reference counts via unpack. Integer-exact:
+    both paths agree bit-for-bit for every K.
+
+    words: (K, W) uint32 -> (W,) uint32. Padded word columns (all-zero)
+    vote to 0 for K >= 2 and are sliced off by the caller's [:m] unpack.
+    """
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.vote_popcount_ref(words)
+    nw = words.shape[-1]
+    wpad = (-nw) % 128
+    wp = jnp.pad(words, ((0, 0), (0, wpad)))
+    bw = _block_words_for(nw + wpad, 512)
+    return vote_popcount_pallas(wp, block_words=bw, interpret=not _on_tpu())[:nw]

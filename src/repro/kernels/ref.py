@@ -112,3 +112,21 @@ def vote_ref(words: jax.Array, weights: jax.Array) -> jax.Array:
     pm = unpack_ref(words)                       # (K, 32W)
     s = jnp.einsum("k,km->m", weights, pm)       # weighted sign sum
     return pack_ref(s)                           # >= 0 -> +1 handles tie->+1
+
+
+def vote_popcount_ref(words: jax.Array) -> jax.Array:
+    """Unweighted (uniform-p_k) majority vote on packed words via bit counts.
+
+    Ground truth for the word-level popcount vote kernel: per bit position b,
+    count the set bits across the K clients; the consensus bit is
+    2*count >= K (tie -> +1, matching `vote_ref` with uniform weights,
+    integer-exact — no float accumulation at all).
+
+    words: (K, W) uint32 -> (W,) uint32.
+    """
+    k = words.shape[0]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)   # (K, W, 32)
+    cnt = jnp.sum(bits.astype(jnp.int32), axis=0)         # (W, 32)
+    maj = (2 * cnt >= k).astype(jnp.uint32) << shifts
+    return jnp.sum(maj, axis=-1).astype(jnp.uint32)

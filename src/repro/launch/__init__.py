@@ -1,1 +1,2 @@
-# Launchers: production mesh factory, multi-pod dry-run, training driver.
+# Launchers: mesh factories, shard_map federation executor (fedexec),
+# multi-pod dry-run, training driver.

@@ -1,0 +1,162 @@
+"""Sharded federation executor: shard_map rounds over a `fed` mesh axis.
+
+One pFed1BS round (core/pfed1bs.py, Algorithm 1) laid out the way a real
+federation is: the S sampled clients are split over the F shards of a 1-D
+`fed` mesh (launch/mesh.py::make_fed_mesh), and EVERYTHING client-side —
+the R local SGD steps, the fused SRHT sketch, the EF correction, sign +
+bit-pack — runs inside one shard_map region with zero collectives. The
+data that leaves that region over the federation axis is exactly the wire
+traffic of the paper's Table 2 accounting (fl/comms.py, algo="pfed1bs"):
+
+    uplink    (S, ceil(m/32)) uint32 sign words   = S * m bits
+    downlink  one broadcast consensus             = m bits
+
+Everything else stays put: client params and EF residuals are gathered /
+scattered against the simulator's replicated state store (bookkeeping of
+the simulation, not wire traffic — a deployed client keeps its own params),
+and the diagnostics (potential Psi^t, sign agreement) are optional float
+crossings that `diagnostics=False` removes entirely. With diagnostics off
+and EF off the uplink words come straight from the fused kernel's pack
+epilogue (`sketch_forward_packed`): the float sketch never hits HBM.
+
+Server vote (DESIGN.md §6.2): `vote="exact"` unpacks the S*m wire bits
+server-side and evaluates Lemma 1's sign(sum_k p_k z_k) in natural client
+order — bit-exact with the fused single-host round on a 1-device mesh at
+full participation (tests/test_fedexec.py). `vote="popcount"` never
+unpacks: the word-level bit-sliced majority kernel (kernels/onebit.py)
+counts set bits per position across clients in integer arithmetic (uniform
+p_k; ties -> +1, and — unlike any float path — a tie can never be flipped
+by rounding).
+
+See DESIGN.md §6 for the mesh diagram and the bit accounting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import consensus
+from repro.kernels import ops as kops
+
+
+def sharded_round(eng, state, batches, weights, key):
+    """One shard_map federation round. Same contract as PFed1BS.round:
+    batches (K, R, B, ...) pytree, weights (K,) p_k -> (state', metrics).
+
+    Requires cfg.participate % cfg.fed_shards == 0 (checked at engine
+    construction); each fed shard owns S/F clients for the round.
+    """
+    cfg = eng.cfg
+    mesh = eng.fed_mesh
+    k, s, m = cfg.num_clients, cfg.participate, eng.m
+    pad = (-m) % 32
+    nw = (m + pad) // 32
+
+    # partial participation: sample S of K without replacement (replicated —
+    # every shard derives the same permutation from the same key)
+    perm = jax.random.permutation(key, k)
+    idx = perm[:s]
+    take = lambda tree: jax.tree.map(lambda a: a[idx], tree)
+    clients_s, batches_s = take(state.clients), take(batches)
+    w_s = weights[idx]
+    ef_s = state.ef[idx] if cfg.error_feedback else None
+
+    # floats are needed beyond the shard only for EF (residual update) or
+    # diagnostics; otherwise the uplink is packed in the kernel epilogue
+    wire_only = not (cfg.diagnostics or cfg.error_feedback)
+
+    def client_shards(params, bats, v, ef):
+        """Body per fed shard: S/F clients, collective-free."""
+        upd, task_loss = jax.vmap(
+            lambda p, b: eng._client_update(p, b, v)
+        )(params, bats)
+        out = {"upd": upd, "task_loss": task_loss}
+        if wire_only:
+            out["packed"] = jax.vmap(eng._sketch_client_packed)(upd)
+            return out
+        zs = jax.vmap(eng._sketch_client)(upd)              # (S/F, m) float32
+        if cfg.diagnostics:
+            out["zs"] = zs                                   # pre-EF (Eq. 28)
+        if cfg.error_feedback:
+            _, signs, out["ef"] = eng._ef_quantize(zs, ef)
+        else:
+            signs = jnp.sign(zs) + (zs == 0)                 # {-1,+1}
+        out["packed"] = eng._pack_uplink(signs)
+        return out
+
+    fed = P("fed")
+    out_specs = {"upd": fed, "task_loss": fed, "packed": fed}
+    if cfg.diagnostics:
+        out_specs["zs"] = fed
+    if cfg.error_feedback:
+        out_specs["ef"] = fed
+    res = shard_map(
+        client_shards,
+        mesh=mesh,
+        in_specs=(fed, fed, P(), fed),
+        out_specs=out_specs,
+        check_rep=False,
+    )(clients_s, batches_s, state.v, ef_s)
+
+    # ---- the wire ----------------------------------------------------------
+    # res["packed"] is the (S, nw) uint32 uplink; replicating it for the
+    # server step below is the all-gather of S*m bits — the ONLY fed-axis
+    # traffic besides the m-bit consensus broadcast (plus optional
+    # diagnostics, see module docstring).
+    packed = res["packed"]
+
+    if cfg.vote == "popcount":
+        # word-level integer majority — the uniform-p_k specialization of
+        # Lemma 1; `weights` does NOT enter the vote. The vote_uniform_ok
+        # metric (below) flags rounds where the sampled weights were not
+        # actually uniform and the consensus therefore differs from the
+        # weighted Lemma 1 object.
+        vw = consensus.majority_vote_popcount(packed)
+        v_new = kops.unpack_signs(vw)[:m]
+    else:
+        # Lemma 1 exactly: unpack server-side, vote in natural client order
+        # with zero weights on non-sampled rows — the same float
+        # accumulation as the fused round (see §4 note on vote ordering),
+        # hence bit-exact with it on a 1-device mesh.
+        pm = kops.unpack_signs(packed)[:, :m]
+        signs_full = jnp.zeros((k, m), jnp.float32).at[idx].set(pm)
+        p_full = jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
+        v_new = consensus.majority_vote(signs_full, p_full)
+
+    # ---- simulator state bookkeeping (not wire traffic) --------------------
+    clients = jax.tree.map(
+        lambda old, new: old.at[idx].set(new.astype(old.dtype)),
+        state.clients, res["upd"],
+    )
+    new_ef = state.ef
+    if cfg.error_feedback:
+        new_ef = state.ef.at[idx].set(res["ef"])
+
+    w_norm = jnp.maximum(jnp.sum(w_s), 1e-9)
+    metrics = {
+        "task_loss": jnp.sum(res["task_loss"] * w_s) / w_norm,
+        "uplink_bits": jnp.float32(s * m),
+        "downlink_bits": jnp.float32(m),
+        "packed_words": jnp.float32(nw),
+    }
+    if cfg.vote == "popcount":
+        # 1.0 iff the sampled weights really were uniform, i.e. the integer
+        # vote computed the same object as weighted Lemma 1 would have
+        metrics["vote_uniform_ok"] = jnp.all(w_s == w_s[0]).astype(jnp.float32)
+    if cfg.diagnostics:
+        zs = res["zs"]
+        corr = zs + state.ef[idx] if cfg.error_feedback else zs
+        metrics["potential"] = eng._potential_from_sketches(
+            res["upd"], zs, v_new, res["task_loss"], w_s
+        )
+        metrics["sign_agreement"] = jnp.mean(
+            (corr * v_new[None, :] > 0).astype(jnp.float32)
+        )
+    # FLState is a NamedTuple; _replace avoids importing core from launch
+    # (core.pfed1bs lazily imports this module inside round()).
+    state = state._replace(
+        clients=clients, v=v_new, round=state.round + 1, ef=new_ef
+    )
+    return state, metrics

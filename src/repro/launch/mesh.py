@@ -32,3 +32,24 @@ def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
     import jax
 
     return jax.make_mesh(shape, axes, devices=jax.devices()[: int(np.prod(shape))])
+
+
+def make_fed_mesh(shards: int = 1):
+    """1-D federation mesh: the `fed` axis the sharded round executor
+    (launch/fedexec.py, DESIGN.md §6) lays sampled clients out on.
+
+    Uses the first `shards` visible devices. To simulate a multi-device
+    federation on a CPU host, set
+    XLA_FLAGS=--xla_force_host_platform_device_count=N before importing jax
+    (benchmarks/round_sharded_bench.py does this by re-spawning itself).
+    """
+    import jax
+
+    devs = jax.devices()
+    if len(devs) < shards:
+        raise RuntimeError(
+            f"fed mesh needs {shards} devices but only {len(devs)} visible. "
+            "Set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{shards} BEFORE importing jax to simulate the federation."
+        )
+    return jax.make_mesh((shards,), ("fed",), devices=devs[:shards])

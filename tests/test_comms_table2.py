@@ -1,0 +1,72 @@
+"""fl/comms.py cost model: every number in the README Table-2 column.
+
+The expected values here are the SAME literals shown in README.md's
+"Communication cost model" table (n = 1e6 params, m = 1e5 sketch rows,
+S = 20 participating clients, T = 4 tensors). If you change the cost
+model, change the README table and these literals together.
+"""
+import pytest
+
+from repro.fl import comms
+
+N, M, S, T = 1_000_000, 100_000, 20, 4
+
+# algo -> (uplink_bits, downlink_bits) at (N, M, S, T)
+EXPECTED = {
+    "fedavg":   (S * 32 * N,            S * 32 * N),   # 640e6 / 640e6
+    "obda":     (S * N,                 S * N),        # 1-bit both ways
+    "obcsaa":   (S * (M + 32),          S * 32 * N),   # m-bit CS + 1 scalar
+    "zsignfed": (S * (N + 32),          S * 32 * N),   # n bits + 1 scalar
+    "eden":     (S * (N + 32),          S * 32 * N),   # n bits + 1 scalar
+    "fedbat":   (S * (N + 32 * T),      S * 32 * N),   # n bits + T scalars
+    "pfed1bs":  (S * M,                 M),            # m bits up, ONE m-bit
+    #                                                    broadcast down
+}
+
+
+@pytest.mark.parametrize("algo", sorted(EXPECTED))
+def test_round_bits_matches_table2(algo):
+    up, down = EXPECTED[algo]
+    got = comms.round_bits(algo, n=N, m=M, s=S, num_tensors=T)
+    assert got["uplink_bits"] == up, algo
+    assert got["downlink_bits"] == down, algo
+    assert got["total_bits"] == up + down
+    assert got["total_mb"] == (up + down) / 8e6
+
+
+def test_concrete_readme_numbers():
+    """The literal MB-per-round numbers printed in README.md."""
+    mb = {a: comms.round_bits(a, n=N, m=M, s=S, num_tensors=T)["total_mb"]
+          for a in EXPECTED}
+    assert mb["fedavg"] == 160.0
+    assert mb["obda"] == 5.0
+    assert mb["obcsaa"] == 80.25008
+    assert mb["zsignfed"] == 82.50008
+    assert mb["eden"] == 82.50008
+    assert mb["fedbat"] == 82.50032
+    assert mb["pfed1bs"] == 0.2625
+
+
+def test_num_tensors_only_affects_fedbat():
+    """num_tensors is FedBAT's per-tensor scale count (one fp32 alpha per
+    tensor); every other algorithm ignores it."""
+    for algo in EXPECTED:
+        a = comms.round_bits(algo, n=N, m=M, s=S, num_tensors=1)
+        b = comms.round_bits(algo, n=N, m=M, s=S, num_tensors=64)
+        if algo == "fedbat":
+            assert b["uplink_bits"] - a["uplink_bits"] == S * 32 * 63
+        else:
+            assert a == b, algo
+
+
+def test_reduction_vs_fedavg_ordering():
+    red = {a: comms.reduction_vs_fedavg(a, n=N, m=M, s=S, num_tensors=T)
+           for a in EXPECTED}
+    assert red["fedavg"] == 0.0
+    assert red["pfed1bs"] > 0.998          # >99.8% of FedAvg traffic removed
+    assert red["pfed1bs"] > red["obda"] > red["obcsaa"] > red["fedavg"]
+
+
+def test_unknown_algo_raises():
+    with pytest.raises(ValueError):
+        comms.round_bits("nope", n=N, m=M, s=S)

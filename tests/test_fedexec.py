@@ -1,0 +1,252 @@
+"""Sharded federation executor (launch/fedexec.py, DESIGN.md §6).
+
+Contracts pinned here:
+  * 1-device-mesh bit-exactness: the shard_map round at full participation
+    reproduces the PR-1 fused round bit-for-bit (consensus, client params,
+    EF residuals) with EF on and off.
+  * Word-level popcount vote == the unpacked integer-count oracle, for odd
+    and even K, on arbitrary word counts (incl. non-lane-aligned), and its
+    tie semantics vs the float vote.
+  * The wire-only path (diagnostics=False, the packed kernel epilogue)
+    produces the identical state without the float diagnostics.
+  * Multi-device executor (subprocess, slow): a 2-shard fed mesh runs and
+    tracks the fused round closely (bit-exactness is only claimed for the
+    1-device mesh — per-shard compilation may round differently).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.data import synthetic as ds
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import smallnets as sn
+
+
+@pytest.fixture(scope="module")
+def fed_setup():
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=6, train_per_client=96,
+        test_per_client=48, noise=0.8,
+    )
+
+    def loss_fn(params, batch):
+        return sn.softmax_xent(sn.apply_mlp(params, batch["x"]), batch["y"])
+
+    def init_fn(k):
+        return sn.init_mlp(k, input_dim=784, hidden=32)
+
+    return data, loss_fn, init_fn
+
+
+BASE = dict(num_clients=6, participate=6, local_steps=3, m_ratio=0.05,
+            chunk=2048)
+
+
+def _run(cfg, data, loss_fn, init_fn, rounds=3):
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    eng = PFed1BS(cfg, loss_fn, template)
+    state = eng.init(init_fn, jax.random.key(2))
+    metrics = None
+    for r in range(rounds):
+        kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(11), r))
+        batches = ds.sample_round_batches(kb, data, cfg.local_steps, 24)
+        state, metrics = eng.round(state, batches, data.weights, kr)
+    return eng, state, metrics
+
+
+# ---------------------------------------------------------------------------
+# 1-device-mesh bit-exactness vs the fused round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["flat", "leaf"])
+@pytest.mark.parametrize("error_feedback", [False, True])
+def test_sharded_round_bit_exact_vs_fused(fed_setup, error_feedback, layout):
+    data, loss_fn, init_fn = fed_setup
+    cfg_sh = PFed1BSConfig(**BASE, error_feedback=error_feedback,
+                           layout=layout, sharded_round=True)
+    cfg_fu = dataclasses.replace(cfg_sh, sharded_round=False)
+    _, st_sh, m_sh = _run(cfg_sh, data, loss_fn, init_fn)
+    _, st_fu, m_fu = _run(cfg_fu, data, loss_fn, init_fn)
+    np.testing.assert_array_equal(np.asarray(st_sh.v), np.asarray(st_fu.v))
+    for a, b in zip(jax.tree.leaves(st_sh.clients), jax.tree.leaves(st_fu.clients)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    if error_feedback:
+        np.testing.assert_array_equal(np.asarray(st_sh.ef), np.asarray(st_fu.ef))
+    np.testing.assert_allclose(
+        float(m_sh["potential"]), float(m_fu["potential"]), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        float(m_sh["sign_agreement"]), float(m_fu["sign_agreement"]), rtol=1e-6
+    )
+
+
+def test_sharded_round_partial_participation(fed_setup):
+    data, loss_fn, init_fn = fed_setup
+    cfg = PFed1BSConfig(**{**BASE, "participate": 3}, sharded_round=True)
+    eng, state, m = _run(cfg, data, loss_fn, init_fn, rounds=2)
+    assert np.isfinite(float(m["task_loss"]))
+    assert int(m["uplink_bits"]) == 3 * eng.m
+    assert int(m["downlink_bits"]) == eng.m
+
+
+def test_wire_only_path_matches_diagnostics_path(fed_setup):
+    """diagnostics=False routes the uplink through the packed kernel
+    epilogue and must produce the identical state; the float diagnostics
+    simply disappear from the metrics dict."""
+    data, loss_fn, init_fn = fed_setup
+    cfg_d = PFed1BSConfig(**BASE, sharded_round=True)
+    cfg_w = dataclasses.replace(cfg_d, diagnostics=False)
+    _, st_d, m_d = _run(cfg_d, data, loss_fn, init_fn, rounds=2)
+    _, st_w, m_w = _run(cfg_w, data, loss_fn, init_fn, rounds=2)
+    np.testing.assert_array_equal(np.asarray(st_w.v), np.asarray(st_d.v))
+    for a, b in zip(jax.tree.leaves(st_w.clients), jax.tree.leaves(st_d.clients)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert "potential" in m_d and "sign_agreement" in m_d
+    assert "potential" not in m_w and "sign_agreement" not in m_w
+    assert int(m_w["uplink_bits"]) == int(m_d["uplink_bits"])
+    assert int(m_w["packed_words"]) == int(m_d["packed_words"])
+
+
+def test_leaf_layout_staged_round_runs(fed_setup):
+    """layout="leaf" must work in every executor, including the seed staged
+    round (its potential re-sketches through the layout-aware path)."""
+    data, loss_fn, init_fn = fed_setup
+    cfg = PFed1BSConfig(**{**BASE, "local_steps": 1}, layout="leaf",
+                        fused_round=False)
+    _, state, m = _run(cfg, data, loss_fn, init_fn, rounds=1)
+    assert np.isfinite(float(m["task_loss"]))
+    assert np.isfinite(float(m["potential"]))
+
+
+def test_ef_without_diagnostics_runs(fed_setup):
+    """EF on + diagnostics off: residuals update, no float sketches leave
+    the shard region beyond the EF rows, metrics carry no diagnostics."""
+    data, loss_fn, init_fn = fed_setup
+    cfg = PFed1BSConfig(**BASE, sharded_round=True, error_feedback=True,
+                        diagnostics=False)
+    _, state, m = _run(cfg, data, loss_fn, init_fn, rounds=2)
+    assert np.isfinite(float(m["task_loss"]))
+    assert "potential" not in m
+    assert np.isfinite(np.asarray(state.ef)).all()
+    assert float(jnp.sum(jnp.abs(state.ef))) > 0
+
+
+def test_popcount_vote_round_runs(fed_setup):
+    """vote="popcount" produces a {-1,+1} consensus and a working round."""
+    data, loss_fn, init_fn = fed_setup
+    cfg = PFed1BSConfig(**BASE, sharded_round=True, vote="popcount")
+    _, state, m = _run(cfg, data, loss_fn, init_fn, rounds=2)
+    assert np.isfinite(float(m["task_loss"]))
+    vals = set(np.unique(np.asarray(state.v)))
+    assert vals <= {-1.0, 1.0}, vals  # word-level vote never emits 0
+    # the integer vote assumes uniform p_k; the metric confirms they were
+    assert float(m["vote_uniform_ok"]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# word-level popcount vote vs the unpacked oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 3, 6, 7, 20, 33])
+@pytest.mark.parametrize("w", [1, 5, 128, 200])
+def test_popcount_vote_matches_unpacked_oracle(k, w):
+    words = jnp.asarray(
+        np.random.default_rng(k * 1000 + w).integers(
+            0, 2 ** 32, size=(k, w), dtype=np.uint32
+        )
+    )
+    # oracle: unpack to {0,1}, integer-count per position, threshold
+    bits = np.asarray(kops.unpack_signs(words, impl="ref") > 0, np.int64)
+    maj = (2 * bits.sum(axis=0) >= k).astype(np.float32) * 2 - 1
+    got = np.asarray(kops.unpack_signs(kops.vote_popcount(words, impl="ref"),
+                                       impl="ref"))
+    np.testing.assert_array_equal(got, maj)
+    # pallas (interpret) path agrees with the ref path bit-for-bit
+    got_pl = np.asarray(kops.vote_popcount(words, impl="pallas"))
+    np.testing.assert_array_equal(
+        got_pl, np.asarray(kops.vote_popcount(words, impl="ref"))
+    )
+
+
+@pytest.mark.parametrize("k", [3, 7, 21])
+def test_popcount_vote_matches_float_vote_odd_k(k):
+    """For odd K and uniform weights no exact tie exists, so the integer
+    popcount vote and the float vote_ref agree bit-for-bit."""
+    words = jnp.asarray(
+        np.random.default_rng(k).integers(0, 2 ** 32, size=(k, 64), dtype=np.uint32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(kref.vote_popcount_ref(words)),
+        np.asarray(kref.vote_ref(words, jnp.full((k,), 1.0 / k))),
+    )
+
+
+def test_popcount_vote_tie_semantics():
+    """Even K, exact tie: the integer vote breaks to +1 deterministically
+    (the float path's behavior at a tie depends on rounding of the p_k)."""
+    w1 = jnp.asarray([[0xFFFFFFFF], [0x00000000]], dtype=jnp.uint32)
+    out = np.asarray(kref.vote_popcount_ref(w1))
+    assert out[0] == 0xFFFFFFFF  # 1 vs 1 per position -> +1 everywhere
+
+
+# ---------------------------------------------------------------------------
+# multi-device executor (simulated via forced host devices; subprocess
+# because XLA_FLAGS must be set before jax import)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_two_shard_mesh_tracks_fused_round():
+    prog = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        assert len(jax.devices()) == 2, jax.devices()
+        from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+        from repro.data import synthetic as ds
+        from repro.models import smallnets as sn
+
+        data = ds.make_federated_classification(
+            jax.random.key(0), num_clients=6, train_per_client=96,
+            test_per_client=48, noise=0.8)
+        loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+        init_fn = lambda k: sn.init_mlp(k, input_dim=784, hidden=32)
+        template = jax.eval_shape(init_fn, jax.random.key(1))
+
+        cfg2 = PFed1BSConfig(num_clients=6, participate=6, local_steps=3,
+            m_ratio=0.05, chunk=2048, sharded_round=True, fed_shards=2)
+        cfg1 = dataclasses.replace(cfg2, sharded_round=False)
+        e2 = PFed1BS(cfg2, loss_fn, template)
+        e1 = PFed1BS(cfg1, loss_fn, template)
+        st2, st1 = e2.init(init_fn, jax.random.key(2)), e1.init(init_fn, jax.random.key(2))
+        for r in range(2):
+            kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(11), r))
+            batches = ds.sample_round_batches(kb, data, 3, 24)
+            st2, m2 = e2.round(st2, batches, data.weights, kr)
+            st1, m1 = e1.round(st1, batches, data.weights, kr)
+        agree = float(jnp.mean((st2.v == st1.v).astype(jnp.float32)))
+        assert agree > 0.9, agree
+        for a, b in zip(jax.tree.leaves(st2.clients), jax.tree.leaves(st1.clients)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+        assert np.isfinite(float(m2["task_loss"]))
+        print("OK agree=%.4f" % agree)
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
+    ).strip()
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    res = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "OK" in res.stdout

@@ -67,6 +67,78 @@ def test_tree_reg_grad_matches_autodiff():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-5)
 
 
+def test_leaf_vs_flat_layout_parity():
+    """Leaf-layout (per-leaf block-diagonal, treesketch) vs flat-layout
+    (global-ravel SketchSpec) sketches of the same tree. They are different
+    operators (different block randomness), but must be interchangeable:
+    same analytic guarantees at matched compression.
+
+      * both satisfy the adjoint identity <Phi x, v> == <x, Phi^T v>;
+      * both are near-isometries on the same input (Lemma 2's
+        ||Phi_i|| = sqrt(c/m_i) per block => comparable sketch energy);
+      * the sketch dimensions match to within per-leaf rounding.
+    """
+    from repro.core import flatten
+    from repro.core import sketch as sk
+
+    tree = _tree(jax.random.key(7))
+    m_ratio, chunk = 0.25, 128
+    tspec = ts.make_tree_sketch_spec(tree, m_ratio, chunk=chunk)
+    w = flatten.ravel(tree)
+    fspec = sk.make_sketch_spec(int(w.shape[0]), m_ratio, chunk=chunk,
+                                mode="chunked")
+
+    # matched compression (total rows differ only by per-leaf rounding)
+    assert abs(tspec.m - fspec.m) / fspec.m < 0.1, (tspec.m, fspec.m)
+
+    # adjoint identity, leaf layout
+    z_leaf = ts.tree_sketch_forward(tspec, tree)
+    v_leaf = {k: jax.random.normal(jax.random.fold_in(jax.random.key(8), i), zz.shape)
+              for i, (k, zz) in enumerate(z_leaf.items())}
+    lhs = sum(float(jnp.vdot(z_leaf[k], v_leaf[k])) for k in z_leaf)
+    back = ts.tree_sketch_adjoint(tspec, v_leaf, tree)
+    rhs = sum(float(jnp.vdot(a, b))
+              for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+    # adjoint identity, flat layout
+    z_flat = sk.sketch_forward(fspec, w)
+    v_flat = jax.random.normal(jax.random.key(9), z_flat.shape)
+    np.testing.assert_allclose(
+        float(jnp.vdot(z_flat, v_flat)),
+        float(jnp.vdot(w, sk.sketch_adjoint(fspec, v_flat))),
+        rtol=1e-4,
+    )
+
+    # near-isometry on the same vector for both layouts
+    e_in = float(jnp.sum(w ** 2))
+    e_leaf = sum(float(jnp.sum(zz ** 2)) for zz in z_leaf.values())
+    e_flat = float(jnp.sum(z_flat ** 2))
+    assert 0.5 < e_leaf / e_in < 2.0, e_leaf / e_in
+    assert 0.5 < e_flat / e_in < 2.0, e_flat / e_in
+    assert 0.5 < e_leaf / e_flat < 2.0, e_leaf / e_flat
+
+
+def test_engine_leaf_layout_matches_treesketch_dims():
+    """PFed1BS(layout="leaf") sketches through the tree spec: engine m is
+    the TreeSketchSpec m and the consensus/EF buffers size accordingly."""
+    import dataclasses
+
+    from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+
+    tree = _tree(jax.random.key(10))
+    template = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    cfg = PFed1BSConfig(num_clients=3, participate=3, m_ratio=0.2, chunk=128,
+                        layout="leaf", error_feedback=True)
+    eng = PFed1BS(cfg, lambda p, b: 0.0, template)
+    tspec = ts.make_tree_sketch_spec(template, 0.2, chunk=128)
+    assert eng.spec is None and eng.tspec.m == tspec.m == eng.m
+    state = eng.init(lambda k: jax.tree.map(
+        lambda a: jnp.zeros(a.shape, a.dtype), tree), jax.random.key(0))
+    assert state.v.shape == (tspec.m,)
+    assert state.ef.shape == (3, tspec.m)
+
+
 def test_zeros_like_and_flat_view():
     tree = _tree(jax.random.key(5))
     tspec = ts.make_tree_sketch_spec(tree, 0.1, chunk=128)
