@@ -16,6 +16,10 @@ same protocols); the full-scale numbers live in the dry-run roofline.
   round_sharded   shard_map executor scaling: clients x fed-mesh grid
                   (BENCH_round_sharded.json; runs in a subprocess because
                   the simulated mesh needs XLA_FLAGS set before jax import)
+  serve           personalized serving tier: sketch-store vs fp32-store
+                  accuracy, batched vs sequential reconstruct, Zipf request
+                  streams over K personalized LMs (BENCH_serve.json;
+                  --fast emits BENCH_serve.fast.json)
   roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
@@ -296,6 +300,34 @@ def bench_round_sharded(fast=False):
     return out
 
 
+def bench_serve(fast=False):
+    """Serving-tier numbers — emits BENCH_serve.json (fast:
+    BENCH_serve.fast.json; see benchmarks/serve_bench.py)."""
+    from benchmarks import serve_bench
+
+    results = {"fast": fast}
+    results["quality"] = serve_bench.bench_quality(fast=fast)
+    q = results["quality"]
+    emit("serve/quality", 0.0,
+         f"acc_fp32={q['acc_fp32_store']:.4f} "
+         f"acc_sketch={q['acc_sketch_store']:.4f} "
+         f"gap_pts={q['acc_gap_points']:.2f} "
+         f"compression={q['compression_vs_fp32']:.1f}x")
+    results["reconstruct"] = bench_rec = serve_bench.bench_reconstruct(fast=fast)
+    for b, r in bench_rec["batches"].items():
+        emit(f"serve/reconstruct_B{b}", r["batched_us"],
+             f"sequential_us={r['sequential_us']:.0f} "
+             f"speedup={r['speedup']:.2f}x")
+    results["stream"] = serve_bench.bench_stream(fast=fast)
+    for k, r in results["stream"]["grid"].items():
+        emit(f"serve/stream_K{k}", r["materialize_p50_ms"] * 1e3,
+             f"tok_s={r['tokens_per_sec']:.0f} "
+             f"p99_ms={r['materialize_p99_ms']:.0f} hit={r['hit_rate']:.2f} "
+             f"compression={r['compression_vs_fp32']:.1f}x")
+    serve_bench.write_artifacts(results)
+    return results
+
+
 BENCHES = {
     "table2": bench_table2,
     "fig3_fig4": bench_fig3_fig4,
@@ -307,6 +339,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "sketch": bench_sketch,
     "round_sharded": bench_round_sharded,
+    "serve": bench_serve,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,258 @@
+"""Serving-tier benchmark -> BENCH_serve.json (DESIGN.md §7.4).
+
+Three sections:
+
+  quality     train pFed1BS on the synthetic non-iid FL task, then serve the
+              personalized models from (a) an fp32-per-client DenseStore and
+              (b) the one-bit SketchStore, and compare personalized test
+              accuracy. Acceptance: the sketch-store gap stays within 1
+              point while resident state compresses >= 20x (K = 64 clients,
+              m = n EDEN regime: ~1 bit/param + amortized fp32 base).
+  reconstruct batched fused-adjoint decode (ONE kernel pass for B clients)
+              vs B sequential adjoints — the store's decode path win.
+  stream      Zipf-distributed request streams over K in {64, 256, 1024}
+              personalized LMs through the ServeEngine: tokens/sec, p50/p99
+              materialization latency, LRU hit rate, resident bytes per
+              client vs the fp32 store.
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+(--fast shrinks every axis and writes BENCH_serve.fast.json, never the
+canonical artifacts.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatten
+from repro.serve import router
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.store import DenseStore, SketchStore, make_store_spec
+
+
+# ---------------------------------------------------------------------------
+# quality: sketch store vs fp32 store at matched serving config
+# ---------------------------------------------------------------------------
+
+def bench_quality(fast=False):
+    from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+    from repro.data import synthetic as ds
+    from repro.models import smallnets as sn
+
+    k = 12 if fast else 64
+    rounds = 3 if fast else 12
+    local_steps, batch = 5, 32
+
+    key = jax.random.key(0)
+    data = ds.make_federated_classification(
+        key, num_clients=k, classes_per_client=2, noise=1.2,
+        train_per_client=256, test_per_client=128,
+    )
+    init_fn = lambda kk: sn.init_mlp(kk, input_dim=784, hidden=200)
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    eval_fn = lambda p, x, y: sn.accuracy(sn.apply_mlp(p, x), y)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+
+    cfg = PFed1BSConfig(num_clients=k, participate=k, local_steps=local_steps)
+    eng = PFed1BS(cfg, loss_fn, template)
+    state = eng.init(init_fn, jax.random.key(2))
+    for r in range(rounds):
+        kb, kr = jax.random.split(jax.random.fold_in(key, r))
+        state, _ = eng.round(
+            state, ds.sample_round_batches(kb, data, local_steps, batch),
+            data.weights, kr,
+        )
+
+    # serving stores: fp32 baseline vs one-bit sketch-delta (base = client mean)
+    base = jax.tree.map(lambda a: jnp.mean(a.astype(jnp.float32), 0), state.clients)
+    dense = DenseStore(k, base)
+    dense.put_batch(np.arange(k), state.clients)
+    sspec = make_store_spec(base, k, m_ratio=1.0, chunk=4096)
+    store = SketchStore(sspec, base)
+    store.put_batch(np.arange(k), state.clients)
+
+    ids = np.arange(k)
+    acc_fp32 = jax.vmap(eval_fn)(dense.materialize(ids), data.test_x, data.test_y)
+    acc_sket = jax.vmap(eval_fn)(store.materialize(ids), data.test_x, data.test_y)
+    acc_base = jax.vmap(lambda x, y: eval_fn(base, x, y))(data.test_x, data.test_y)
+    rb = store.resident_bytes()
+    return {
+        "clients": k,
+        "rounds": rounds,
+        "model_n": sspec.n,
+        "acc_fp32_store": float(acc_fp32.mean()),
+        "acc_sketch_store": float(acc_sket.mean()),
+        "acc_base_only": float(acc_base.mean()),
+        "acc_gap_points": float(acc_fp32.mean() - acc_sket.mean()) * 100,
+        "per_client_bytes_fp32": rb["fp32_per_client_bytes"],
+        "per_client_bytes_sketch": rb["per_client_bytes"],
+        "compression_vs_fp32": rb["compression_vs_fp32"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# reconstruct: one batched pass vs B sequential adjoints
+# ---------------------------------------------------------------------------
+
+def bench_reconstruct(fast=False):
+    """Store-level decode: ONE batched materialize (the §7.2 fold — unpack,
+    batched fused adjoint, scale, base-add, unravel in a single jitted
+    call) vs B sequential materialize_one calls, i.e. what a store without
+    the batched path would do per cache-miss group. Interleaved-median
+    timing (the sketch_bench idiom) because absolute CPU wall time swings
+    with host contention. On this CPU ref host the win is dispatch/epilogue
+    amortization; on TPU the fold also collapses B kernel launches into
+    one row-grid pass."""
+    from repro.models import smallnets as sn
+
+    hidden = 64 if fast else 200
+    kmax = 8 if fast else 32
+    base = sn.init_mlp(jax.random.key(0), input_dim=784, hidden=hidden)
+    clients = jax.vmap(
+        lambda k: sn.init_mlp(k, input_dim=784, hidden=hidden)
+    )(jax.random.split(jax.random.key(1), kmax))
+    sspec = make_store_spec(base, kmax, m_ratio=1.0, chunk=4096)
+    store = SketchStore(sspec, base)
+    store.put_batch(np.arange(kmax), clients)
+
+    out = {"n": sspec.n, "m": sspec.m, "chunk": sspec.chunk, "batches": {}}
+    for b in (8,) if fast else (8, 32):
+        ids = list(range(b))
+        batched = lambda: store.materialize(ids)
+        sequential = lambda: [store.materialize_one(i) for i in ids]
+        jax.block_until_ready(batched())          # compile both shapes
+        jax.block_until_ready(sequential())
+        t_bat, t_seq = [], []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            jax.block_until_ready(batched())
+            t_bat.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(sequential())
+            t_seq.append(time.perf_counter() - t0)
+        bat_us = float(np.median(t_bat)) * 1e6
+        seq_us = float(np.median(t_seq)) * 1e6
+        out["batches"][str(b)] = {
+            "sequential_us": seq_us,
+            "batched_us": bat_us,
+            "speedup": seq_us / bat_us,
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# stream: Zipf traffic over K personalized LMs
+# ---------------------------------------------------------------------------
+
+def _perturbed_clients(base, keys, scale=0.05):
+    """Stand-ins for FL output at serving scale: base + small random
+    residual per client (training K=1024 LMs on this host is not the
+    point of the stream bench; quality is measured in bench_quality)."""
+
+    def one(k):
+        leaves, treedef = jax.tree_util.tree_flatten(base)
+        ks = jax.random.split(k, len(leaves))
+        noise = [
+            scale * jax.random.normal(kk, l.shape, jnp.float32)
+            for kk, l in zip(ks, leaves)
+        ]
+        return jax.tree_util.tree_unflatten(
+            treedef, [l + nz for l, nz in zip(leaves, noise)]
+        )
+
+    return jax.vmap(one)(keys)
+
+
+def bench_stream(fast=False):
+    from repro import configs
+    from repro.models import lm
+
+    arch = configs.get("granite-8b").reduced(remat=False)
+    base = lm.init_params(arch, jax.random.key(0))
+    n = flatten.tree_size(base)
+    grid = (16, 64) if fast else (64, 256, 1024)
+    requests = 32 if fast else 96
+    ecfg = EngineConfig(prompt_len=8, gen_len=16, max_batch=8, hot_models=16)
+    import dataclasses
+
+    out = {"arch": arch.name, "model_n": n,
+           "engine": dataclasses.asdict(ecfg), "grid": {}}
+
+    for k in grid:
+        sspec = make_store_spec(base, k, m_ratio=1.0, chunk=4096)
+        store = SketchStore(sspec, base)
+        enc = 32  # encode in slabs: never hold K full fp32 models at once
+        for lo in range(0, k, enc):
+            ids = np.arange(lo, min(lo + enc, k))
+            keys = jax.random.split(jax.random.fold_in(jax.random.key(1), lo), len(ids))
+            store.put_batch(ids, _perturbed_clients(base, keys))
+        engine = ServeEngine(arch, store, ecfg)
+        cids = router.zipf_stream(k, k, requests, alpha=1.1)
+        prompts = router.random_prompts(k + 1, requests, ecfg.prompt_len, arch.vocab)
+        rep = router.run_stream(engine, cids, prompts, zipf_alpha=1.1, warm=True)
+        rb = store.resident_bytes()
+        out["grid"][str(k)] = {
+            **rep.to_dict(),
+            "per_client_bytes_sketch": rb["per_client_bytes"],
+            "per_client_bytes_fp32": rb["fp32_per_client_bytes"],
+            "compression_vs_fp32": rb["compression_vs_fp32"],
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+def write_artifacts(results: dict, out_path: str | None = None) -> str:
+    """BENCH_serve.json writer; --fast runs land in BENCH_serve.fast.json and
+    never touch the canonical artifacts (same policy as sketch_bench)."""
+    fast = bool(results.get("fast"))
+    if out_path is None:
+        out_path = "BENCH_serve.fast.json" if fast else "BENCH_serve.json"
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    if not fast:
+        os.makedirs("experiments/bench", exist_ok=True)
+        with open("experiments/bench/BENCH_serve.json", "w") as f:
+            json.dump(results, f, indent=2)
+    return out_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    results = {"fast": args.fast}
+    results["quality"] = bench_quality(fast=args.fast)
+    q = results["quality"]
+    print(f"quality: fp32 {q['acc_fp32_store']:.4f}  sketch "
+          f"{q['acc_sketch_store']:.4f}  (gap {q['acc_gap_points']:.2f} pts, "
+          f"base-only {q['acc_base_only']:.4f})  "
+          f"compression {q['compression_vs_fp32']:.1f}x")
+
+    results["reconstruct"] = bench_reconstruct(fast=args.fast)
+    for b, r in results["reconstruct"]["batches"].items():
+        print(f"reconstruct B={b}: sequential {r['sequential_us']:.0f}us  "
+              f"batched {r['batched_us']:.0f}us  ({r['speedup']:.2f}x)")
+
+    results["stream"] = bench_stream(fast=args.fast)
+    for k, r in results["stream"]["grid"].items():
+        print(f"stream K={k}: {r['tokens_per_sec']:.0f} tok/s decode  "
+              f"mat p50 {r['materialize_p50_ms']:.1f}ms p99 "
+              f"{r['materialize_p99_ms']:.1f}ms  hit {r['hit_rate']:.2f}  "
+              f"{r['per_client_bytes_sketch'] / 1e3:.0f} KB/client "
+              f"({r['compression_vs_fp32']:.1f}x)")
+
+    out_path = write_artifacts(results, args.out)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

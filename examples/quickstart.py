@@ -5,7 +5,12 @@ one-bit bidirectional communication. Prints per-round loss / potential /
 bits-on-the-wire, and final personalized accuracy vs a FedAvg global model.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+Env:  QUICKSTART_ROUNDS / QUICKSTART_CLIENTS — smaller values for smoke
+      tests (tests/test_examples_smoke.py runs this file with tiny
+      settings); defaults reproduce the paper's setting.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -15,7 +20,9 @@ from repro.data import synthetic as ds
 from repro.fl import comms
 from repro.models import smallnets as sn
 
-ROUNDS, CLIENTS, LOCAL_STEPS, BATCH = 25, 20, 5, 32
+ROUNDS = int(os.environ.get("QUICKSTART_ROUNDS", 25))
+CLIENTS = int(os.environ.get("QUICKSTART_CLIENTS", 20))
+LOCAL_STEPS, BATCH = 5, 32
 
 key = jax.random.key(0)
 data = ds.make_federated_classification(

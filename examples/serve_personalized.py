@@ -1,57 +1,92 @@
-"""Serve personalized models with batched one-token decode steps.
+"""Serve personalized models from the compressed sketch-delta store.
 
-After federated training every client owns a personalized model. This
-example builds a tiny personalized LM per client, then serves BATCHED
-generation requests against per-client KV caches with the same
-`decode_step` the dry-run lowers at 32k/500k scale.
+After federated training every client owns a personalized model. Instead of
+keeping K full fp32 models resident, the serving tier (src/repro/serve/)
+keeps ONE fp32 base plus a per-client one-bit sketch of the residual
+w_k - w_base (~1 bit/param, DESIGN.md §7), materializes models on demand
+through the batched fused SRHT adjoint, and serves multi-tenant batched
+generation — every request in a decode batch runs against its own client's
+weights and KV cache via one vmapped `decode_step`.
+
+The store round-trips through checkpoint/ckpt.py (packed uint32 words +
+scales + base), so this is the full serve path: encode -> save -> load ->
+materialize -> batched decode.
 
 Run:  PYTHONPATH=src python examples/serve_personalized.py
+Env:  SERVE_CLIENTS / SERVE_REQUESTS — smaller values for smoke tests
+      (tests/test_examples_smoke.py runs this file with tiny settings).
 """
+import os
+import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.checkpoint import ckpt
 from repro.models import lm
+from repro.serve import router
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.store import SketchStore, make_store_spec
 
-CLIENTS, BATCH, PROMPT, GEN = 3, 4, 12, 20
+CLIENTS = int(os.environ.get("SERVE_CLIENTS", 12))
+REQUESTS = int(os.environ.get("SERVE_REQUESTS", 32))
+PROMPT, GEN, BATCH = 12, 20, 4
 
 cfg = configs.get("granite-8b").reduced()
-keys = jax.random.split(jax.random.key(0), CLIENTS)
-clients = [lm.init_params(cfg, k) for k in keys]  # stand-ins for FL output
-
-decode = jax.jit(
-    lambda p, t, c, pos: lm.decode_step(cfg, p, t, c, pos),
-    donate_argnums=(2,),
-)
-
-
-def serve(params, prompts):
-    """prompts: (B, PROMPT) -> greedy continuation (B, GEN)."""
-    cache = lm.init_cache(cfg, prompts.shape[0], PROMPT + GEN)
-    logits = None
-    for t in range(PROMPT):  # prefill by stepping (tiny model)
-        logits, cache = decode(params, prompts[:, t : t + 1], cache, jnp.int32(t))
-    toks = []
-    cur = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
-    for t in range(GEN):
-        toks.append(cur[:, 0])
-        logits, cache = decode(params, cur, cache, jnp.int32(PROMPT + t))
-        cur = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
-    return jnp.stack(toks, axis=1)
-
-
-t0 = time.time()
-for cid, params in enumerate(clients):
-    prompts = jax.random.randint(
-        jax.random.fold_in(jax.random.key(1), cid), (BATCH, PROMPT), 0, cfg.vocab
+keys = jax.random.split(jax.random.key(0), CLIENTS + 1)
+base = lm.init_params(cfg, keys[0])
+# stand-ins for FL output: base + per-client perturbation
+clients = jax.vmap(
+    lambda k: jax.tree.map(
+        lambda b, g: b + 0.05 * g,
+        base,
+        lm.init_params(cfg, k),
     )
-    out = serve(params, prompts)
-    assert out.shape == (BATCH, GEN)
-    assert np.isfinite(np.asarray(out)).all()
-    print(f"client {cid}: served batch of {BATCH}, first continuation: "
-          f"{np.asarray(out[0])[:8].tolist()}")
-print(f"served {CLIENTS * BATCH} requests ({GEN} tokens each) "
-      f"in {time.time() - t0:.1f}s")
+)(keys[1:])
+
+# ---- encode into the compressed store & round-trip through a checkpoint ---
+spec = make_store_spec(base, CLIENTS, m_ratio=1.0, chunk=4096)
+store = SketchStore(spec, base)
+t0 = time.time()
+store.put_batch(np.arange(CLIENTS), clients)
+jax.block_until_ready(store.words)
+rb = store.resident_bytes()
+print(f"encoded {CLIENTS} clients in {time.time() - t0:.1f}s: "
+      f"{rb['per_client_bytes'] / 1e3:.0f} KB/client resident "
+      f"(fp32 store: {rb['fp32_per_client_bytes'] / 1e3:.0f} KB/client, "
+      f"{rb['compression_vs_fp32']:.1f}x smaller)")
+
+with tempfile.TemporaryDirectory() as td:
+    path = os.path.join(td, "client_store.npz")
+    ckpt.save_client_store(path, store)
+    store = ckpt.load_client_store(path, base)
+print("store round-tripped through checkpoint/ckpt.py")
+
+# ---- serve a Zipf-distributed request stream ------------------------------
+engine = ServeEngine(
+    cfg, store,
+    EngineConfig(prompt_len=PROMPT, gen_len=GEN, max_batch=BATCH,
+                 hot_models=max(CLIENTS // 3, 2)),
+)
+cids = router.zipf_stream(0, CLIENTS, REQUESTS)
+prompts = router.random_prompts(1, REQUESTS, PROMPT, cfg.vocab)
+report = router.run_stream(engine, cids, prompts, zipf_alpha=1.1, warm=True)
+
+assert report.tokens_generated == REQUESTS * GEN
+print(f"served {REQUESTS} requests over {CLIENTS} personalized models: "
+      f"{report.tokens_per_sec:.0f} tok/s decode "
+      f"({report.end_to_end_tokens_per_sec:.0f} tok/s end-to-end)")
+print(f"LRU hit rate {report.hit_rate:.2f}; materialization "
+      f"p50 {report.materialize_p50_ms:.1f} ms / "
+      f"p99 {report.materialize_p99_ms:.1f} ms over "
+      f"{report.materialize_calls} batched reconstructs")
+
+# sanity: a materialized model decodes finite tokens
+one = store.materialize_one(0)
+probe_cache = lm.init_cache(cfg, 1, 4)
+logits, _ = lm.decode_step(cfg, one, np.zeros((1, 1), np.int32), probe_cache,
+                           np.int32(0))
+assert np.isfinite(np.asarray(logits)).all()
+print("materialized model sanity check passed")

@@ -1,1 +1,7 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint
+from repro.checkpoint.ckpt import (
+    load_checkpoint,
+    load_client_store,
+    load_meta,
+    save_checkpoint,
+    save_client_store,
+)

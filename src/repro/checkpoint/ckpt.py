@@ -1,4 +1,11 @@
-"""npz pytree checkpointing: per-client personalized models + round state."""
+"""npz pytree checkpointing: per-client personalized models + round state.
+
+Also round-trips the serving tier's compressed client store
+(serve/store.SketchStore): the packed uint32 sign words, per-pass fp32
+scales and the fp32 base model are a plain pytree, saved through the same
+npz path, with the codec parameters (layout/m_ratio/chunk/seed/passes) in
+the JSON sidecar so the store can be rebuilt against a model template.
+"""
 from __future__ import annotations
 
 import json
@@ -29,8 +36,19 @@ def load_checkpoint(path: str, template):
     leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in leaves_t:
-        arr = data[jax.tree_util.keystr(p)]
-        assert arr.shape == leaf.shape, f"{jax.tree_util.keystr(p)}: {arr.shape} != {leaf.shape}"
+        name = jax.tree_util.keystr(p)
+        if name not in data:
+            raise ValueError(
+                f"checkpoint {path!r} is missing leaf {name!r} "
+                f"(has: {sorted(data.files)[:8]}...)"
+            )
+        arr = data[name]
+        if arr.shape != tuple(leaf.shape):
+            # a raise, not an assert: shape validation must survive python -O
+            raise ValueError(
+                f"checkpoint {path!r} leaf {name!r}: stored shape {arr.shape} "
+                f"does not match template shape {tuple(leaf.shape)}"
+            )
         leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
 
@@ -38,3 +56,59 @@ def load_checkpoint(path: str, template):
 def load_meta(path: str) -> dict:
     with open(path + ".meta.json") as f:
         return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Serving-tier client store (packed one-bit sketch residuals)
+# ---------------------------------------------------------------------------
+
+def save_client_store(path: str, store, extra_meta: dict | None = None) -> None:
+    """Persist a serve.store.SketchStore: uint32 bit-words + scales + base
+    in the npz, codec parameters in the meta sidecar."""
+    meta = dict(store.spec_meta())
+    if extra_meta:
+        meta.update(extra_meta)
+    save_checkpoint(path, store.state_tree(), meta=meta)
+
+
+def load_client_store(path: str, template):
+    """Rebuild a SketchStore from save_client_store output.
+
+    template: pytree of arrays/ShapeDtypeStructs shaped like one client
+    model (defines the base/template structure the npz leaves are checked
+    against)."""
+    from repro.serve.store import SketchStore, make_store_spec
+
+    meta = load_meta(path)
+    if meta.get("kind") != "sketch_store":
+        raise ValueError(
+            f"{path!r} is not a client-store checkpoint (kind={meta.get('kind')!r})"
+        )
+    sspec = make_store_spec(
+        template,
+        int(meta["num_clients"]),
+        m_ratio=float(meta["m_ratio"]),
+        chunk=int(meta["chunk"]),
+        seed=int(meta["seed"]),
+        passes=int(meta["passes"]),
+        layout=meta["layout"],
+    )
+    if sspec.n != int(meta["n"]) or sspec.m != int(meta["m"]):
+        raise ValueError(
+            f"store checkpoint {path!r} was built for n={meta['n']}, "
+            f"m={meta['m']} but the template gives n={sspec.n}, m={sspec.m}"
+        )
+    base_t = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(tuple(l.shape), l.dtype), template
+    )
+    state_t = {
+        "base": base_t,
+        "words": jax.ShapeDtypeStruct(
+            (sspec.num_clients, sspec.passes, sspec.words_per_pass), np.uint32
+        ),
+        "scales": jax.ShapeDtypeStruct(
+            (sspec.num_clients, sspec.passes), np.float32
+        ),
+    }
+    state = load_checkpoint(path, state_t)
+    return SketchStore.from_state_tree(sspec, state, template=base_t)

@@ -316,6 +316,27 @@ def sketch_adjoint(spec: SketchSpec, v: jax.Array, impl: str = "auto") -> jax.Ar
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def sketch_adjoint_batched(spec: SketchSpec, v: jax.Array, impl: str = "auto") -> jax.Array:
+    """W = Phi^T V for a batch: v (B, m) or (B, num_chunks, m_chunk) ->
+    (B, n) float32, row b == sketch_adjoint(spec, v[b]).
+
+    All B rows share the one operator Phi (spec randomness is drawn once),
+    so the batch folds into the fused kernel's row grid — one pass
+    materializes every reconstruction (kernels/ops.srht_adjoint_batched_2d)
+    instead of B sequential adjoint dispatches. This is the decode half of
+    the serving-tier codec (serve/store.py)."""
+    b = v.shape[0]
+    v = v.reshape(b, spec.num_chunks, spec.m_chunk).astype(jnp.float32)
+    if _use_fused(spec, impl) or kops.resolve_impl(impl) == "ref":
+        if spec.mode == "global":
+            return jax.vmap(lambda vb: _adjoint_2d(spec, vb, impl))(v)
+        d, off = _all_chunk_rand(spec)
+        x = kops.srht_adjoint_batched_2d(v, d, off, scale=spec.scale, impl=impl)
+        return x.reshape(b, spec.n_pad)[:, : spec.n]
+    return jax.vmap(lambda vb: _adjoint_staged(spec, vb, impl))(v)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
 def sketch_adjoint_staged(
     spec: SketchSpec, v: jax.Array, impl: str = "auto"
 ) -> jax.Array:

@@ -127,6 +127,26 @@ def tree_sketch_adjoint(tspec: TreeSketchSpec, v: dict, template):
     )
 
 
+def tree_sketch_adjoint_batched(tspec: TreeSketchSpec, v: dict, template):
+    """Batched W = Phi^T V over the leaf-block layout: v is a dict
+    {leaf_path: (B, num_chunks, m_chunk) float} and the result is a
+    stacked pytree (leading axis B) shaped like template per element.
+
+    Each leaf is one fused batched-adjoint pass
+    (core/sketch.sketch_adjoint_batched), so decoding B clients costs
+    len(leaves) kernel dispatches total instead of B * len(leaves) —
+    the leaf-layout decode half of the serving-tier codec."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    outs = []
+    for (path, spec, off, major), (p2, leaf) in zip(tspec.entries, flat):
+        wi = sk.sketch_adjoint_batched(spec, v[path])       # (B, leaf_n)
+        wi = jax.vmap(lambda w: _from_major(w, leaf.shape, major))(wi)
+        outs.append(wi.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), outs
+    )
+
+
 def flat_view(tspec: TreeSketchSpec, z: dict) -> jax.Array:
     """Concatenate a per-leaf sketch dict into one (m,) float32 vector in
     spec entry order (the layout PFed1BS's consensus/EF buffers use).

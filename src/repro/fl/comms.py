@@ -34,6 +34,11 @@ the paper counts it and how the sharded executor realizes it
 These formulas are pinned, with concrete numbers, by
 tests/test_comms_table2.py — the same numbers shown in README.md. Change
 all three together.
+
+`storage_bits` is the SERVING-tier companion: resident bits to hold K
+personalized models (fp32-per-client vs the base + m-bit-sketch-per-client
+store of serve/store.py). Pinned by the same test file and mirrored in the
+README cost-model section.
 """
 from __future__ import annotations
 
@@ -71,3 +76,36 @@ def reduction_vs_fedavg(algo: str, **kw) -> float:
     base = round_bits("fedavg", **kw)["total_bits"]
     this = round_bits(algo, **kw)["total_bits"]
     return 1.0 - this / base
+
+
+def storage_bits(algo: str, *, n: int, m: int, k: int, passes: int = 1) -> dict:
+    """Personalization-STATE accounting: resident bits to hold K clients'
+    personalized models on the serving tier (the storage mirror of the
+    Table-2 wire model; realized by serve/store.py and pinned by
+    tests/test_comms_table2.py).
+
+      fp32      K full models                      -> 32 n K
+      pfed1bs   one fp32 base + per client one
+                m-bit sketch of the residual
+                w_k - w_base plus one fp32 scale,
+                per refinement pass               -> 32 n + K * passes * (m + 32)
+
+    n: model parameters; m: sketch rows per pass; k: number of clients;
+    passes: sketch-refinement rounds (serve.store.StoreSpec.passes).
+    Returns {total_bits, per_client_bits, compression_vs_fp32}. Note this
+    is the analytic count (no uint32 word padding); SketchStore
+    .resident_bytes() reports the padded resident arrays.
+    """
+    algo = algo.lower()
+    fp32_total = 32 * n * k
+    if algo == "fp32":
+        total = fp32_total
+    elif algo == "pfed1bs":
+        total = 32 * n + k * passes * (m + FP_BITS)
+    else:
+        raise ValueError(algo)
+    return {
+        "total_bits": total,
+        "per_client_bits": total / k,
+        "compression_vs_fp32": fp32_total / total,
+    }

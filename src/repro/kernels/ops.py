@@ -146,6 +146,41 @@ def srht_adjoint_2d(
     return srht_adj_pallas(v, d, offsets, scale=scale, interpret=not _on_tpu())
 
 
+def srht_adjoint_batched_2d(
+    v: jax.Array,
+    d: jax.Array,
+    offsets: jax.Array,
+    *,
+    scale: float,
+    impl: str = "auto",
+) -> jax.Array:
+    """Batched fused adjoint: materialize B reconstructions in ONE pass.
+
+    The serving-tier decode (serve/store.py) turns B clients' one-bit
+    sketch residuals back into parameters at once. All B share the same
+    sketch operator (same d, offsets — the store's spec), so the batch
+    folds into the kernel's row grid: (B, num_chunks, m_chunk) cotangents
+    become (B * num_chunks) rows of the same row-blocked pallas_call that
+    srht_adjoint_2d launches for one client, instead of B sequential
+    kernel dispatches.
+
+    v: (B, num_chunks, m_chunk) float32; d: (num_chunks, c) diagonals;
+    offsets: (num_chunks, 1) int32. Returns (B, num_chunks, c) float32,
+    row b identical to srht_adjoint_2d(v[b], d, offsets).
+    """
+    impl = resolve_impl(impl)
+    b, rows, m_chunk = v.shape
+    c = d.shape[-1]
+    vf = v.reshape(b * rows, m_chunk)
+    df = jnp.broadcast_to(d[None], (b, rows, c)).reshape(b * rows, c)
+    off = jnp.broadcast_to(offsets[None], (b, rows, 1)).reshape(b * rows, 1)
+    if impl == "ref":
+        out = _ref.srht_adj_ref(vf, df, off, scale=scale)
+    else:
+        out = srht_adj_pallas(vf, df, off, scale=scale, interpret=not _on_tpu())
+    return out.reshape(b, rows, c)
+
+
 def dfht(
     x: jax.Array, d: jax.Array, *, scale: float, d_post: bool = False,
     impl: str = "auto",

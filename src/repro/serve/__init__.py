@@ -1,0 +1,13 @@
+"""Personalized serving tier (DESIGN.md §7).
+
+Three layers:
+  store.py   — client-state codec: one fp32 base model + per-client
+               bit-packed one-bit sketch residuals with an EDEN-style
+               optimal scale; batched fused-adjoint decode.
+  engine.py  — multi-tenant batched inference: per-client requests grouped
+               into vmapped decode batches over models/lm.decode_step,
+               with an LRU cache of hot materialized models.
+  router.py  — request-stream harness: Zipf-distributed client traffic
+               driven through the engine, with latency/throughput stats.
+"""
+from repro.serve.store import DenseStore, SketchStore, StoreSpec, make_store_spec

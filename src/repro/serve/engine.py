@@ -1,0 +1,212 @@
+"""Multi-tenant batched inference over a client store (DESIGN.md §7).
+
+One decode batch serves B *different* personalized models at once: the
+per-request client model is materialized from the store (one batched
+fused-adjoint reconstruct for all of a batch's cache misses), the batch is
+stacked along a leading model axis, and `models/lm.decode_step` runs
+vmapped over that axis — every request decodes against its own weights and
+its own KV cache in a single jitted step. Hot materialized models live in
+an LRU so a Zipf-heavy stream (router.py) pays reconstruction only on the
+long tail.
+
+The engine is store-agnostic: anything with `materialize(ids) -> stacked
+pytree` works (serve/store.SketchStore or the fp32 DenseStore baseline the
+benchmarks compare against).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    prompt_len: int = 12
+    gen_len: int = 16
+    max_batch: int = 8          # requests per vmapped decode batch
+    hot_models: int = 8         # LRU capacity (materialized models)
+
+
+@dataclasses.dataclass
+class BatchResult:
+    client_ids: list
+    tokens: np.ndarray          # (B, gen_len) int32 greedy continuations
+
+
+class ModelLRU:
+    """Hot materialized models, keyed by client id."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._d = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, cid):
+        if cid in self._d:
+            self._d.move_to_end(cid)
+            self.hits += 1
+            return self._d[cid]
+        self.misses += 1
+        return None
+
+    def put(self, cid, params) -> None:
+        self._d[cid] = params
+        self._d.move_to_end(cid)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __len__(self):
+        return len(self._d)
+
+
+class ServeEngine:
+    """Admit per-client requests, serve them in vmapped decode batches.
+
+    submit() enqueues (client_id, prompt); flush() drains the queue in
+    groups of at most max_batch, materializing each group's cold models
+    with ONE batched store decode. Requests in a group run in lockstep
+    (shared prompt_len/gen_len — the admission contract), each against its
+    own model and KV cache.
+    """
+
+    def __init__(self, arch: ArchConfig, store, cfg: EngineConfig):
+        self.arch = arch
+        self.store = store
+        self.cfg = cfg
+        self.lru = ModelLRU(cfg.hot_models)
+        self._pending = []
+        self.mat_seconds = []       # per materialize-call wall time
+        self.mat_batches = []       # misses decoded by that call
+        self.req_hits = 0           # per-REQUEST counters (a group of 4
+        self.req_misses = 0         # requests for one cold client is 4
+        #                             misses; ModelLRU counts unique ids)
+        self.decode_seconds = 0.0
+        self.tokens_generated = 0
+
+        def one_step(params, token, cache, pos):
+            logits, cache = lm.decode_step(arch, params, token, cache, pos)
+            return logits[0, 0], cache          # (vocab_pad,)
+
+        # vmap over the leading model axis: B requests, B models, B caches.
+        # (No cache donation: the CPU backend this container tests on does
+        # not implement it and would warn every step.)
+        self._decode = jax.jit(jax.vmap(one_step, in_axes=(0, 0, 0, None)))
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, client_id: int, prompt) -> None:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.shape != (self.cfg.prompt_len,):
+            # a raise, not an assert: under python -O a wrong-length prompt
+            # would survive to the prefill loop, whose jnp column indexing
+            # CLAMPS out of range — serving against a corrupted prompt
+            raise ValueError(
+                f"prompt must have shape ({self.cfg.prompt_len},); "
+                f"got {prompt.shape}"
+            )
+        self._pending.append((int(client_id), prompt))
+
+    def flush(self) -> list:
+        """Serve every pending request; returns [BatchResult, ...]."""
+        out = []
+        while self._pending:
+            group = self._pending[: self.cfg.max_batch]
+            self._pending = self._pending[self.cfg.max_batch:]
+            cids = [c for c, _ in group]
+            prompts = np.stack([p for _, p in group])
+            out.append(self.serve_batch(cids, prompts))
+        return out
+
+    # -- model acquisition ----------------------------------------------------
+
+    def _params_for(self, cids) -> list:
+        """Per-request model list, LRU-first; all of the group's misses are
+        decoded by a single batched store.materialize call. The miss batch
+        is padded to max_batch (duplicate ids) so the batched reconstruct
+        compiles exactly one shape — steady-state p50 latency is one
+        compiled kernel pass, never a retrace."""
+        cached = {c: self.lru.get(c) for c in dict.fromkeys(cids)}
+        misses = [c for c, p in cached.items() if p is None]
+        miss_set = set(misses)      # a request misses iff its model was not
+        self.req_misses += sum(c in miss_set for c in cids)   # resident when
+        self.req_hits += sum(c not in miss_set for c in cids)  # it arrived
+        if misses:
+            padded = misses + [misses[0]] * (self.cfg.max_batch - len(misses))
+            t0 = time.perf_counter()
+            stacked = self.store.materialize(padded)
+            jax.block_until_ready(stacked)
+            self.mat_seconds.append(time.perf_counter() - t0)
+            self.mat_batches.append(len(misses))
+            for i, c in enumerate(misses):
+                p = jax.tree.map(lambda a: a[i], stacked)
+                cached[c] = p
+                self.lru.put(c, p)
+        return [cached[c] for c in cids]
+
+    # -- batched multi-tenant decode ------------------------------------------
+
+    def serve_batch(self, cids, prompts: np.ndarray) -> BatchResult:
+        """prompts: (B, prompt_len) int32 -> greedy (B, gen_len)."""
+        cfg = self.cfg
+        b = prompts.shape[0]
+        params = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *self._params_for(cids)
+        )
+        cache1 = lm.init_cache(self.arch, 1, cfg.prompt_len + cfg.gen_len)
+        cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (b,) + a.shape), cache1
+        )
+        prompts = jnp.asarray(prompts, jnp.int32)
+
+        t0 = time.perf_counter()
+        logits = None
+        for t in range(cfg.prompt_len):       # prefill by stepping
+            tok = prompts[:, t].reshape(b, 1, 1)
+            logits, cache = self._decode(params, tok, cache, jnp.int32(t))
+        toks = []
+        cur = jnp.argmax(logits[:, : self.arch.vocab], axis=-1).astype(jnp.int32)
+        for t in range(cfg.gen_len):
+            toks.append(cur)
+            tok = cur.reshape(b, 1, 1)
+            logits, cache = self._decode(
+                params, tok, cache, jnp.int32(cfg.prompt_len + t)
+            )
+            cur = jnp.argmax(logits[:, : self.arch.vocab], axis=-1).astype(jnp.int32)
+        tokens = np.stack([np.asarray(t) for t in toks], axis=1)
+        self.decode_seconds += time.perf_counter() - t0
+        self.tokens_generated += b * cfg.gen_len
+        return BatchResult(client_ids=list(cids), tokens=tokens)
+
+    # -- stats -----------------------------------------------------------------
+
+    def stats(self) -> dict:
+        mat = np.asarray(self.mat_seconds) if self.mat_seconds else np.zeros(1)
+        return {
+            "requests_hit": self.req_hits,
+            "requests_miss": self.req_misses,
+            "hit_rate": self.req_hits / max(self.req_hits + self.req_misses, 1),
+            "materialize_calls": len(self.mat_seconds),
+            "materialize_p50_ms": float(np.percentile(mat, 50) * 1e3),
+            "materialize_p99_ms": float(np.percentile(mat, 99) * 1e3),
+            "materialize_total_s": float(mat.sum()) if self.mat_seconds else 0.0,
+            "decode_s": self.decode_seconds,
+            "tokens_generated": self.tokens_generated,
+            "tokens_per_sec": self.tokens_generated
+            / max(self.decode_seconds, 1e-9),
+        }
+
+    def reset_stats(self) -> None:
+        self.lru.hits = self.lru.misses = 0
+        self.req_hits = self.req_misses = 0
+        self.mat_seconds, self.mat_batches = [], []
+        self.decode_seconds = 0.0
+        self.tokens_generated = 0

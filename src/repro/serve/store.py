@@ -1,0 +1,442 @@
+"""Client-state store: one base model + per-client one-bit sketch residuals.
+
+After federated training every client owns a personalized model w_k. Storing
+K full fp32 models costs 32nK bits; at the ROADMAP's "millions of users"
+that is the serving fleet's dominant memory bill. The same SRHT machinery
+that compresses the paper's wire compresses the *state*: keep one fp32 base
+w_base (e.g. the client average) and, per client, only the bit-packed signs
+of the sketched residual
+
+    z_k   = Phi r_k,          r_k = w_k - w_base
+    store = (sign bits of z_k, alpha_k)       # m bits + one fp32 per pass
+
+decoded on demand as
+
+    w_hat_k = w_base + sum_p alpha_k^p * Phi_p^T sign(z_k^p).
+
+The scale alpha = <z, sign z> / n' = sum|z| / n' is the exact least-squares
+optimum of min_a ||a * Phi^T s - r||^2: each SRHT block satisfies
+Phi Phi^T = (c/m) I exactly (Lemma 2's Q Q^T = I argument), so the
+normal-equation denominator s^T Phi Phi^T s collapses to the padded block
+size. At m = n (square rotation, the default) this is EDEN's optimal
+unbiased one-bit scale <r, sign r>/n evaluated in the rotated basis
+(Vargaftik et al. 2022, cf. core/baselines.py), and the store costs
+~1 bit/param -> ~32x below fp32.
+
+`passes` stacks greedy refinement rounds: pass p sketches the residual the
+first p-1 passes failed to reconstruct, under an independently-seeded
+operator. Each pass keeps fraction ~2/pi of the remaining residual energy
+(at m = n), at m bits + 32 per client.
+
+Encode runs the existing fused SRHT forward (kernels/srht.py) and the
+sign/bit-pack kernel (kernels/onebit.py); decode is the batched fused
+adjoint (kernels/ops.srht_adjoint_batched_2d) — B clients materialize in
+ONE kernel pass per (pass, layout-block). Both `flat` (global-ravel SRHT)
+and `leaf` (per-leaf block SRHT, core/treesketch.py) layouts are supported;
+they are different-but-equivalent operators, mirroring PFed1BSConfig.layout.
+
+Checkpointing: `state_tree()` / `from_state_tree()` round-trip the packed
+words + scales + base through checkpoint/ckpt.py (see save_client_store /
+load_client_store there).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatten
+from repro.core import sketch as sk
+from repro.core import treesketch as ts
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """Static description of the codec: one sketch operator per pass."""
+
+    layout: str            # "flat" | "leaf"
+    num_clients: int
+    m_ratio: float         # sketch rows per parameter per pass (1.0 = EDEN)
+    chunk: int
+    seed: int
+    passes: int
+    n: int                 # parameters per client model
+    m: int                 # sketch rows per pass
+    n_pad: int             # sum of padded block sizes (the alpha denominator)
+    flat_specs: tuple      # (SketchSpec, ...) per pass   (layout == "flat")
+    tree_specs: tuple      # (TreeSketchSpec, ...) per pass (layout == "leaf")
+
+    @property
+    def words_per_pass(self) -> int:
+        return -(-self.m // 32)
+
+
+def make_store_spec(
+    template,
+    num_clients: int,
+    *,
+    m_ratio: float = 1.0,
+    chunk: int = 4096,
+    seed: int = 0,
+    passes: int = 1,
+    layout: str = "flat",
+) -> StoreSpec:
+    """Build the codec spec for `num_clients` models shaped like template.
+
+    m_ratio=1.0 (default) is the square-rotation/EDEN regime: ~1 bit per
+    parameter per pass. Lower ratios subsample (more compression, more
+    reconstruction error); `passes` > 1 stacks refinement rounds."""
+    assert layout in ("flat", "leaf"), layout
+    assert passes >= 1
+    n = flatten.tree_size(template)
+    if layout == "flat":
+        specs = tuple(
+            sk.make_sketch_spec(
+                n, m_ratio, chunk=chunk, seed=seed + 7919 * p, mode="chunked"
+            )
+            for p in range(passes)
+        )
+        m, n_pad = specs[0].m, specs[0].n_pad
+        return StoreSpec(
+            layout=layout, num_clients=num_clients, m_ratio=m_ratio,
+            chunk=chunk, seed=seed, passes=passes, n=n, m=m, n_pad=n_pad,
+            flat_specs=specs, tree_specs=(),
+        )
+    tspecs = tuple(
+        ts.make_tree_sketch_spec(
+            template, m_ratio, chunk=chunk, seed=seed + 7919 * p
+        )
+        for p in range(passes)
+    )
+    n_pad = sum(spec.n_pad for _, spec, _, _ in tspecs[0].entries)
+    return StoreSpec(
+        layout=layout, num_clients=num_clients, m_ratio=m_ratio, chunk=chunk,
+        seed=seed, passes=passes, n=n, m=tspecs[0].m, n_pad=n_pad,
+        flat_specs=(), tree_specs=tspecs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pure codec (jitted; StoreSpec is static)
+# ---------------------------------------------------------------------------
+
+def _sign(z):
+    return jnp.sign(z) + (z == 0)            # {-1,+1}, zero -> +1 (pack conv.)
+
+
+def _pack(sspec: StoreSpec, signs):
+    """(..., m) {-1,+1} -> (..., W) uint32, zero-padded to the word boundary
+    (pad bits pack as +1 and are sliced off again at decode)."""
+    pad = (-sspec.m) % 32
+    widths = [(0, 0)] * (signs.ndim - 1) + [(0, pad)]
+    return kops.pack_signs(jnp.pad(signs, widths))
+
+
+def _forward_flat_view(sspec: StoreSpec, p: int, r):
+    """z = Phi_p r as one (m,) vector. r: flat (n,) for layout=flat, a
+    residual pytree for layout=leaf."""
+    if sspec.layout == "flat":
+        return sk.sketch_forward(sspec.flat_specs[p], r)
+    return ts.flat_view(
+        sspec.tree_specs[p], ts.tree_sketch_forward(sspec.tree_specs[p], r)
+    )
+
+
+def _adjoint_from_flat_view(sspec: StoreSpec, p: int, v, template):
+    """Phi_p^T v for one client. v: (m,); returns r-shaped (flat vector or
+    pytree) to mirror _forward_flat_view."""
+    if sspec.layout == "flat":
+        return sk.sketch_adjoint(sspec.flat_specs[p], v)
+    tspec = sspec.tree_specs[p]
+    vd = {
+        path: jax.lax.dynamic_slice_in_dim(v, off, spec.m).reshape(
+            spec.num_chunks, spec.m_chunk
+        )
+        for path, spec, off, _ in tspec.entries
+    }
+    return ts.tree_sketch_adjoint(tspec, vd, template)
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",))
+def encode(sspec: StoreSpec, base, params):
+    """One client's packed state: (words (P, W) uint32, scales (P,) f32).
+
+    Pass p sketches the residual left over by passes < p (greedy
+    refinement); each pass's scale is its own least-squares optimum
+    sum|z| / n'. The forward is the fused SRHT kernel; the bit-pack is the
+    onebit pack kernel — float sketches exist only transiently."""
+    resid = jax.tree.map(
+        lambda w, b: w.astype(jnp.float32) - b.astype(jnp.float32),
+        params, base,
+    )
+    if sspec.layout == "flat":
+        resid = flatten.ravel(resid)
+    words, scales = [], []
+    for p in range(sspec.passes):
+        z = _forward_flat_view(sspec, p, resid)
+        alpha = jnp.sum(jnp.abs(z)) / sspec.n_pad
+        signs = _sign(z)
+        words.append(_pack(sspec, signs))
+        scales.append(alpha)
+        if p + 1 < sspec.passes:
+            rec = _adjoint_from_flat_view(sspec, p, alpha * signs, resid)
+            resid = jax.tree.map(lambda r, w: r - w, resid, rec)
+    return jnp.stack(words), jnp.stack(scales)
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",))
+def encode_batch(sspec: StoreSpec, base, params_stacked):
+    """vmapped encode: stacked client pytree (leading axis B) ->
+    (words (B, P, W), scales (B, P))."""
+    return jax.vmap(lambda pr: encode(sspec, base, pr))(params_stacked)
+
+
+def _unpacked_signs(sspec: StoreSpec, words):
+    """(B, P, W) uint32 -> (B, P, m) float32 {-1,+1}."""
+    return kops.unpack_signs(words)[..., : sspec.m]
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",))
+def decode_flat_batch(sspec: StoreSpec, words, scales) -> jax.Array:
+    """Batched residual reconstruction in the flat layout: (B, P, W) words +
+    (B, P) scales -> (B, n) float32 = sum_p alpha_p Phi_p^T sign_p.
+
+    One fused batched-adjoint kernel pass per refinement pass — the whole
+    decode batch shares each pass's operator, so B never multiplies kernel
+    dispatches (kernels/ops.srht_adjoint_batched_2d)."""
+    assert sspec.layout == "flat"
+    signs = _unpacked_signs(sspec, words)                  # (B, P, m)
+    out = jnp.zeros((words.shape[0], sspec.n), jnp.float32)
+    for p in range(sspec.passes):
+        w = sk.sketch_adjoint_batched(sspec.flat_specs[p], signs[:, p])
+        out = out + scales[:, p, None] * w
+    return out
+
+
+def decode_leaf_batch(sspec: StoreSpec, words, scales, template):
+    """Batched residual reconstruction in the leaf layout: returns a stacked
+    residual pytree (leading axis B), one fused batched adjoint per
+    (pass, leaf). Not jitted itself (template is a shape pytree); the
+    per-leaf batched adjoints underneath are."""
+    assert sspec.layout == "leaf"
+    signs = _unpacked_signs(sspec, words)                  # (B, P, m)
+    b = words.shape[0]
+    total = None
+    for p in range(sspec.passes):
+        tspec = sspec.tree_specs[p]
+        vd = {
+            path: (
+                scales[:, p, None]
+                * jax.lax.dynamic_slice_in_dim(signs[:, p], off, spec.m, axis=1)
+            ).reshape(b, spec.num_chunks, spec.m_chunk)
+            for path, spec, off, _ in tspec.entries
+        }
+        ftmpl = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), template
+        )
+        rec = ts.tree_sketch_adjoint_batched(tspec, vd, ftmpl)
+        total = rec if total is None else jax.tree.map(jnp.add, total, rec)
+    return total
+
+
+def decode_batch(sspec: StoreSpec, base, words, scales, template):
+    """Materialize B clients' parameters: base + decoded residuals, cast
+    back to the template leaf dtypes. Returns a stacked pytree (axis B).
+    Orchestrates the jitted batched-adjoint decoders; stays un-jitted
+    because `template` is a shape pytree, not data."""
+    if sspec.layout == "flat":
+        delta = decode_flat_batch(sspec, words, scales)    # (B, n)
+        resid = jax.vmap(lambda d: flatten.unravel_like(d, template))(delta)
+    else:
+        resid = decode_leaf_batch(sspec, words, scales, template)
+    return jax.tree.map(
+        lambda b0, r: (
+            b0.astype(jnp.float32)[None] + r.astype(jnp.float32)
+        ).astype(b0.dtype),
+        base, resid,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stores
+# ---------------------------------------------------------------------------
+
+def _checked_ids(client_ids, num_clients: int) -> jax.Array:
+    """Host-side bounds check: jnp's gather CLAMPS out-of-range ids and
+    scatter DROPS them — in a multi-tenant store that silently serves one
+    user another user's weights or loses a write. Fail loudly instead."""
+    ids = np.asarray(client_ids, np.int64)
+    if ids.size and (ids.min() < 0 or ids.max() >= num_clients):
+        raise ValueError(
+            f"client ids must be in [0, {num_clients}); "
+            f"got range [{ids.min()}, {ids.max()}]"
+        )
+    return jnp.asarray(ids, jnp.int32)
+
+class SketchStore:
+    """Mutable serving-side container: base model + K packed client states.
+
+    put/put_batch encode through the fused SRHT forward + pack kernels;
+    materialize decodes any id batch in one fused pass per (pass, block).
+    `template` is a pytree of ShapeDtypeStructs (or arrays) fixing the
+    client model's shapes/dtypes.
+    """
+
+    def __init__(self, sspec: StoreSpec, base, template=None):
+        self.sspec = sspec
+        self.base = base
+        self.template = (
+            jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), base)
+            if template is None
+            else template
+        )
+        k, p, w = sspec.num_clients, sspec.passes, sspec.words_per_pass
+        self.words = jnp.zeros((k, p, w), jnp.uint32)
+        self.scales = jnp.zeros((k, p), jnp.float32)
+        # One jitted decode per store instance (sspec/template closed over —
+        # they are static structure, not data). Retraces once per distinct
+        # batch size, then every materialize is a single compiled call.
+        self._decode = jax.jit(
+            lambda base, words, scales: decode_batch(
+                self.sspec, base, words, scales, self.template
+            )
+        )
+
+    def _check_ids(self, client_ids) -> jax.Array:
+        return _checked_ids(client_ids, self.sspec.num_clients)
+
+    # -- encode -------------------------------------------------------------
+
+    def put(self, client_id: int, params) -> None:
+        cid = self._check_ids([client_id])[0]
+        w, s = encode(self.sspec, self.base, params)
+        self.words = self.words.at[cid].set(w)
+        self.scales = self.scales.at[cid].set(s)
+
+    def put_batch(self, client_ids, params_stacked) -> None:
+        """Encode a stacked pytree (leading axis = len(client_ids))."""
+        ids = self._check_ids(client_ids)
+        w, s = encode_batch(self.sspec, self.base, params_stacked)
+        self.words = self.words.at[ids].set(w)
+        self.scales = self.scales.at[ids].set(s)
+
+    # -- decode -------------------------------------------------------------
+
+    def materialize(self, client_ids):
+        """Stacked approximate client models (leading axis B) for the given
+        ids — ONE batched fused-adjoint reconstruct, not B sequential ones."""
+        ids = self._check_ids(client_ids)
+        return self._decode(self.base, self.words[ids], self.scales[ids])
+
+    def materialize_one(self, client_id: int):
+        stacked = self.materialize([client_id])
+        return jax.tree.map(lambda a: a[0], stacked)
+
+    def materialize_flat(self, client_ids) -> jax.Array:
+        """(B, n) flat parameter vectors (flat layout only)."""
+        assert self.sspec.layout == "flat"
+        ids = self._check_ids(client_ids)
+        delta = decode_flat_batch(self.sspec, self.words[ids], self.scales[ids])
+        return flatten.ravel(self.base)[None] + delta
+
+    # -- accounting / persistence -------------------------------------------
+
+    def resident_bytes(self) -> dict:
+        """Actual resident state vs an fp32-per-client store (fl/comms.py
+        storage_bits is the analytic mirror of this)."""
+        k = self.sspec.num_clients
+        base_b = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(self.base)
+        )
+        state_b = self.words.size * 4 + self.scales.size * 4
+        fp32 = 4 * self.sspec.n * k
+        return {
+            "base_bytes": base_b,
+            "client_state_bytes": state_b,
+            "total_bytes": base_b + state_b,
+            "per_client_bytes": (base_b + state_b) / k,
+            "fp32_store_bytes": fp32,
+            "fp32_per_client_bytes": 4 * self.sspec.n,
+            "compression_vs_fp32": fp32 / (base_b + state_b),
+        }
+
+    def state_tree(self) -> dict:
+        """Checkpoint payload: packed words + scales + base (a plain pytree;
+        see checkpoint/ckpt.py save_client_store)."""
+        return {"base": self.base, "words": self.words, "scales": self.scales}
+
+    @classmethod
+    def from_state_tree(cls, sspec: StoreSpec, state: dict, template=None):
+        store = cls(sspec, state["base"], template)
+        store.words = jnp.asarray(state["words"], jnp.uint32)
+        store.scales = jnp.asarray(state["scales"], jnp.float32)
+        return store
+
+    def spec_meta(self) -> dict:
+        """JSON-serializable codec parameters (enough to rebuild the spec
+        against a template; stored in the checkpoint sidecar)."""
+        s = self.sspec
+        return {
+            "kind": "sketch_store",
+            "layout": s.layout, "num_clients": s.num_clients,
+            "m_ratio": s.m_ratio, "chunk": s.chunk, "seed": s.seed,
+            "passes": s.passes, "n": s.n, "m": s.m,
+        }
+
+
+class DenseStore:
+    """fp32-per-client baseline store with the same materialize surface —
+    the thing SketchStore is measured against (benchmarks/serve_bench.py)."""
+
+    def __init__(self, num_clients: int, template):
+        self.num_clients = num_clients
+        self.template = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), template
+        )
+        self.clients = jax.tree.map(
+            lambda l: jnp.zeros((num_clients,) + tuple(l.shape), l.dtype),
+            self.template,
+        )
+
+    def put(self, client_id: int, params) -> None:
+        cid = _checked_ids([client_id], self.num_clients)[0]
+        self.clients = jax.tree.map(
+            lambda all_, p: all_.at[cid].set(p.astype(all_.dtype)),
+            self.clients, params,
+        )
+
+    def put_batch(self, client_ids, params_stacked) -> None:
+        ids = _checked_ids(client_ids, self.num_clients)
+        self.clients = jax.tree.map(
+            lambda all_, p: all_.at[ids].set(p.astype(all_.dtype)),
+            self.clients, params_stacked,
+        )
+
+    def materialize(self, client_ids):
+        ids = _checked_ids(client_ids, self.num_clients)
+        return jax.tree.map(lambda a: a[ids], self.clients)
+
+    def materialize_one(self, client_id: int):
+        cid = _checked_ids([client_id], self.num_clients)[0]
+        return jax.tree.map(lambda a: a[cid], self.clients)
+
+    def resident_bytes(self) -> dict:
+        per_client = sum(
+            int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(self.template)
+        )
+        total = per_client * self.num_clients
+        return {
+            "base_bytes": 0,
+            "client_state_bytes": total,
+            "total_bytes": total,
+            "per_client_bytes": per_client,
+            "fp32_store_bytes": total,
+            "fp32_per_client_bytes": per_client,
+            "compression_vs_fp32": 1.0,
+        }

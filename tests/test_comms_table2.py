@@ -70,3 +70,38 @@ def test_reduction_vs_fedavg_ordering():
 def test_unknown_algo_raises():
     with pytest.raises(ValueError):
         comms.round_bits("nope", n=N, m=M, s=S)
+
+
+# ---------------------------------------------------------------------------
+# Serving-tier storage accounting (fl/comms.storage_bits — the README
+# cost-model row for the personalized-state store, serve/store.py)
+# ---------------------------------------------------------------------------
+
+def test_storage_bits_formulas():
+    """fp32: 32nK. pfed1bs: 32n base + K*(m+32) per pass."""
+    k = 64
+    fp32 = comms.storage_bits("fp32", n=N, m=N, k=k)
+    assert fp32["total_bits"] == 32 * N * k
+    assert fp32["compression_vs_fp32"] == 1.0
+
+    ours = comms.storage_bits("pfed1bs", n=N, m=N, k=k)   # m = n: EDEN regime
+    assert ours["total_bits"] == 32 * N + k * (N + 32)
+    assert ours["per_client_bits"] == (32 * N + k * (N + 32)) / k
+
+    two = comms.storage_bits("pfed1bs", n=N, m=N, k=k, passes=2)
+    assert two["total_bits"] == 32 * N + k * 2 * (N + 32)
+
+
+def test_storage_concrete_readme_numbers():
+    """The literal compression factors shown in README.md (m = n, 1 bit per
+    parameter per client + amortized fp32 base)."""
+    for k, expect in ((64, 21.33), (256, 28.44), (1024, 31.03)):
+        got = comms.storage_bits("pfed1bs", n=N, m=N, k=k)["compression_vs_fp32"]
+        assert abs(got - expect) < 0.01, (k, got)
+    # >= 20x resident-state compression from 64 clients up
+    assert comms.storage_bits("pfed1bs", n=N, m=N, k=64)["compression_vs_fp32"] > 20
+
+
+def test_storage_unknown_algo_raises():
+    with pytest.raises(ValueError):
+        comms.storage_bits("nope", n=N, m=M, k=4)

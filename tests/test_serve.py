@@ -1,0 +1,394 @@
+"""Serving subsystem tests (serve/store, serve/engine, serve/router,
+batched reconstruct, store checkpointing).
+
+Fast tier-1: everything here is unit-scale (tiny models, a few decode
+steps) — the multi-round end-to-end quality run lives in
+benchmarks/serve_bench.py and the example smoke tests carry the `slow`
+marker instead.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core import flatten
+from repro.core import sketch as sk
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import smallnets as sn
+from repro.serve import router
+from repro.serve import store as st
+from repro.serve.engine import EngineConfig, ModelLRU, ServeEngine
+
+
+def _mlp_template(key=0, input_dim=48, hidden=24):
+    return sn.init_mlp(jax.random.key(key), input_dim=input_dim, hidden=hidden)
+
+
+# ---------------------------------------------------------------------------
+# Batched fused adjoint (the decode kernel path)
+# ---------------------------------------------------------------------------
+
+def test_batched_adjoint_matches_ref_oracle_rowwise():
+    """ops.srht_adjoint_batched_2d == per-row kernels/ref.py oracle,
+    bit-exact, on both the ref dispatch and the Pallas (interpret) path."""
+    b, rows, c, m_chunk = 5, 3, 256, 64
+    key = jax.random.key(0)
+    kv, kd, ko = jax.random.split(key, 3)
+    v = jax.random.normal(kv, (b, rows, m_chunk), jnp.float32)
+    d = jax.random.rademacher(kd, (rows, c), dtype=jnp.float32)
+    off = jax.random.randint(ko, (rows, 1), 0, c // m_chunk).astype(jnp.int32)
+    scale = float(np.sqrt(c / m_chunk))
+
+    oracle = np.stack([
+        np.asarray(kref.srht_adj_ref(v[i], d, off, scale=scale))
+        for i in range(b)
+    ])
+    # ref dispatch: bit-exact with the oracle (same butterfly algorithm)
+    got_ref = np.asarray(
+        kops.srht_adjoint_batched_2d(v, d, off, scale=scale, impl="ref")
+    )
+    assert got_ref.shape == (b, rows, c)
+    np.testing.assert_array_equal(got_ref, oracle)
+    # pallas path: bit-exact with the UNbatched pallas adjoint per client
+    # (same kernel, bigger row grid), allclose with the oracle at the
+    # repo's matmul-FHT-vs-butterfly tolerance (cf. test_srht_fused.py)
+    got_pl = np.asarray(
+        kops.srht_adjoint_batched_2d(v, d, off, scale=scale, impl="pallas")
+    )
+    seq_pl = np.stack([
+        np.asarray(kops.srht_adjoint_2d(v[i], d, off, scale=scale, impl="pallas"))
+        for i in range(b)
+    ])
+    np.testing.assert_array_equal(got_pl, seq_pl)
+    np.testing.assert_allclose(got_pl, oracle, rtol=2e-4, atol=2e-4)
+
+
+def test_sketch_adjoint_batched_matches_sequential():
+    """sketch_adjoint_batched row b is bit-exact with sketch_adjoint(v[b])."""
+    n, b = 1000, 7
+    spec = sk.make_sketch_spec(n, 0.25, chunk=256, mode="chunked")
+    v = jax.random.normal(jax.random.key(1), (b, spec.m), jnp.float32)
+    batched = np.asarray(sk.sketch_adjoint_batched(spec, v))
+    for i in range(b):
+        np.testing.assert_array_equal(
+            batched[i], np.asarray(sk.sketch_adjoint(spec, v[i]))
+        )
+
+
+def test_sketch_adjoint_batched_global_mode():
+    spec = sk.make_sketch_spec(300, 0.2, chunk=4096, mode="global")
+    v = jax.random.normal(jax.random.key(2), (3, spec.m), jnp.float32)
+    batched = np.asarray(sk.sketch_adjoint_batched(spec, v))
+    for i in range(3):
+        np.testing.assert_array_equal(
+            batched[i], np.asarray(sk.sketch_adjoint(spec, v[i]))
+        )
+
+
+# ---------------------------------------------------------------------------
+# Codec: encode / decode round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["flat", "leaf"])
+def test_store_roundtrip_reduces_residual(layout):
+    """Decoded residual keeps ~2/pi of the energy at m=n (EDEN regime):
+    reconstruction error must be well below the all-zero-residual baseline,
+    and a second refinement pass must strictly improve it."""
+    base = _mlp_template(0)
+    k = 4
+    clients = jax.vmap(lambda kk: sn.init_mlp(kk, input_dim=48, hidden=24))(
+        jax.random.split(jax.random.key(1), k)
+    )
+    errs = {}
+    for passes in (1, 2):
+        sspec = st.make_store_spec(
+            base, k, m_ratio=1.0, chunk=512, layout=layout, passes=passes
+        )
+        store = st.SketchStore(sspec, base)
+        store.put_batch(np.arange(k), clients)
+        rec = store.materialize(np.arange(k))
+        rv = jax.vmap(flatten.ravel)(rec)
+        cv = jax.vmap(flatten.ravel)(clients)
+        bv = flatten.ravel(base)[None]
+        errs[passes] = float(jnp.sum((rv - cv) ** 2) / jnp.sum((cv - bv) ** 2))
+    assert errs[1] < 0.55        # theory: 1 - 2/pi ~= 0.36 at m = n
+    assert errs[2] < errs[1]     # refinement strictly helps
+    assert errs[2] < 0.25        # ~ (1 - 2/pi)^2
+
+
+@pytest.mark.parametrize("layout", ["flat", "leaf"])
+def test_materialize_one_matches_batch_row(layout):
+    base = _mlp_template(0)
+    clients = jax.vmap(lambda kk: sn.init_mlp(kk, input_dim=48, hidden=24))(
+        jax.random.split(jax.random.key(3), 5)
+    )
+    sspec = st.make_store_spec(base, 5, m_ratio=0.5, chunk=512, layout=layout)
+    store = st.SketchStore(sspec, base)
+    store.put_batch(np.arange(5), clients)
+    batch = store.materialize([4, 1, 2])
+    one = store.materialize_one(1)
+    for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(batch)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b[1]))
+
+
+def test_encode_wire_format_matches_oracle():
+    """Stored words are exactly pack_ref(sign(Phi r)) and the stored scale
+    is sum|z| / n' — the codec's wire format pinned against the oracle."""
+    base = _mlp_template(0)
+    params = sn.init_mlp(jax.random.key(9), input_dim=48, hidden=24)
+    sspec = st.make_store_spec(base, 1, m_ratio=1.0, chunk=512)
+    store = st.SketchStore(sspec, base)
+    store.put(0, params)
+
+    r = flatten.ravel(params) - flatten.ravel(base)
+    z = sk.sketch_forward(sspec.flat_specs[0], r)
+    signs = jnp.sign(z) + (z == 0)
+    pad = (-sspec.m) % 32
+    expect_words = kref.pack_ref(jnp.pad(signs, (0, pad)))
+    np.testing.assert_array_equal(
+        np.asarray(store.words[0, 0]), np.asarray(expect_words)
+    )
+    expect_scale = float(jnp.sum(jnp.abs(z)) / sspec.n_pad)
+    assert np.isclose(float(store.scales[0, 0]), expect_scale, rtol=1e-6)
+
+
+def test_store_flat_decode_is_lsq_scale():
+    """At m = n the decode is base + alpha * Phi^T sign(Phi r) with the
+    least-squares-optimal alpha: check the reconstruction correlates
+    positively and no alternative scalar multiple does better."""
+    base = _mlp_template(0)
+    params = sn.init_mlp(jax.random.key(5), input_dim=48, hidden=24)
+    sspec = st.make_store_spec(base, 1, m_ratio=1.0, chunk=512)
+    store = st.SketchStore(sspec, base)
+    store.put(0, params)
+    r = flatten.ravel(params) - flatten.ravel(base)
+    rec = store.materialize_flat([0])[0] - flatten.ravel(base)
+    err_opt = float(jnp.sum((rec - r) ** 2))
+    for factor in (0.5, 0.9, 1.1, 2.0):
+        err = float(jnp.sum((factor * rec - r) ** 2))
+        assert err_opt <= err + 1e-6, factor
+
+
+def test_store_rejects_out_of_range_ids():
+    """Out-of-range ids must raise: jnp gathers clamp and scatters drop,
+    which in a multi-tenant store means serving the wrong user's weights
+    or silently losing a write."""
+    base = _mlp_template(0)
+    store = st.SketchStore(st.make_store_spec(base, 3, chunk=512), base)
+    with pytest.raises(ValueError, match=r"\[0, 3\)"):
+        store.materialize([3])
+    with pytest.raises(ValueError):
+        store.put(-1, base)
+    dense = st.DenseStore(3, base)
+    with pytest.raises(ValueError):
+        dense.materialize_one(7)
+    with pytest.raises(ValueError):
+        dense.put_batch([0, 3], jax.tree.map(lambda a: jnp.stack([a, a]), base))
+
+
+def test_dense_store_exact():
+    base = _mlp_template(0)
+    clients = jax.vmap(lambda kk: sn.init_mlp(kk, input_dim=48, hidden=24))(
+        jax.random.split(jax.random.key(4), 3)
+    )
+    store = st.DenseStore(3, base)
+    store.put_batch(np.arange(3), clients)
+    rec = store.materialize([2, 0])
+    for a, b in zip(jax.tree.leaves(rec), jax.tree.leaves(clients)):
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[2]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[0]))
+    assert store.resident_bytes()["compression_vs_fp32"] == 1.0
+
+
+def test_store_compression_accounting_matches_comms():
+    """SketchStore.resident_bytes agrees with fl/comms.storage_bits up to
+    the uint32 word padding (exact when m % 32 == 0)."""
+    from repro.fl import comms
+
+    base = _mlp_template(0)
+    k = 8
+    sspec = st.make_store_spec(base, k, m_ratio=1.0, chunk=512)
+    assert sspec.m % 32 == 0
+    store = st.SketchStore(sspec, base)
+    rb = store.resident_bytes()
+    analytic = comms.storage_bits("pfed1bs", n=sspec.n, m=sspec.m, k=k)
+    # base leaves are all fp32 here, so resident bytes == analytic bits/8
+    assert rb["client_state_bytes"] * 8 == k * (sspec.m + 32)
+    assert rb["total_bytes"] * 8 == analytic["total_bits"]
+
+
+# ---------------------------------------------------------------------------
+# Engine: LRU + multi-tenant batched decode
+# ---------------------------------------------------------------------------
+
+def test_model_lru_eviction_and_hits():
+    lru = ModelLRU(2)
+    assert lru.get(0) is None
+    lru.put(0, "a")
+    lru.put(1, "b")
+    assert lru.get(0) == "a"          # hit; 0 now most-recent
+    lru.put(2, "c")                   # evicts 1
+    assert lru.get(1) is None
+    assert lru.get(0) == "a" and lru.get(2) == "c"
+    assert lru.hits == 3 and lru.misses == 2
+    assert len(lru) == 2
+
+
+def _tiny_arch():
+    from repro import configs
+
+    return configs.get("granite-8b").reduced(
+        n_layers=2, d_model=32, d_ff=64, vocab=64, n_heads=2, n_kv=1,
+        head_dim=16, remat=False,
+    )
+
+
+def test_engine_multitenant_matches_per_client_decode():
+    """A vmapped multi-tenant batch must produce exactly the tokens each
+    client's model produces when decoded alone."""
+    from repro.models import lm
+
+    arch = _tiny_arch()
+    k = 3
+    clients = jax.vmap(lambda kk: lm.init_params(arch, kk))(
+        jax.random.split(jax.random.key(0), k)
+    )
+    store = st.DenseStore(k, jax.tree.map(lambda a: a[0], clients))
+    store.put_batch(np.arange(k), clients)
+
+    cfg = EngineConfig(prompt_len=4, gen_len=5, max_batch=3, hot_models=2)
+    engine = ServeEngine(arch, store, cfg)
+    prompts = router.random_prompts(7, k, cfg.prompt_len, arch.vocab)
+    for i in range(k):
+        engine.submit(i, prompts[i])
+    results = engine.flush()
+    assert len(results) == 1
+    got = results[0].tokens                              # (k, gen)
+
+    # oracle: each client alone, plain decode_step loop
+    for i in range(k):
+        params = jax.tree.map(lambda a: a[i], clients)
+        cache = lm.init_cache(arch, 1, cfg.prompt_len + cfg.gen_len)
+        logits = None
+        for t in range(cfg.prompt_len):
+            logits, cache = lm.decode_step(
+                arch, params, prompts[i, t].reshape(1, 1), cache, jnp.int32(t)
+            )
+        cur = int(jnp.argmax(logits[0, 0, : arch.vocab]))
+        toks = []
+        for t in range(cfg.gen_len):
+            toks.append(cur)
+            logits, cache = lm.decode_step(
+                arch, params, jnp.full((1, 1), cur, jnp.int32), cache,
+                jnp.int32(cfg.prompt_len + t),
+            )
+            cur = int(jnp.argmax(logits[0, 0, : arch.vocab]))
+        np.testing.assert_array_equal(got[i], np.asarray(toks, np.int32))
+
+
+def test_engine_batches_misses_and_caches_hits():
+    from repro.models import lm
+
+    arch = _tiny_arch()
+    base = lm.init_params(arch, jax.random.key(0))
+    k = 6
+    sspec = st.make_store_spec(base, k, m_ratio=0.25, chunk=1024)
+    store = st.SketchStore(sspec, base)
+    cfg = EngineConfig(prompt_len=2, gen_len=2, max_batch=4, hot_models=2)
+    engine = ServeEngine(arch, store, cfg)
+    prompts = router.random_prompts(8, 6, cfg.prompt_len, arch.vocab)
+    for i, c in enumerate([0, 1, 0, 2, 3, 1]):
+        engine.submit(c, prompts[i])
+    engine.flush()
+    s = engine.stats()
+    # group1 = [0,1,0,2]: LRU empty -> unique misses {0,1,2} decoded in ONE
+    # materialize call; all 4 requests are misses (the duplicate 0 arrived
+    # before its model was resident). LRU(2) then holds {1, 2}.
+    # group2 = [3,1]: 3 misses (second call), 1 hits.
+    assert s["materialize_calls"] == 2
+    assert s["requests_miss"] == 5
+    assert s["requests_hit"] == 1
+    assert s["tokens_generated"] == 6 * cfg.gen_len
+
+
+# ---------------------------------------------------------------------------
+# Router stream shape
+# ---------------------------------------------------------------------------
+
+def test_zipf_stream_is_heavy_tailed():
+    ids = router.zipf_stream(0, 100, 4000, alpha=1.2)
+    assert ids.shape == (4000,)
+    assert ids.min() >= 0 and ids.max() < 100
+    _, counts = np.unique(ids, return_counts=True)
+    top = np.sort(counts)[::-1]
+    assert top[0] > 4000 * 0.1       # hottest client dominates
+    probs = router.zipf_probs(100, 1.2)
+    assert np.isclose(probs.sum(), 1.0)
+    assert probs[0] > probs[1] > probs[-1]
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing the packed store
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["flat", "leaf"])
+def test_client_store_checkpoint_roundtrip(tmp_path, layout):
+    base = _mlp_template(0)
+    k = 3
+    clients = jax.vmap(lambda kk: sn.init_mlp(kk, input_dim=48, hidden=24))(
+        jax.random.split(jax.random.key(6), k)
+    )
+    sspec = st.make_store_spec(
+        base, k, m_ratio=0.5, chunk=512, layout=layout, passes=2, seed=11
+    )
+    store = st.SketchStore(sspec, base)
+    store.put_batch(np.arange(k), clients)
+
+    path = str(tmp_path / "store.npz")
+    ckpt.save_client_store(path, store, extra_meta={"round": 42})
+    loaded = ckpt.load_client_store(path, base)
+
+    np.testing.assert_array_equal(np.asarray(loaded.words), np.asarray(store.words))
+    np.testing.assert_array_equal(np.asarray(loaded.scales), np.asarray(store.scales))
+    for a, b in zip(jax.tree.leaves(loaded.base), jax.tree.leaves(store.base)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert loaded.sspec == store.sspec
+    assert ckpt.load_meta(path)["round"] == 42
+
+    # decoded models identical before/after the round trip
+    a = store.materialize([0, 2])
+    b = loaded.materialize([0, 2])
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_client_store_checkpoint_wrong_template_raises(tmp_path):
+    base = _mlp_template(0)
+    store = st.SketchStore(st.make_store_spec(base, 2), base)
+    path = str(tmp_path / "store.npz")
+    ckpt.save_client_store(path, store)
+    other = sn.init_mlp(jax.random.key(0), input_dim=80, hidden=24)
+    with pytest.raises(ValueError):
+        ckpt.load_client_store(path, other)
+
+
+def test_load_checkpoint_shape_mismatch_is_value_error(tmp_path):
+    """The old bare `assert` vanished under python -O; must be ValueError
+    and must name the offending leaf."""
+    tree = {"w": jnp.ones((3, 4)), "b": jnp.zeros((4,))}
+    path = str(tmp_path / "c.npz")
+    ckpt.save_checkpoint(path, tree)
+    bad = {"w": jnp.ones((3, 5)), "b": jnp.zeros((4,))}
+    with pytest.raises(ValueError, match="'w'"):
+        ckpt.load_checkpoint(path, bad)
+
+
+def test_load_checkpoint_missing_leaf_is_value_error(tmp_path):
+    tree = {"w": jnp.ones((3, 4))}
+    path = str(tmp_path / "c.npz")
+    ckpt.save_checkpoint(path, tree)
+    with pytest.raises(ValueError, match="missing leaf"):
+        ckpt.load_checkpoint(path, {"w": jnp.ones((3, 4)), "extra": jnp.ones(2)})
