@@ -1,0 +1,96 @@
+"""Scenario-matrix bench: algorithm x heterogeneity accuracy-vs-bits sweep.
+
+Runs the exp/ harness (src/repro/exp/) over the named heterogeneity matrix
+and emits the paper-style Table-1/2 artifact:
+
+  BENCH_exp.json        canonical: all 7 algorithms x all 7 scenarios,
+                        12 rounds, periodic eval curves (also mirrored to
+                        experiments/bench/ with the rendered markdown at
+                        experiments/bench/EXP_MATRIX.md)
+  BENCH_exp.fast.json   --fast smoke tier: 7 algorithms x 3 scenarios
+                        (iid / dir0.1 / straggler — one cell per
+                        heterogeneity axis), 3 rounds; never touches the
+                        canonical artifacts
+
+Both artifacts pass exp/report.validate_matrix — including the invariant
+that every cell's billed bits (pFed1BS's in particular) re-derive EXACTLY
+from fl/comms.accumulate_round_bits over the recorded per-round realized
+participation. `python -m benchmarks.report --validate` re-checks this
+from the file, which is what the CI bench-smoke job gates on.
+
+Run: PYTHONPATH=src python -m benchmarks.run exp [--fast]
+     (or this module directly: python -m benchmarks.exp_bench [--fast])
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+FAST_SCENARIOS = ("iid", "dir0.1", "straggler")
+
+
+def bench_matrix(fast: bool = False, progress=None) -> dict:
+    from repro.exp import report, runner, scenarios
+
+    matrix = scenarios.paper_matrix()
+    if fast:
+        cfg = runner.ExpConfig(
+            num_clients=8, rounds=3, local_steps=2, batch=16, hidden=32,
+            train_per_client=64, test_per_client=32, chunk=2048,
+        )
+        use = {k: matrix[k] for k in FAST_SCENARIOS}
+    else:
+        cfg = runner.ExpConfig(
+            num_clients=10, rounds=12, local_steps=4, batch=24, hidden=48,
+            train_per_client=128, test_per_client=64, chunk=2048,
+            eval_every=3, noise_scale=3.0,  # hard enough that the matrix
+            #                                 separates the algorithms
+        )
+        use = matrix
+    results = runner.sweep(runner.ALGOS, use, cfg, progress=progress)
+    results["fast"] = fast
+    report.validate_matrix(results)
+    return results
+
+
+def write_artifacts(results: dict, out_path: str | None = None) -> str:
+    """BENCH_exp.json writer; --fast runs land in BENCH_exp.fast.json and
+    never touch the canonical artifacts (same policy as the other benches).
+    The canonical run also renders experiments/bench/EXP_MATRIX.md."""
+    from repro.exp import report
+
+    fast = bool(results.get("fast"))
+    if out_path is None:
+        out_path = "BENCH_exp.fast.json" if fast else "BENCH_exp.json"
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    if not fast:
+        os.makedirs("experiments/bench", exist_ok=True)
+        with open("experiments/bench/BENCH_exp.json", "w") as f:
+            json.dump(results, f, indent=2)
+        with open("experiments/bench/EXP_MATRIX.md", "w") as f:
+            f.write(report.matrix_markdown(results))
+    return out_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    results = bench_matrix(
+        fast=args.fast,
+        progress=lambda c: print(
+            f"{c['algo']:9s} x {c['scenario']:11s} acc={c['acc']:.4f} "
+            f"bits={c['total_bits']:>12,} s/round={c['s_per_round']}",
+            flush=True,
+        ),
+    )
+    path = write_artifacts(results, args.out)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

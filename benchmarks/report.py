@@ -1,7 +1,18 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the artifacts.
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the artifacts,
+and validate the BENCH_* artifact schemas.
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--multi-pod] [--tag X]
 Prints a GitHub-markdown table; EXPERIMENTS.md embeds the output.
+
+Validator mode (the CI bench-smoke gate):
+
+  PYTHONPATH=src python -m benchmarks.report --validate --fast
+
+checks every expected BENCH_*.fast.json (or canonical BENCH_*.json
+without --fast) at the repo root for presence and required keys, and runs
+the exp artifact through exp/report.validate_matrix (which re-derives the
+bit accounting from fl/comms). Exit 1 on any miss — a bench script whose
+artifact rots now fails the job instead of rotting silently.
 """
 from __future__ import annotations
 
@@ -9,8 +20,62 @@ import argparse
 import glob
 import json
 import os
+import sys
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+# required (dotted) keys per BENCH artifact stem — the load-bearing numbers
+# README/DESIGN cite; a bench refactor that drops one fails --validate.
+BENCH_SCHEMAS = {
+    "BENCH_sketch": [
+        "sketch.fwd_fused_us", "sketch.fwd_staged_us", "sketch.fwd_speedup",
+        "round.round_fused_us", "round.round_staged_us", "round.round_speedup",
+    ],
+    "BENCH_round_sharded": [
+        "device_count", "grid", "scaling", "sublinear_mesh_sizes",
+    ],
+    "BENCH_serve": [
+        "quality.acc_fp32_store", "quality.acc_sketch_store",
+        "quality.compression_vs_fp32", "reconstruct.batches", "stream.grid",
+    ],
+    "BENCH_exp": [
+        "cells", "algos", "scenarios", "config",
+    ],
+}
+
+
+def _dig(obj, dotted: str) -> bool:
+    for part in dotted.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return False
+        obj = obj[part]
+    return True
+
+
+def validate_bench_artifacts(fast: bool, root: str = ".") -> list[str]:
+    """Returns a list of problems ([] = all artifacts present and sane)."""
+    problems = []
+    for stem, required in BENCH_SCHEMAS.items():
+        path = os.path.join(root, f"{stem}.fast.json" if fast else f"{stem}.json")
+        if not os.path.exists(path):
+            problems.append(f"{path}: missing (did its bench run?)")
+            continue
+        try:
+            obj = json.load(open(path))
+        except json.JSONDecodeError as e:
+            problems.append(f"{path}: unparseable JSON ({e})")
+            continue
+        for key in required:
+            if not _dig(obj, key):
+                problems.append(f"{path}: missing required key {key!r}")
+        if stem == "BENCH_exp" and not any(p.startswith(path) for p in problems):
+            from repro.exp.report import validate_matrix
+
+            try:
+                validate_matrix(obj)
+            except ValueError as e:
+                problems.append(f"{path}: {e}")
+    return problems
 
 
 def fmt_s(x):
@@ -33,7 +98,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--validate", action="store_true",
+                    help="check BENCH_* artifact schemas; exit 1 on any miss")
+    ap.add_argument("--fast", action="store_true",
+                    help="with --validate: check the *.fast.json smoke tier")
     args = ap.parse_args()
+    if args.validate:
+        problems = validate_bench_artifacts(fast=args.fast)
+        tier = "fast" if args.fast else "canonical"
+        if problems:
+            for p in problems:
+                print(f"SCHEMA FAIL: {p}")
+            sys.exit(1)
+        print(f"all {len(BENCH_SCHEMAS)} {tier} BENCH artifacts validate")
+        return
     mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
     recs = load(mesh_name, args.tag)
     if not recs:

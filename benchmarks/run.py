@@ -20,10 +20,18 @@ same protocols); the full-scale numbers live in the dry-run roofline.
                   accuracy, batched vs sequential reconstruct, Zipf request
                   streams over K personalized LMs (BENCH_serve.json;
                   --fast emits BENCH_serve.fast.json)
+  exp             scenario-matrix sweep: 7 algorithms x heterogeneity
+                  scenarios (Dirichlet alpha, label skew, imbalance,
+                  stragglers, availability cycling) -> accuracy vs bits
+                  (BENCH_exp.json; --fast emits BENCH_exp.fast.json)
   roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
-One:      PYTHONPATH=src python -m benchmarks.run --only table2 [--fast]
+One:      PYTHONPATH=src python -m benchmarks.run exp [--fast]
+          (--only exp is the same; positional wins if both given)
+
+A sub-benchmark that raises is reported and the process exits nonzero
+after the remaining ones run — the CI bench-smoke job gates on this.
 """
 from __future__ import annotations
 
@@ -328,6 +336,23 @@ def bench_serve(fast=False):
     return results
 
 
+def bench_exp(fast=False):
+    """Scenario-matrix sweep — emits BENCH_exp.json (fast:
+    BENCH_exp.fast.json; see benchmarks/exp_bench.py)."""
+    from benchmarks import exp_bench
+
+    results = exp_bench.bench_matrix(
+        fast=fast,
+        progress=lambda c: emit(
+            f"exp/{c['scenario']}/{c['algo']}", c["us_per_round"],
+            f"acc={c['acc']:.4f} total_bits={c['total_bits']} "
+            f"s={'/'.join(str(s) for s in c['s_per_round'][:4])}"
+        ),
+    )
+    exp_bench.write_artifacts(results)
+    return results
+
+
 BENCHES = {
     "table2": bench_table2,
     "fig3_fig4": bench_fig3_fig4,
@@ -340,19 +365,33 @@ BENCHES = {
     "sketch": bench_sketch,
     "round_sharded": bench_round_sharded,
     "serve": bench_serve,
+    "exp": bench_exp,
     "roofline": bench_roofline,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("bench", nargs="?", default=None, choices=list(BENCHES),
+                    help="benchmark to run (same as --only)")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    todo = [args.only] if args.only else list(BENCHES)
+    only = args.bench or args.only
+    todo = [only] if only else list(BENCHES)
+    failures = []
     for name in todo:
-        BENCHES[name](fast=args.fast)
+        try:
+            BENCHES[name](fast=args.fast)
+        except Exception:
+            import traceback
+
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"# FAILED: {', '.join(failures)}", flush=True)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,24 @@ they differ in how client updates Delta_k are compressed:
              per-tensor scale alpha* = mean|Delta| with straight-through
              semantics (Li et al. 2024).
 
+Round surface (shared with PFed1BS and the scenario-matrix harness,
+DESIGN.md §8): every algorithm is the same three-stage round
+
+    gather S sampled clients -> per-client `_encode` of the local delta
+    -> weighted aggregate -> `_finish` server step,
+
+so one jitted `round` serves all six, computes local SGD only for the S
+sampled clients (the seed ran all K then masked), and accepts an external
+`participants=(idx, active)` draw from exp/scenarios.py participation
+models (straggler dropout / availability cycling). OBCSAA's and EDEN's
+projections route through the shared SRHT dispatch (core/sketch.py over
+kernels/ops — fused Pallas kernels where available): both specs are built
+once at engine construction, EDEN's as the square m=n rotation, instead of
+private per-trace paths. With `BaselineConfig(sharded_round=True)` the
+client side (local steps + encode) runs inside the shard_map federation
+executor (launch/fedexec.py::sharded_baseline_round) over the same `fed`
+mesh as pFed1BS.
+
 Communication accounting for each is in `repro.fl.comms`.
 """
 from __future__ import annotations
@@ -30,9 +48,8 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import flatten
+from repro.core import flatten, rounds
 from repro.core import sketch as sk
-from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +64,12 @@ class BaselineConfig:
     chunk: int = 4096
     znoise: float = 1e-3           # zSignFed perturbation std
     seed: int = 0
+    # --- round executor (DESIGN.md §6/§8) ---
+    sharded_round: bool = False    # run the client side (local steps +
+    #                                encode) through the shard_map federation
+    #                                executor (launch/fedexec.py).
+    fed_shards: int = 1            # size of the `fed` mesh axis (must divide
+    #                                `participate`; needs that many devices).
 
 
 class BaselineState(NamedTuple):
@@ -55,12 +78,41 @@ class BaselineState(NamedTuple):
 
 
 class BaselineFL:
-    def __init__(self, cfg: BaselineConfig, loss_fn: Callable, params_template):
+    """Engine binding one baseline to a task (same surface as PFed1BS).
+
+    round(state, batches, weights, key, participants=None): batches is the
+    full (K, R, B, ...) pytree, weights (K,) p_k. `participants` is an
+    optional externally drawn (idx (S,) int32, active (S,) float32) pair —
+    S must equal cfg.participate; active=0 rows trained but transmit
+    nothing (straggler semantics: no vote weight, no bits). When omitted
+    the engine samples S of K uniformly, all active.
+    """
+
+    def __init__(self, cfg: BaselineConfig, loss_fn: Callable, params_template,
+                 mesh=None):
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.n = flatten.tree_size(params_template)
         self.template = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params_template)
+        # shared SRHT dispatch (fused kernels via core/sketch.py -> kernels/ops):
+        # OBCSAA's rectangular m = m_ratio*n sketch, EDEN's square m = n rotation.
         self.spec = sk.make_sketch_spec(self.n, cfg.m_ratio, chunk=cfg.chunk, seed=cfg.seed)
+        self.rot_spec = (
+            sk.make_sketch_spec(self.n, 1.0, chunk=cfg.chunk, seed=cfg.seed)
+            if cfg.algo == "eden" else None
+        )
+        self.fed_mesh = None
+        if cfg.sharded_round:
+            assert cfg.participate % cfg.fed_shards == 0, (
+                f"participate={cfg.participate} must divide evenly over "
+                f"fed_shards={cfg.fed_shards}"
+            )
+            if mesh is None:
+                from repro.launch.mesh import make_fed_mesh
+
+                mesh = make_fed_mesh(cfg.fed_shards)
+            assert mesh.shape.get("fed") == cfg.fed_shards, mesh.shape
+            self.fed_mesh = mesh
 
     def init(self, init_params_fn: Callable, key) -> BaselineState:
         return BaselineState(params=init_params_fn(key), round=jnp.int32(0))
@@ -76,74 +128,81 @@ class BaselineFL:
         delta = flatten.ravel(new) - flatten.ravel(params)
         return delta, jnp.mean(losses)
 
-    # --- per-algorithm compression of the aggregated update -----------------
+    # --- the shared encode -> aggregate -> finish round surface -------------
 
-    def _compress(self, deltas, pw, key):
-        """deltas: (K, n); pw: (K,) masked weights. Returns the server-side
-        aggregate update (n,) after the algorithm's compression."""
+    def _encode(self, delta, key):
+        """One client's compress->decompress round trip: delta (n,) -> the
+        reconstruction rec (n,) the server would decode from its uplink.
+        Pure per-client (vmappable, shard_map-able); `key` feeds zSignFed's
+        perturbation only."""
         algo = self.cfg.algo
-        wsum = jnp.maximum(jnp.sum(pw), 1e-9)
 
         if algo == "fedavg":
-            return jnp.einsum("k,kn->n", pw, deltas) / wsum
+            return delta
 
         if algo == "obda":
-            signs = jnp.sign(deltas)
-            vote = jnp.sign(jnp.einsum("k,kn->n", pw, signs))
-            return self.cfg.server_lr * vote           # 1-bit downlink step
+            return jnp.sign(delta)          # server applies sign(sum) later
 
         if algo == "obcsaa":
-            def enc_dec(d):
-                z = jnp.sign(sk.sketch_forward(self.spec, d))
-                amp = jnp.linalg.norm(d)                # transmitted scalar
-                back = sk.sketch_adjoint(self.spec, z)
-                return amp * back / (jnp.linalg.norm(back) + 1e-9)
-            rec = jax.vmap(enc_dec)(deltas)
-            return jnp.einsum("k,kn->n", pw, rec) / wsum
+            z = jnp.sign(sk.sketch_forward(self.spec, delta))
+            amp = jnp.linalg.norm(delta)                # transmitted scalar
+            back = sk.sketch_adjoint(self.spec, z)
+            return amp * back / (jnp.linalg.norm(back) + 1e-9)
 
         if algo == "zsignfed":
-            keys = jax.random.split(key, deltas.shape[0])
-            def enc(d, kk):
-                noisy = d + self.cfg.znoise * jax.random.normal(kk, d.shape)
-                scale = jnp.mean(jnp.abs(d))            # transmitted scalar
-                return scale * jnp.sign(noisy)
-            rec = jax.vmap(enc)(deltas, keys)
-            return jnp.einsum("k,kn->n", pw, rec) / wsum
+            noisy = delta + self.cfg.znoise * jax.random.normal(key, delta.shape)
+            scale = jnp.mean(jnp.abs(delta))            # transmitted scalar
+            return scale * jnp.sign(noisy)
 
         if algo == "eden":
-            # square rotation = sign-flip + FHT (no subsampling)
-            rot = sk.make_sketch_spec(self.n, 1.0, chunk=self.cfg.chunk, seed=self.cfg.seed)
-            def enc_dec(d):
-                r = sk.sketch_forward(rot, d)
-                scale = jnp.mean(jnp.abs(r))            # EDEN-optimal 1-bit scale
-                return sk.sketch_adjoint(rot, scale * jnp.sign(r))[: self.n]
-            rec = jax.vmap(enc_dec)(deltas)
-            return jnp.einsum("k,kn->n", pw, rec) / wsum
+            r = sk.sketch_forward(self.rot_spec, delta)
+            scale = jnp.mean(jnp.abs(r))                # EDEN-optimal 1-bit scale
+            return sk.sketch_adjoint(self.rot_spec, scale * jnp.sign(r))[: self.n]
 
         if algo == "fedbat":
-            def enc(d):
-                alpha = jnp.mean(jnp.abs(d))            # closed-form alpha*
-                return alpha * jnp.sign(d)
-            rec = jax.vmap(enc)(deltas)
-            return jnp.einsum("k,kn->n", pw, rec) / wsum
+            alpha = jnp.mean(jnp.abs(delta))            # closed-form alpha*
+            return alpha * jnp.sign(delta)
 
         raise ValueError(algo)
 
+    def _finish(self, agg, wsum):
+        """Server step from the weighted aggregate of encoded updates."""
+        if self.cfg.algo == "obda":
+            return self.cfg.server_lr * jnp.sign(agg)   # 1-bit downlink step
+        return agg / wsum
+
     @functools.partial(jax.jit, static_argnums=0)
-    def round(self, state: BaselineState, batches, weights, key):
+    def round(self, state: BaselineState, batches, weights, key, participants=None):
         cfg = self.cfg
-        k = cfg.num_clients
         kperm, kalg = jax.random.split(key)
-        perm = jax.random.permutation(kperm, k)
-        mask = jnp.zeros((k,), jnp.float32).at[perm[: cfg.participate]].set(1.0)
+        idx, active = rounds.draw_participants(
+            kperm, cfg.num_clients, cfg.participate, participants
+        )
 
-        deltas, losses = jax.vmap(lambda b: self._local_delta(state.params, b))(batches)
-        pw = weights * mask
-        update = self._compress(deltas, pw, kalg)
+        take = lambda tree: jax.tree.map(lambda a: a[idx], tree)
+        pw = weights[idx] * active
+        wsum = jnp.maximum(jnp.sum(pw), 1e-9)
+        keys = jax.random.split(kalg, cfg.participate)
 
+        if cfg.sharded_round:
+            from repro.launch import fedexec  # trace-time import; no cycle
+
+            agg, task_loss = fedexec.sharded_baseline_round(
+                self, state.params, take(batches), pw, keys
+            )
+        else:
+            deltas, losses = jax.vmap(
+                lambda b: self._local_delta(state.params, b)
+            )(take(batches))
+            recs = jax.vmap(self._encode)(deltas, keys)
+            agg = jnp.einsum("k,kn->n", pw, recs)
+            task_loss = jnp.sum(losses * pw)
+
+        update = self._finish(agg, wsum)
         w_new = flatten.ravel(state.params) + update
         params = flatten.unravel_like(w_new, state.params)
         metrics = {
-            "task_loss": jnp.sum(losses * pw) / jnp.maximum(jnp.sum(pw), 1e-9),
+            "task_loss": task_loss / wsum,
+            "participants": jnp.sum(active),
         }
         return BaselineState(params=params, round=state.round + 1), metrics

@@ -44,7 +44,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import consensus, flatten, regularizer
+from repro.core import consensus, flatten, regularizer, rounds
 from repro.core import sketch as sk
 from repro.core import treesketch as ts
 from repro.kernels import ops as kops
@@ -258,21 +258,31 @@ class PFed1BS:
 
     # -- one communication round ----------------------------------------------
 
+    def _draw_participants(self, key, participants):
+        """core/rounds.py straggler semantics: active=0 rows keep their
+        params, cast no vote, transmit no bits."""
+        return rounds.draw_participants(
+            key, self.cfg.num_clients, self.cfg.participate, participants
+        )
+
     @functools.partial(jax.jit, static_argnums=0)
-    def round(self, state: FLState, batches, weights, key):
+    def round(self, state: FLState, batches, weights, key, participants=None):
         """One round of Algorithm 1: batches (K, R, B, ...) pytree, weights
-        (K,) p_k. Returns (state', metrics). Executor dispatch order:
-        sharded_round (shard_map, DESIGN.md §6) > fused_round (§4) > staged
-        seed round."""
+        (K,) p_k, optional externally drawn participants (idx, active).
+        Returns (state', metrics). Executor dispatch order: sharded_round
+        (shard_map, DESIGN.md §6) > fused_round (§4) > staged seed round."""
         if self.cfg.sharded_round:
             from repro.launch import fedexec  # trace-time import; no cycle
 
-            return fedexec.sharded_round(self, state, batches, weights, key)
+            return fedexec.sharded_round(
+                self, state, batches, weights, key, participants
+            )
         if self.cfg.fused_round:
-            return self._round_fused(state, batches, weights, key)
-        return self._round_staged(state, batches, weights, key)
+            return self._round_fused(state, batches, weights, key, participants)
+        return self._round_staged(state, batches, weights, key, participants)
 
-    def _round_fused(self, state: FLState, batches, weights, key):
+    def _round_fused(self, state: FLState, batches, weights, key,
+                     participants=None):
         """Gather sampled clients -> vmapped update -> scatter; one sketch
         per sampled client per round, threaded through vote, metrics and
         Psi (on the pre-EF sketches, matching Eq. 28)."""
@@ -280,19 +290,16 @@ class PFed1BS:
         k = cfg.num_clients
 
         # partial participation: sample S clients without replacement
-        perm = jax.random.permutation(key, k)
-        idx = perm[: cfg.participate]
+        idx, active = self._draw_participants(key, participants)
 
         take = lambda tree: jax.tree.map(lambda a: a[idx], tree)
         upd, task_loss = jax.vmap(
             lambda p, b: self._client_update(p, b, state.v)
         )(take(state.clients), take(batches))
 
-        # scatter updated models back; non-sampled clients keep theirs
-        clients = jax.tree.map(
-            lambda old, new: old.at[idx].set(new.astype(old.dtype)),
-            state.clients, upd,
-        )
+        # scatter updated models back; non-sampled AND inactive (dropped-out)
+        # clients keep theirs
+        clients = rounds.scatter_rows(state.clients, idx, upd, active)
 
         # uplink: only the S sampled clients are sketched — exactly once per
         # round; non-sampled clients kept their params and transmit nothing,
@@ -301,8 +308,9 @@ class PFed1BS:
         zs_phi = zs            # pre-EF sketches Phi w (the Eq. 28 potential)
         new_ef = state.ef
         if cfg.error_feedback:
-            # Only sampled clients transmit => only their residuals flush.
+            # Only clients that actually transmit flush their residuals.
             zs, signs, ef_rows = self._ef_quantize(zs, state.ef[idx])
+            ef_rows = jnp.where(active[:, None] > 0, ef_rows, state.ef[idx])
             new_ef = state.ef.at[idx].set(ef_rows)
         else:
             signs = jnp.sign(zs) + (zs == 0)                   # {-1,+1}
@@ -313,8 +321,8 @@ class PFed1BS:
         # rows: summing the S rows in permutation order changes float
         # accumulation and can flip near-zero consensus signs, so the fused
         # round would diverge from the staged one on the algorithm's core
-        # discrete object.
-        w_s = weights[idx]
+        # discrete object. Dropped-out rows (active=0) cast no vote.
+        w_s = weights[idx] * active
         signs_full = jnp.zeros((k, self.m), jnp.float32).at[idx].set(signs)
         v_new = consensus.majority_vote(
             signs_full, jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
@@ -327,7 +335,7 @@ class PFed1BS:
         metrics = {
             "task_loss": jnp.sum(task_loss * w_s) / w_norm,
             "potential": potential,
-            "uplink_bits": jnp.float32(cfg.participate * self.m),
+            "uplink_bits": jnp.sum(active) * self.m,
             "downlink_bits": jnp.float32(self.m),
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),
@@ -357,14 +365,15 @@ class PFed1BS:
 
     # -- seed round (kept for parity tests + before/after benchmarking) -------
 
-    def _round_staged(self, state: FLState, batches, weights, key):
+    def _round_staged(self, state: FLState, batches, weights, key,
+                      participants=None):
         """The seed hot path: update all K clients then mask, re-sketch in
         the potential. Quadratically wasteful at S << K; see DESIGN.md §4."""
         cfg = self.cfg
         k = cfg.num_clients
 
-        perm = jax.random.permutation(key, k)
-        mask = jnp.zeros((k,), jnp.float32).at[perm[: cfg.participate]].set(1.0)
+        idx, active = self._draw_participants(key, participants)
+        mask = jnp.zeros((k,), jnp.float32).at[idx].set(active)
 
         new_clients, task_loss = jax.vmap(
             lambda p, b: self._client_update(p, b, state.v)
@@ -392,7 +401,7 @@ class PFed1BS:
         metrics = {
             "task_loss": jnp.sum(task_loss * weights * mask) / jnp.maximum(jnp.sum(weights * mask), 1e-9),
             "potential": potential,
-            "uplink_bits": jnp.float32(cfg.participate * self.m),
+            "uplink_bits": jnp.sum(active) * self.m,
             "downlink_bits": jnp.float32(self.m),
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),

@@ -1,0 +1,38 @@
+"""Shared round-surface helpers used by every executor (DESIGN.md §8.2).
+
+Straggler semantics live HERE and only here: a round's participants are an
+(idx (S,), active (S,)) pair; active=0 means the client's round never
+landed — its params are kept, it casts no vote, and it is billed no bits.
+PFed1BS's three executors (core/pfed1bs.py fused/staged,
+launch/fedexec.py sharded) and BaselineFL (core/baselines.py) all resolve
+participants through `draw_participants` and apply updates through
+`scatter_rows`, so the invariant cannot silently diverge between them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def draw_participants(key, num_clients: int, capacity: int, participants):
+    """Resolve a round's (idx (S,), active (S,)) pair: the externally drawn
+    one (exp/scenarios.py participation models — S must equal the engine's
+    static `participate` capacity) or the default uniform S-of-K sample,
+    all active."""
+    if participants is None:
+        idx = jax.random.permutation(key, num_clients)[:capacity]
+        return idx, jnp.ones((capacity,), jnp.float32)
+    idx, active = participants
+    return idx, active.astype(jnp.float32)
+
+
+def scatter_rows(tree, idx, rows, active):
+    """Stacked-pytree row scatter with straggler masking: leaf[idx] <- new
+    row where active>0, else the existing row is kept. tree: (K, ...)
+    leaves; rows: (S, ...) leaves; idx (S,) distinct; active (S,)."""
+    def one(old, new):
+        act = active.reshape((-1,) + (1,) * (new.ndim - 1))
+        kept = jnp.where(act > 0, new.astype(old.dtype), old[idx])
+        return old.at[idx].set(kept)
+
+    return jax.tree.map(one, tree, rows)

@@ -1,6 +1,6 @@
 """Synthetic federated datasets (offline container: no dataset downloads).
 
-Two generators:
+Two direct generators:
 
 * `make_federated_classification` — class-conditional image data with the
   paper's label-skew protocol ("partition data among 20 clients based on
@@ -12,6 +12,23 @@ Two generators:
 * `make_federated_lm` — per-client skewed token streams for LM federated
   fine-tuning (each client has its own favored vocabulary slice), used by
   the LLM FL examples.
+
+Plus the pool-and-partition path the scenario-matrix harness
+(src/repro/exp/, DESIGN.md §8) composes its heterogeneity axes from:
+
+* `make_classification_pool` — one centralized labeled pool drawn from the
+  same template+noise family.
+* `dirichlet_partition` — per-class Dirichlet(alpha) split of the pool
+  indices over clients (Hsu et al.; the protocol FedSKETCH/DisPFL sweep):
+  alpha -> inf recovers IID, alpha -> 0 recovers one-class-per-client
+  label skew. Every pool index lands on exactly one client.
+* `label_skew_partition` — the paper's fixed protocol expressed as a
+  partition: each client owns `classes_per_client` classes; each class's
+  indices are split evenly among its owners.
+* `imbalance_counts` / `materialize_from_partition` — lognormal per-client
+  sample-count imbalance, then fixed-shape (K, N, ...) client arrays
+  resampled from each client's own index set (true distinct-sample counts
+  are kept in `FedClassification.counts` and drive the p_k weights).
 """
 from __future__ import annotations
 
@@ -29,6 +46,9 @@ class FedClassification:
     test_x: jax.Array   # (K, Nt, H, W, C)
     test_y: jax.Array   # (K, Nt)
     num_classes: int
+    counts: jax.Array | None = None  # (K,) true distinct-sample counts when
+    #                                  the clients were materialized from an
+    #                                  (imbalanced) pool partition
 
     @property
     def num_clients(self):
@@ -36,8 +56,13 @@ class FedClassification:
 
     @property
     def weights(self):
+        """Aggregation weights p_k: proportional to the client's true sample
+        count when known (pool-partition path), else uniform."""
         k = self.num_clients
-        return jnp.full((k,), 1.0 / k)
+        if self.counts is None:
+            return jnp.full((k,), 1.0 / k)
+        c = jnp.asarray(self.counts, jnp.float32)
+        return c / jnp.maximum(jnp.sum(c), 1e-9)
 
 
 def make_federated_classification(
@@ -87,6 +112,152 @@ def make_federated_classification(
         test_x=jnp.stack([t[0] for t in tes]),
         test_y=jnp.stack([t[1] for t in tes]),
         num_classes=num_classes,
+    )
+
+
+# --- pool-and-partition path (scenario-matrix harness, DESIGN.md §8) --------
+
+def make_classification_pool(
+    key,
+    num_samples: int,
+    num_classes: int = 10,
+    image_hw: int = 28,
+    channels: int = 1,
+    noise: float = 0.6,
+):
+    """One centralized labeled pool: (x (N, H, W, C), y (N,)) with uniform
+    labels from the same class-template family as
+    `make_federated_classification` — partitioners below split *this*."""
+    kt, ky, kx = jax.random.split(key, 3)
+    templates = jax.random.normal(kt, (num_classes, image_hw, image_hw, channels))
+    y = jax.random.randint(ky, (num_samples,), 0, num_classes)
+    x = templates[y] + noise * jax.random.normal(
+        kx, (num_samples, image_hw, image_hw, channels)
+    )
+    return x, y
+
+
+def dirichlet_partition(rng, labels, num_clients: int, alpha: float):
+    """Partition indices 0..len(labels) over clients: for each class, draw
+    proportions ~ Dirichlet(alpha * 1_K) and split that class's shuffled
+    indices at the proportional cut points.
+
+    Returns a list of K int arrays that are pairwise disjoint and whose
+    union is the full index set (every sample lands on exactly one client).
+    alpha -> inf: every client gets ~1/K of every class (IID).
+    alpha -> 0:   each class concentrates on one client (label skew).
+    """
+    labels = np.asarray(labels)
+    parts: list[list[np.ndarray]] = [[] for _ in range(num_clients)]
+    for c in np.unique(labels):
+        idx = rng.permutation(np.flatnonzero(labels == c))
+        props = rng.dirichlet(np.full(num_clients, alpha))
+        cuts = np.floor(np.cumsum(props)[:-1] * len(idx)).astype(int)
+        for k, piece in enumerate(np.split(idx, cuts)):
+            parts[k].append(piece)
+    return [
+        np.concatenate(p) if p else np.empty((0,), np.int64) for p in parts
+    ]
+
+
+def label_skew_partition(rng, labels, num_clients: int, classes_per_client: int):
+    """The paper's fixed label-skew protocol as a pool partition: client k
+    owns `classes_per_client` classes; each class's indices are split evenly
+    among the clients that own it (classes nobody drew go to a random
+    client so the partition still covers the full pool)."""
+    labels = np.asarray(labels)
+    num_classes = int(labels.max()) + 1
+    owners: list[list[int]] = [[] for _ in range(num_classes)]
+    load = np.zeros(num_clients, np.int64)    # distinct classes per client
+    for k in range(num_clients):
+        for c in rng.choice(num_classes, classes_per_client, replace=False):
+            owners[int(c)].append(k)
+            load[k] += 1
+    for c in range(num_classes):              # orphan class -> least-loaded
+        if not owners[c]:
+            k = int(np.argmin(load))
+            owners[c].append(k)
+            load[k] += 1
+    parts: list[list[np.ndarray]] = [[] for _ in range(num_clients)]
+    for c in range(num_classes):
+        idx = rng.permutation(np.flatnonzero(labels == c))
+        if len(idx) == 0:
+            continue
+        for k, piece in zip(owners[c], np.array_split(idx, len(owners[c]))):
+            parts[k].append(piece)
+    return [
+        np.concatenate(p) if p else np.empty((0,), np.int64) for p in parts
+    ]
+
+
+def iid_partition(rng, labels, num_clients: int):
+    """Uniform shuffle-and-split (the alpha -> inf limit, exactly)."""
+    idx = rng.permutation(len(np.asarray(labels)))
+    return [np.sort(p) for p in np.array_split(idx, num_clients)]
+
+
+def imbalance_counts(rng, parts, sigma: float):
+    """Lognormal per-client sample-count imbalance: client k keeps the first
+    ceil(f_k * len(part_k)) of its indices, f_k ~ clipped LogNormal(0, sigma)
+    normalized so the largest client keeps everything. sigma=0 keeps all.
+    Returns (trimmed parts, counts array)."""
+    if sigma <= 0.0:
+        return parts, np.asarray([len(p) for p in parts], np.int64)
+    f = rng.lognormal(mean=0.0, sigma=sigma, size=len(parts))
+    f = f / f.max()
+    trimmed = []
+    for p, fk in zip(parts, f):
+        keep = max(int(np.ceil(fk * len(p))), min(len(p), 1))
+        trimmed.append(p[:keep])
+    return trimmed, np.asarray([len(p) for p in trimmed], np.int64)
+
+
+def materialize_from_partition(
+    key,
+    pool_x,
+    pool_y,
+    parts,
+    train_per_client: int,
+    test_per_client: int,
+    num_classes: int,
+) -> FedClassification:
+    """Fixed-shape (K, N, ...) client arrays from a pool partition.
+
+    Each client's partition is first split DISJOINTLY into a train pool and
+    a test pool (proportional to the requested shapes), then each side is
+    resampled (with replacement when the pool is smaller than the requested
+    shape) from its own side only — no test row is ever a training row, so
+    accuracy measures generalization, not memorization. The per-client
+    label distribution is the partition's on both sides; the true
+    distinct-sample counts land in `counts` and drive `weights`. Clients
+    with an empty (or single-sample) partition get random pool samples for
+    the missing side — a straggler client still needs a well-formed slot."""
+    n_pool = pool_x.shape[0]
+    rng = np.random.RandomState(
+        int(jax.random.randint(key, (), 0, 2**31 - 1))
+    )
+    counts = np.asarray([len(p) for p in parts], np.int64)
+    test_frac = test_per_client / max(train_per_client + test_per_client, 1)
+    tr_idx, te_idx = [], []
+    for p in parts:
+        p = rng.permutation(p)
+        if len(p) >= 2:
+            n_te = min(max(int(round(len(p) * test_frac)), 1), len(p) - 1)
+            te_pool, tr_pool = p[:n_te], p[n_te:]
+        else:   # nothing to split: fall back to random pool rows
+            tr_pool = p if len(p) else rng.randint(n_pool, size=1)
+            te_pool = rng.randint(n_pool, size=1)
+        tr_idx.append(rng.choice(tr_pool, size=train_per_client, replace=True))
+        te_idx.append(rng.choice(te_pool, size=test_per_client, replace=True))
+    tr = jnp.asarray(np.stack(tr_idx))
+    te = jnp.asarray(np.stack(te_idx))
+    return FedClassification(
+        train_x=pool_x[tr],
+        train_y=pool_y[tr],
+        test_x=pool_x[te],
+        test_y=pool_y[te],
+        num_classes=num_classes,
+        counts=jnp.asarray(np.maximum(counts, 1)),
     )
 
 

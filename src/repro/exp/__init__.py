@@ -1,0 +1,8 @@
+"""Scenario-matrix experiment harness (DESIGN.md §8).
+
+scenarios.py — heterogeneity axes (partition x imbalance x participation)
+runner.py    — algo x scenario sweeps through the shared round surface
+report.py    — Table-1/2 artifacts + the CI schema/accounting gate
+"""
+from repro.exp.runner import ALGOS, ExpConfig, run_cell, sweep  # noqa: F401
+from repro.exp.scenarios import Scenario, paper_matrix  # noqa: F401

@@ -1,0 +1,104 @@
+"""Report layer: join sweep cells into paper-style Table-1/2 artifacts.
+
+`matrix_markdown` renders one accuracy-vs-bits table per scenario (the
+shape of the paper's Tables 1-2: rows = algorithms, columns = accuracy and
+wire cost, reduction measured against the same scenario's FedAvg row).
+`validate_matrix` is the schema gate the CI bench-smoke job runs via
+`python -m benchmarks.report --validate`: it fails on missing cell keys,
+on a matrix thinner than the acceptance floor (5 algorithms x 3
+scenarios), and — the accounting invariant — if any pFed1BS cell's billed
+bits differ from re-invoicing its recorded per-round participation
+through fl/comms.accumulate_round_bits.
+"""
+from __future__ import annotations
+
+from repro.fl import comms
+
+REQUIRED_CELL_KEYS = (
+    "algo", "scenario", "acc", "acc_std", "loss_curve", "s_per_round",
+    "rounds", "n", "m", "num_tensors", "uplink_bits", "downlink_bits",
+    "total_bits", "total_mb", "us_per_round",
+)
+
+
+def validate_matrix(results: dict, min_algos: int = 5,
+                    min_scenarios: int = 3) -> None:
+    """Raise ValueError unless `results` is a well-formed sweep artifact."""
+    for key in ("cells", "algos", "scenarios", "config"):
+        if key not in results:
+            raise ValueError(f"sweep artifact missing top-level key {key!r}")
+    cells = results["cells"]
+    algos = {c.get("algo") for c in cells}
+    scenarios = {c.get("scenario") for c in cells}
+    if len(algos) < min_algos:
+        raise ValueError(
+            f"matrix has {len(algos)} algorithms ({sorted(algos)}); "
+            f"need >= {min_algos}"
+        )
+    if len(scenarios) < min_scenarios:
+        raise ValueError(
+            f"matrix has {len(scenarios)} scenarios ({sorted(scenarios)}); "
+            f"need >= {min_scenarios}"
+        )
+    for cell in cells:
+        missing = [k for k in REQUIRED_CELL_KEYS if k not in cell]
+        if missing:
+            raise ValueError(
+                f"cell {cell.get('algo')}/{cell.get('scenario')} missing "
+                f"keys {missing}"
+            )
+        # the bit meter must re-derive exactly from the recorded rounds
+        expect = comms.accumulate_round_bits(
+            cell["algo"], n=cell["n"], m=cell["m"],
+            s_per_round=cell["s_per_round"],
+            num_tensors=cell["num_tensors"],
+        )
+        for k in ("uplink_bits", "downlink_bits", "total_bits"):
+            if cell[k] != expect[k]:
+                raise ValueError(
+                    f"cell {cell['algo']}/{cell['scenario']}: recorded {k}="
+                    f"{cell[k]} != comms re-invoice {expect[k]}"
+                )
+
+
+def _by_scenario(cells):
+    out: dict[str, list[dict]] = {}
+    for c in cells:
+        out.setdefault(c["scenario"], []).append(c)
+    return out
+
+
+def matrix_markdown(results: dict) -> str:
+    """GitHub-markdown Table-1/2 per scenario: accuracy vs wire cost."""
+    lines = []
+    for scenario, cells in _by_scenario(results["cells"]).items():
+        fedavg = next((c for c in cells if c["algo"] == "fedavg"), None)
+        lines.append(f"### Scenario `{scenario}`\n")
+        lines.append(
+            "| algo | acc | ±std | total bits | MB | vs FedAvg | bits/round/client |"
+        )
+        lines.append("|---|---|---|---|---|---|---|")
+        for c in sorted(cells, key=lambda c: -c["acc"]):
+            red = (
+                f"-{(1.0 - c['total_bits'] / fedavg['total_bits']) * 100:.2f}%"
+                if fedavg and fedavg["total_bits"] else "—"
+            )
+            s_total = max(sum(c["s_per_round"]), 1)
+            lines.append(
+                f"| {c['algo']} | {c['acc']:.4f} | {c['acc_std']:.3f} "
+                f"| {c['total_bits']:,} | {c['total_mb']:.3f} | {red} "
+                f"| {c['total_bits'] / s_total:,.0f} |"
+            )
+        lines.append("")
+    return "\n".join(lines)
+
+
+def summarize(results: dict) -> dict:
+    """Per-scenario {algo: (acc, total_bits)} digest for quick assertions."""
+    return {
+        scenario: {
+            c["algo"]: {"acc": c["acc"], "total_bits": c["total_bits"]}
+            for c in cells
+        }
+        for scenario, cells in _by_scenario(results["cells"]).items()
+    }

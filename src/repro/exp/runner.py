@@ -1,0 +1,204 @@
+"""Scenario-matrix runner: algorithm x heterogeneity sweeps through the
+ONE shared round surface.
+
+Every cell (algo, scenario) runs the same protocol: build the scenario's
+federated dataset (exp/scenarios.py), construct the engine — PFed1BS for
+"pfed1bs", BaselineFL for the six global-model baselines — with the
+scenario's static participation capacity S, then drive `engine.round`
+once per round with the scenario's externally drawn `(idx, active)`
+participants. All seven algorithms therefore share:
+
+  * the jitted gather -> local-steps -> compress -> aggregate round
+    (core/pfed1bs.py §4 path / core/baselines.py encode-finish surface),
+  * the fused SRHT kernel dispatch for every projection (pFed1BS's sketch,
+    OBCSAA's compressed-sensing sketch, EDEN's square rotation — all via
+    core/sketch.py over kernels/ops),
+  * optionally the shard_map federation executor (ExpConfig.executor=
+    "sharded" routes pFed1BS through launch/fedexec.sharded_round and the
+    baselines through sharded_baseline_round on the same `fed` mesh),
+  * the Table-2 bit meter: each round is billed with the REALIZED client
+    count sum(active) via fl/comms.round_bits, accumulated by
+    fl/comms.accumulate_round_bits (a straggler that never uploaded is
+    not invoiced).
+
+`run_cell` returns one cell record; `sweep` the full matrix, which
+exp/report.py joins into paper-style Table-1/2 artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.baselines import BaselineConfig, BaselineFL
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.data import synthetic as ds
+from repro.exp.scenarios import Scenario
+from repro.fl import comms
+from repro.models import smallnets as sn
+
+ALGOS = ("fedavg", "obda", "obcsaa", "zsignfed", "eden", "fedbat", "pfed1bs")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpConfig:
+    """Protocol knobs shared by every cell of a sweep (the scenario supplies
+    the heterogeneity; this supplies the task scale)."""
+    num_clients: int = 10
+    rounds: int = 10
+    local_steps: int = 4
+    batch: int = 24
+    lr: float = 0.05
+    hidden: int = 48
+    m_ratio: float = 0.1
+    chunk: int = 2048
+    train_per_client: int = 128
+    test_per_client: int = 64
+    num_classes: int = 10
+    noise_scale: float = 1.0     # multiplies the scenario's template noise
+    eval_every: int = 0          # also evaluate every E rounds (0: final only)
+    seed: int = 0
+    # pfed1bs regularizer (paper defaults)
+    lam: float = 5e-4
+    mu: float = 1e-5
+    gamma: float = 1e4
+    # round executor: "fused" = single-host jitted round; "sharded" = thread
+    # EVERY algorithm through the launch/fedexec.py shard_map executor over
+    # `fed_shards` devices (pfed1bs: sharded_round, baselines:
+    # sharded_baseline_round)
+    executor: str = "fused"
+    fed_shards: int = 1
+
+
+def make_task(cfg: ExpConfig):
+    """The shared model/loss/eval triple (MLP on flattened 28x28)."""
+    init_fn = lambda k: sn.init_mlp(
+        k, input_dim=784, hidden=cfg.hidden, classes=cfg.num_classes
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    eval_fn = lambda p, x, y: sn.accuracy(sn.apply_mlp(p, x), y)
+    return init_fn, loss_fn, eval_fn
+
+
+def build_engine(algo: str, cfg: ExpConfig, capacity: int, loss_fn, template):
+    """One engine per cell, capacity = the scenario's static S."""
+    sharded = cfg.executor == "sharded"
+    if algo == "pfed1bs":
+        return PFed1BS(
+            PFed1BSConfig(
+                num_clients=cfg.num_clients, participate=capacity,
+                local_steps=cfg.local_steps, lr=cfg.lr, lam=cfg.lam,
+                mu=cfg.mu, gamma=cfg.gamma, m_ratio=cfg.m_ratio,
+                chunk=cfg.chunk, sketch_seed=cfg.seed,
+                sharded_round=sharded, fed_shards=cfg.fed_shards,
+            ),
+            loss_fn, template,
+        )
+    return BaselineFL(
+        BaselineConfig(
+            algo=algo, num_clients=cfg.num_clients, participate=capacity,
+            local_steps=cfg.local_steps, lr=cfg.lr, m_ratio=cfg.m_ratio,
+            chunk=cfg.chunk, seed=cfg.seed,
+            sharded_round=sharded, fed_shards=cfg.fed_shards,
+        ),
+        loss_fn, template,
+    )
+
+
+def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
+    """One (algorithm, scenario) cell: per-round loss + realized
+    participation + Table-2 bit accounting + final (and optional periodic)
+    per-client accuracy. Personalized algorithms are scored on each
+    client's own model, global ones on the shared model — both against the
+    client's own test shard."""
+    base = jax.random.key(cfg.seed)
+    kd, kp, ke = jax.random.split(jax.random.fold_in(base, 17), 3)
+    if cfg.noise_scale != 1.0:   # harder task = more template noise
+        scenario = dataclasses.replace(
+            scenario, noise=scenario.noise * cfg.noise_scale
+        )
+    data = scenario.build(
+        kd, cfg.num_clients, num_classes=cfg.num_classes,
+        train_per_client=cfg.train_per_client,
+        test_per_client=cfg.test_per_client,
+    )
+    init_fn, loss_fn, eval_fn = make_task(cfg)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(template))
+    num_tensors = len(jax.tree.leaves(template))
+
+    capacity = scenario.capacity(cfg.num_clients)
+    eng = build_engine(algo, cfg, capacity, loss_fn, template)
+    m_dim = eng.m if algo == "pfed1bs" else eng.spec.m
+    state = eng.init(init_fn, jax.random.fold_in(base, 23))
+
+    def evaluate(st):
+        if hasattr(st, "clients"):       # personalized: own model, own shard
+            accs = jax.vmap(eval_fn)(st.clients, data.test_x, data.test_y)
+        else:                            # global: shared model, every shard
+            accs = jax.vmap(lambda x, y: eval_fn(st.params, x, y))(
+                data.test_x, data.test_y
+            )
+        return float(accs.mean()), float(accs.std())
+
+    losses, s_per_round, acc_curve, round_s = [], [], [], []
+    for r in range(cfg.rounds):
+        participants = scenario.draw_participants(kp, r, cfg.num_clients)
+        kb, kr = jax.random.split(jax.random.fold_in(ke, r))
+        batches = ds.sample_round_batches(kb, data, cfg.local_steps, cfg.batch)
+        t0 = time.time()
+        state, metrics = eng.round(
+            state, batches, data.weights, kr, participants
+        )
+        loss = float(metrics["task_loss"])   # blocks on the round's result
+        round_s.append(time.time() - t0)
+        losses.append(loss)
+        s_per_round.append(int(round(float(np.sum(np.asarray(participants[1]))))))
+        if cfg.eval_every and (r + 1) % cfg.eval_every == 0:
+            acc_curve.append({"round": r + 1, "acc": evaluate(state)[0]})
+    # steady state: round 0 pays jit trace+compile; eval is outside the timer
+    steady = round_s[1:] or round_s
+
+    acc, acc_std = evaluate(state)
+    bits = comms.accumulate_round_bits(
+        algo, n=n, m=m_dim, s_per_round=s_per_round, num_tensors=num_tensors
+    )
+    return {
+        "algo": algo,
+        "scenario": scenario.name,
+        "acc": acc,
+        "acc_std": acc_std,
+        "loss_curve": losses,
+        "acc_curve": acc_curve,
+        "s_per_round": s_per_round,
+        "rounds": cfg.rounds,
+        "n": n,
+        "m": m_dim,
+        "num_tensors": num_tensors,
+        "uplink_bits": bits["uplink_bits"],
+        "downlink_bits": bits["downlink_bits"],
+        "total_bits": bits["total_bits"],
+        "total_mb": bits["total_mb"],
+        "us_per_round": float(np.mean(steady)) * 1e6,
+    }
+
+
+def sweep(algos, scenarios, cfg: ExpConfig, progress=None) -> dict:
+    """The full matrix: cells + enough config to re-derive every number.
+    `scenarios`: dict name -> Scenario (e.g. exp.scenarios.paper_matrix());
+    `progress`: optional callable(cell_dict) fired after each cell."""
+    cells = []
+    for sname, scenario in scenarios.items():
+        for algo in algos:
+            cell = run_cell(algo, scenario, cfg)
+            cells.append(cell)
+            if progress is not None:
+                progress(cell)
+    return {
+        "cells": cells,
+        "algos": list(algos),
+        "scenarios": list(scenarios.keys()),
+        "config": dataclasses.asdict(cfg),
+    }

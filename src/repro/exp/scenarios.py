@@ -1,0 +1,239 @@
+"""Heterogeneity scenarios: partition x imbalance x participation.
+
+The paper's claim is comparative — pFed1BS matches the advanced
+communication-efficient baselines at a fraction of the bits *under client
+heterogeneity* — and related work pins exactly these axes: FedSKETCH
+sweeps heterogeneity levels, DisPFL shows personalized-FL conclusions flip
+with Dirichlet non-IID severity and participation rate. A `Scenario`
+composes the three axes as frozen dataclasses:
+
+  data axis          DirichletPartition(alpha) | LabelSkewPartition(c) |
+                     IIDPartition — how the centralized pool is split
+                     (data/synthetic.py partitioners), plus a lognormal
+                     per-client sample-count `imbalance` sigma.
+  participation axis FullParticipation | UniformSampling(rate) |
+                     StragglerDropout(rate, drop) |
+                     AvailabilityCycle(rate, period, duty) — who shows up
+                     each round, drawn seed-deterministically OUTSIDE the
+                     jitted round and passed in as (idx, active); the
+                     engines (core/pfed1bs.py, core/baselines.py) treat
+                     active=0 as "trained nothing landed": params kept, no
+                     vote, no bits.
+
+Every participation draw has a STATIC capacity S (= the engine's
+`participate`), so the jitted round never retraces across rounds; dropout
+and unavailability surface as active-mask zeros, and the per-round billed
+client count is sum(active) — exactly the `s` that fl/comms.round_bits is
+invoiced with (tests/test_scenarios.py pins this).
+
+`paper_matrix()` is the named registry the benchmarks sweep
+(benchmarks/exp_bench.py -> BENCH_exp.json). DESIGN.md §8 documents the
+layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic as ds
+
+
+# --- data axis ---------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DirichletPartition:
+    """Per-class Dirichlet(alpha) split: alpha -> inf IID, alpha -> 0 one
+    class per client (data/synthetic.py::dirichlet_partition)."""
+    alpha: float
+
+    def split(self, rng, labels, num_clients):
+        return ds.dirichlet_partition(rng, labels, num_clients, self.alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelSkewPartition:
+    """The paper's fixed protocol: each client owns `classes_per_client`
+    classes."""
+    classes_per_client: int = 2
+
+    def split(self, rng, labels, num_clients):
+        return ds.label_skew_partition(
+            rng, labels, num_clients, self.classes_per_client
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class IIDPartition:
+    """Uniform shuffle-and-split (the alpha -> inf limit, exactly)."""
+
+    def split(self, rng, labels, num_clients):
+        return ds.iid_partition(rng, labels, num_clients)
+
+
+# --- participation axis ------------------------------------------------------
+
+def _fold(key, rnd):
+    return jax.random.fold_in(key, rnd)
+
+
+@dataclasses.dataclass(frozen=True)
+class FullParticipation:
+    """Every client, every round."""
+
+    def capacity(self, k: int) -> int:
+        return k
+
+    def draw(self, key, rnd: int, k: int):
+        return jnp.arange(k, dtype=jnp.int32), jnp.ones((k,), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampling:
+    """S = max(1, round(rate*K)) clients uniformly without replacement."""
+    rate: float = 0.5
+
+    def capacity(self, k: int) -> int:
+        return max(1, int(round(self.rate * k)))
+
+    def draw(self, key, rnd: int, k: int):
+        s = self.capacity(k)
+        idx = jax.random.permutation(_fold(key, rnd), k)[:s].astype(jnp.int32)
+        return idx, jnp.ones((s,), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerDropout:
+    """Uniformly sampled S clients; each then independently drops out with
+    probability `drop` before its upload lands (trains, transmits nothing).
+    At least one survivor is guaranteed so a round always has a vote."""
+    rate: float = 0.5
+    drop: float = 0.3
+
+    def capacity(self, k: int) -> int:
+        return max(1, int(round(self.rate * k)))
+
+    def draw(self, key, rnd: int, k: int):
+        s = self.capacity(k)
+        kp, kd = jax.random.split(_fold(key, rnd))
+        idx = jax.random.permutation(kp, k)[:s].astype(jnp.int32)
+        active = jax.random.bernoulli(kd, 1.0 - self.drop, (s,)).astype(jnp.float32)
+        first = jnp.where(jnp.sum(active) == 0, 1.0, active[0])
+        return idx, active.at[0].set(first)
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityCycle:
+    """Diurnal availability: client k is online iff
+    ((round + k mod period) mod period) < duty*period; S = rate*K slots are
+    filled uniformly from the online clients (offline picks pad the fixed
+    capacity with active=0 when fewer than S are online)."""
+    rate: float = 0.5
+    period: int = 4
+    duty: float = 0.5
+
+    def capacity(self, k: int) -> int:
+        return max(1, int(round(self.rate * k)))
+
+    def draw(self, key, rnd: int, k: int):
+        s = self.capacity(k)
+        phases = jnp.arange(k, dtype=jnp.int32) % self.period
+        avail = (((rnd + phases) % self.period) < self.duty * self.period)
+        avail = avail.astype(jnp.float32)
+        # available clients strictly dominate any unavailable one; random
+        # tiebreak inside each group
+        scores = jax.random.uniform(_fold(key, rnd), (k,)) + 2.0 * avail
+        idx = jnp.argsort(-scores)[:s].astype(jnp.int32)
+        active = avail[idx]
+        # keep-alive: if the cycle leaves NOBODY online this round (k <
+        # period, tiny duty), the top-scored client checks in anyway — a
+        # zero-voter round would overwrite the learned consensus with the
+        # vote's tie value. idx[0] is online whenever anyone is, so this
+        # only fires in the genuinely-dead case.
+        first = jnp.where(jnp.sum(active) == 0, 1.0, active[0])
+        return idx, active.at[0].set(first)
+
+
+# --- the composite -----------------------------------------------------------
+
+Partition = DirichletPartition | LabelSkewPartition | IIDPartition
+Participation = (
+    FullParticipation | UniformSampling | StragglerDropout | AvailabilityCycle
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the heterogeneity matrix. `build` materializes the
+    federated dataset (pool -> partition -> imbalance trim -> fixed-shape
+    clients); `draw_participants` yields the round's (idx, active) pair for
+    the engines' `participants=` argument."""
+    name: str
+    partition: Partition
+    participation: Participation = FullParticipation()
+    imbalance: float = 0.0        # lognormal sigma; 0 = balanced counts
+    noise: float = 1.0
+    concept_shift: bool = False   # reserved: per-client label permutation
+
+    def capacity(self, num_clients: int) -> int:
+        return self.participation.capacity(num_clients)
+
+    def draw_participants(self, key, rnd: int, num_clients: int):
+        return self.participation.draw(key, rnd, num_clients)
+
+    def build(
+        self,
+        key,
+        num_clients: int,
+        num_classes: int = 10,
+        train_per_client: int = 128,
+        test_per_client: int = 64,
+        pool_factor: float = 1.5,
+    ) -> ds.FedClassification:
+        kp, km = jax.random.split(key)
+        pool = int(num_clients * (train_per_client + test_per_client) * pool_factor)
+        px, py = ds.make_classification_pool(
+            kp, pool, num_classes=num_classes, noise=self.noise
+        )
+        rng = np.random.RandomState(_seed_of(self.name))
+        parts = self.partition.split(rng, np.asarray(py), num_clients)
+        parts, _ = ds.imbalance_counts(rng, parts, self.imbalance)
+        return ds.materialize_from_partition(
+            km, px, py, parts, train_per_client, test_per_client, num_classes
+        )
+
+
+def _seed_of(name: str) -> int:
+    # stable across processes (str hash is salted; crc32 is not)
+    return zlib.crc32(name.encode()) % (2**31 - 1)
+
+
+def paper_matrix() -> dict[str, Scenario]:
+    """The named heterogeneity matrix the benchmarks sweep. Severity grows
+    left to right on the data axis (IID -> Dirichlet 1.0 -> 0.1 -> fixed
+    label skew) and realism grows on the participation axis (full ->
+    uniform sampling -> stragglers -> availability cycling)."""
+    return {
+        "iid": Scenario("iid", IIDPartition()),
+        "dir1.0": Scenario(
+            "dir1.0", DirichletPartition(1.0), UniformSampling(0.5)
+        ),
+        "dir0.1": Scenario(
+            "dir0.1", DirichletPartition(0.1), UniformSampling(0.5)
+        ),
+        "labelskew": Scenario("labelskew", LabelSkewPartition(2)),
+        "dir0.3-imb": Scenario(
+            "dir0.3-imb", DirichletPartition(0.3), UniformSampling(0.5),
+            imbalance=1.0,
+        ),
+        "straggler": Scenario(
+            "straggler", DirichletPartition(0.3), StragglerDropout(0.5, 0.3)
+        ),
+        "cycling": Scenario(
+            "cycling", DirichletPartition(0.3),
+            AvailabilityCycle(0.5, period=4, duty=0.5),
+        ),
+    }

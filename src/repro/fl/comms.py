@@ -71,6 +71,28 @@ def round_bits(algo: str, *, n: int, m: int, s: int, num_tensors: int = 1) -> di
             "total_mb": (up + down) / 8e6}
 
 
+def accumulate_round_bits(algo: str, *, n: int, m: int, s_per_round,
+                          num_tensors: int = 1) -> dict:
+    """Total wire cost of a multi-round run whose participation varied:
+    sum of `round_bits` with that round's realized client count s_r (the
+    scenario harness bills sum(active) per round — a straggler that never
+    uploaded is not invoiced). pFed1BS's m-bit consensus broadcast is
+    counted once per round regardless of s_r, exactly as `round_bits` does.
+
+    s_per_round: iterable of ints. Returns {uplink_bits, downlink_bits,
+    total_bits, total_mb, rounds}.
+    """
+    up = down = 0
+    rounds = 0
+    for s in s_per_round:
+        b = round_bits(algo, n=n, m=m, s=int(s), num_tensors=num_tensors)
+        up += b["uplink_bits"]
+        down += b["downlink_bits"]
+        rounds += 1
+    return {"uplink_bits": up, "downlink_bits": down, "total_bits": up + down,
+            "total_mb": (up + down) / 8e6, "rounds": rounds}
+
+
 def reduction_vs_fedavg(algo: str, **kw) -> float:
     """Fraction of FedAvg's per-round traffic removed (1 - this/fedavg)."""
     base = round_bits("fedavg", **kw)["total_bits"]

@@ -29,6 +29,13 @@ p_k; ties -> +1, and — unlike any float path — a tie can never be flipped
 by rounding).
 
 See DESIGN.md §6 for the mesh diagram and the bit accounting.
+
+`sharded_baseline_round` (bottom of file) lays the six global-model
+baselines (core/baselines.py) on the same `fed` mesh: local steps + the
+per-client compress->decompress encode run collective-free per shard and
+the axis is crossed by one psum of the weighted aggregate — the scenario
+matrix (exp/runner.py, DESIGN.md §8) drives every algorithm through this
+one executor family.
 """
 from __future__ import annotations
 
@@ -37,13 +44,14 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import consensus
+from repro.core import consensus, rounds
 from repro.kernels import ops as kops
 
 
-def sharded_round(eng, state, batches, weights, key):
+def sharded_round(eng, state, batches, weights, key, participants=None):
     """One shard_map federation round. Same contract as PFed1BS.round:
-    batches (K, R, B, ...) pytree, weights (K,) p_k -> (state', metrics).
+    batches (K, R, B, ...) pytree, weights (K,) p_k, optional externally
+    drawn participants (idx, active) -> (state', metrics).
 
     Requires cfg.participate % cfg.fed_shards == 0 (checked at engine
     construction); each fed shard owns S/F clients for the round.
@@ -55,12 +63,12 @@ def sharded_round(eng, state, batches, weights, key):
     nw = (m + pad) // 32
 
     # partial participation: sample S of K without replacement (replicated —
-    # every shard derives the same permutation from the same key)
-    perm = jax.random.permutation(key, k)
-    idx = perm[:s]
+    # every shard derives the same draw from the same key). Dropped-out rows
+    # (active=0) keep their params, cast no vote, transmit no bits.
+    idx, active = eng._draw_participants(key, participants)
     take = lambda tree: jax.tree.map(lambda a: a[idx], tree)
     clients_s, batches_s = take(state.clients), take(batches)
-    w_s = weights[idx]
+    w_s = weights[idx] * active
     ef_s = state.ef[idx] if cfg.error_feedback else None
 
     # floats are needed beyond the shard only for EF (residual update) or
@@ -126,24 +134,25 @@ def sharded_round(eng, state, batches, weights, key):
         v_new = consensus.majority_vote(signs_full, p_full)
 
     # ---- simulator state bookkeeping (not wire traffic) --------------------
-    clients = jax.tree.map(
-        lambda old, new: old.at[idx].set(new.astype(old.dtype)),
-        state.clients, res["upd"],
-    )
+    clients = rounds.scatter_rows(state.clients, idx, res["upd"], active)
     new_ef = state.ef
     if cfg.error_feedback:
-        new_ef = state.ef.at[idx].set(res["ef"])
+        ef_rows = jnp.where(active[:, None] > 0, res["ef"], state.ef[idx])
+        new_ef = state.ef.at[idx].set(ef_rows)
 
     w_norm = jnp.maximum(jnp.sum(w_s), 1e-9)
     metrics = {
         "task_loss": jnp.sum(res["task_loss"] * w_s) / w_norm,
-        "uplink_bits": jnp.float32(s * m),
+        "uplink_bits": jnp.sum(active) * m,
         "downlink_bits": jnp.float32(m),
         "packed_words": jnp.float32(nw),
     }
     if cfg.vote == "popcount":
         # 1.0 iff the sampled weights really were uniform, i.e. the integer
-        # vote computed the same object as weighted Lemma 1 would have
+        # vote computed the same object as weighted Lemma 1 would have.
+        # (An external participation draw with dropped-out rows zeroes some
+        # weights, so it also trips this flag: popcount counts every sampled
+        # row — use vote="exact" with straggler/availability scenarios.)
         metrics["vote_uniform_ok"] = jnp.all(w_s == w_s[0]).astype(jnp.float32)
     if cfg.diagnostics:
         zs = res["zs"]
@@ -160,3 +169,44 @@ def sharded_round(eng, state, batches, weights, key):
         clients=clients, v=v_new, round=state.round + 1, ef=new_ef
     )
     return state, metrics
+
+
+def sharded_baseline_round(eng, params, batches_s, pw, keys):
+    """Client side of a BaselineFL round over the `fed` mesh (DESIGN.md §8).
+
+    The S sampled clients are split across the F fed shards; each shard runs
+    its clients' R local SGD steps and the per-client compress->decompress
+    `_encode` (core/baselines.py) with ZERO collectives, reduces its own
+    weighted partial sum, and the fed axis is crossed once by a psum of the
+    (n,) aggregate + the scalar loss partial — the simulator analogue of S
+    uplinks meeting at the server. The global model `params` is replicated
+    (every real client holds the downlinked model).
+
+    eng: BaselineFL; params: global-model pytree (replicated);
+    batches_s: (S, R, B, ...) pytree; pw: (S,) masked weights (weight 0 =
+    dropped out — its encode result is computed but annihilated, like a
+    straggler whose upload never lands); keys: (S,) per-client PRNG keys.
+    Returns (agg (n,), task_loss_weighted_sum ()) — the same aggregate the
+    unsharded round feeds `_finish`.
+    """
+    fed = P("fed")
+
+    def shard(p, bats, w, ks):
+        deltas, losses = jax.vmap(
+            lambda b: eng._local_delta(p, b)
+        )(bats)
+        recs = jax.vmap(eng._encode)(deltas, ks)
+        part = jnp.einsum("k,kn->n", w, recs)
+        lpart = jnp.sum(losses * w)
+        return (
+            jax.lax.psum(part, "fed"),
+            jax.lax.psum(lpart, "fed"),
+        )
+
+    return shard_map(
+        shard,
+        mesh=eng.fed_mesh,
+        in_specs=(P(), fed, fed, fed),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )(params, batches_s, pw, keys)

@@ -1,3 +1,5 @@
+import os
+
 import jax
 import pytest
 
@@ -9,3 +11,32 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.key(0)
+
+
+# --- slow-marker audit (CI test-hygiene gate; see pytest.ini) ---------------
+# With PYTEST_SLOW_BUDGET=<seconds> set (the CI fast-tier job sets 90), any
+# PASSING test whose call phase exceeds the budget but does not carry
+# @pytest.mark.slow is turned into a failure: the fast tier stays fast as
+# the suite grows, and the fix is always to add the marker (or make the
+# test faster). Unset/0 (the default) disables the audit for local runs.
+_SLOW_BUDGET = float(os.environ.get("PYTEST_SLOW_BUDGET", "0") or 0.0)
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_makereport(item, call):
+    rep = yield
+    if (
+        _SLOW_BUDGET > 0
+        and rep.when == "call"
+        and rep.passed
+        and call.duration > _SLOW_BUDGET
+        and "slow" not in item.keywords
+    ):
+        rep.outcome = "failed"
+        rep.longrepr = (
+            f"marker-audit: {item.nodeid} took {call.duration:.1f}s "
+            f"(> PYTEST_SLOW_BUDGET={_SLOW_BUDGET:g}s) but is not marked "
+            f"@pytest.mark.slow — mark it so the fast tier "
+            f'(-m "not slow") stays fast, or speed it up'
+        )
+    return rep

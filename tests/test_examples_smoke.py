@@ -43,6 +43,17 @@ def test_quickstart_runs():
 
 
 @pytest.mark.slow
+def test_scenario_sweep_runs():
+    out = _run_example(
+        "scenario_sweep.py",
+        {"SWEEP_ALGOS": "fedavg,pfed1bs", "SWEEP_ROUNDS": 2, "SWEEP_CLIENTS": 4},
+    )
+    assert "### Scenario `dir0.1`" in out
+    assert "### Scenario `straggler`" in out
+    assert "accounting validated" in out
+
+
+@pytest.mark.slow
 def test_serve_personalized_runs():
     out = _run_example(
         "serve_personalized.py", {"SERVE_CLIENTS": 4, "SERVE_REQUESTS": 6}

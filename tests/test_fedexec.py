@@ -203,6 +203,32 @@ def test_popcount_vote_tie_semantics():
 # because XLA_FLAGS must be set before jax import)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("algo", ["fedavg", "obda", "eden"])
+def test_sharded_baseline_round_bit_exact_vs_unsharded(fed_setup, algo):
+    """The baselines' shard_map client side (sharded_baseline_round) on a
+    1-device mesh reproduces the unsharded encode->aggregate round
+    bit-for-bit (same vmap body, one psum over a singleton axis)."""
+    from repro.core.baselines import BaselineConfig, BaselineFL
+
+    data, loss_fn, init_fn = fed_setup
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    base = dict(algo=algo, num_clients=6, participate=4, local_steps=2,
+                chunk=2048)
+    eng_u = BaselineFL(BaselineConfig(**base), loss_fn, template)
+    eng_s = BaselineFL(
+        BaselineConfig(**base, sharded_round=True, fed_shards=1),
+        loss_fn, template,
+    )
+    st = eng_u.init(init_fn, jax.random.key(2))
+    kb, kr = jax.random.split(jax.random.key(5))
+    batches = ds.sample_round_batches(kb, data, 2, 24)
+    st_u, m_u = eng_u.round(st, batches, data.weights, kr)
+    st_s, m_s = eng_s.round(st, batches, data.weights, kr)
+    for a, b in zip(jax.tree.leaves(st_u.params), jax.tree.leaves(st_s.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m_u["task_loss"]) == float(m_s["task_loss"])
+
+
 @pytest.mark.slow
 def test_two_shard_mesh_tracks_fused_round():
     prog = textwrap.dedent("""

@@ -1,0 +1,72 @@
+"""Test hygiene for CI: the slow-marker audit (tests/conftest.py) must
+actually catch an over-budget test that forgot @pytest.mark.slow, and must
+leave marked / under-budget tests alone.
+
+Runs pytest-in-pytest on a tiny generated suite with a sub-second budget,
+so the meta-test itself stays cheap but exercises the real hook path the
+CI fast-tier job runs with PYTEST_SLOW_BUDGET=90.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SUITE = textwrap.dedent(
+    """
+    import time
+    import pytest
+
+    def test_fast_unmarked():
+        pass
+
+    def test_slow_unmarked():        # the offender the audit must flag
+        time.sleep(0.6)
+
+    @pytest.mark.slow
+    def test_slow_marked():          # carries the marker: audit-exempt
+        time.sleep(0.6)
+    """
+)
+
+
+def _run_pytest(tmp_path, budget):
+    suite = tmp_path / "test_generated_audit_suite.py"
+    suite.write_text(SUITE)
+    # the generated suite must run under the REPO's conftest/pytest.ini so
+    # the real audit hook (and the real `slow` marker) are in force
+    (tmp_path / "conftest.py").write_text(
+        open(os.path.join(REPO, "tests", "conftest.py")).read()
+    )
+    (tmp_path / "pytest.ini").write_text(
+        open(os.path.join(REPO, "pytest.ini")).read()
+    )
+    env = dict(os.environ, PYTEST_SLOW_BUDGET=str(budget))
+    env.pop("PYTEST_ADDOPTS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", str(suite)],
+        capture_output=True, text=True, cwd=tmp_path, env=env, timeout=120,
+    )
+
+
+@pytest.mark.slow
+def test_audit_flags_unmarked_over_budget_test(tmp_path):
+    res = _run_pytest(tmp_path, budget=0.3)
+    out = res.stdout + res.stderr
+    assert res.returncode != 0, out
+    assert "marker-audit" in out, out
+    assert "test_slow_unmarked" in out, out
+    # the marked slow test and the fast test must NOT be flagged
+    assert "2 passed" in out, out
+    assert "1 failed" in out, out
+
+
+@pytest.mark.slow
+def test_audit_disabled_without_budget(tmp_path):
+    res = _run_pytest(tmp_path, budget=0)
+    out = res.stdout + res.stderr
+    assert res.returncode == 0, out
+    assert "3 passed" in out, out

@@ -1,0 +1,263 @@
+"""Scenario-matrix harness: partition correctness (Dirichlet limits),
+participation determinism + bit-meter agreement, and one slow end-to-end
+sweep through the shared round surface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic as ds
+from repro.exp import report, runner, scenarios
+from repro.fl import comms
+
+
+# --- Dirichlet partitioning --------------------------------------------------
+
+def _pool_labels(n=4000, classes=10, seed=0):
+    return np.random.RandomState(seed).randint(0, classes, size=n)
+
+
+def test_dirichlet_partition_sums_to_full_dataset():
+    labels = _pool_labels()
+    for alpha in (0.05, 0.5, 5.0):
+        parts = ds.dirichlet_partition(
+            np.random.RandomState(1), labels, num_clients=12, alpha=alpha
+        )
+        allidx = np.concatenate(parts)
+        assert len(allidx) == len(labels)
+        # pairwise disjoint AND covering: the sorted union is exactly 0..N-1
+        assert np.array_equal(np.sort(allidx), np.arange(len(labels)))
+
+
+def test_dirichlet_alpha_inf_recovers_iid():
+    """alpha -> inf: every client sees every class in ~1/K proportion."""
+    labels = _pool_labels()
+    k = 10
+    parts = ds.dirichlet_partition(
+        np.random.RandomState(2), labels, num_clients=k, alpha=1e6
+    )
+    for p in parts:
+        hist = np.bincount(labels[p], minlength=10) / max(len(p), 1)
+        # close to the pool's uniform class distribution
+        assert np.all(np.abs(hist - 0.1) < 0.05), hist
+    sizes = np.asarray([len(p) for p in parts])
+    assert sizes.max() - sizes.min() < 0.2 * sizes.mean()
+
+
+def test_dirichlet_alpha_zero_recovers_label_skew():
+    """alpha -> 0: each class concentrates on ~one client, so clients see
+    few distinct classes — the label-skew regime."""
+    labels = _pool_labels()
+    parts = ds.dirichlet_partition(
+        np.random.RandomState(3), labels, num_clients=10, alpha=1e-3
+    )
+    distinct = [len(np.unique(labels[p])) for p in parts if len(p) > 0]
+    assert np.mean(distinct) <= 2.5, distinct
+    # vs the IID limit which sees all 10
+    parts_iid = ds.dirichlet_partition(
+        np.random.RandomState(3), labels, num_clients=10, alpha=1e6
+    )
+    assert np.mean([len(np.unique(labels[p])) for p in parts_iid]) > 9
+
+
+def test_label_skew_partition_covers_pool():
+    labels = _pool_labels()
+    parts = ds.label_skew_partition(
+        np.random.RandomState(4), labels, num_clients=8, classes_per_client=2
+    )
+    assert np.array_equal(
+        np.sort(np.concatenate(parts)), np.arange(len(labels))
+    )
+    # each client sees its classes_per_client classes, plus at most the
+    # orphan classes dealt to the least-loaded clients (8 clients x 2 draws
+    # over 10 classes leaves a couple of orphans)
+    distinct = [len(np.unique(labels[p])) for p in parts if len(p)]
+    assert max(distinct) <= 4 and np.mean(distinct) <= 3, distinct
+
+
+def test_imbalance_counts_trims_lognormally():
+    labels = _pool_labels()
+    parts = ds.iid_partition(np.random.RandomState(5), labels, 10)
+    trimmed, counts = ds.imbalance_counts(np.random.RandomState(5), parts, sigma=1.0)
+    assert counts.max() == max(len(p) for p in parts)   # largest keeps all
+    assert counts.min() < counts.max() // 2             # real spread
+    assert all(len(t) == c for t, c in zip(trimmed, counts))
+    # sigma=0 is the identity
+    same, counts0 = ds.imbalance_counts(np.random.RandomState(5), parts, sigma=0.0)
+    assert all(len(a) == len(b) for a, b in zip(same, parts))
+
+
+def test_materialized_train_test_disjoint():
+    """No test row may be a training row: the client's partition is split
+    disjointly before resampling, so accuracy measures generalization."""
+    key = jax.random.key(0)
+    px, py = ds.make_classification_pool(key, 800, num_classes=10)
+    parts = ds.dirichlet_partition(
+        np.random.RandomState(6), np.asarray(py), num_clients=6, alpha=0.5
+    )
+    fed = ds.materialize_from_partition(
+        jax.random.key(2), px, py, parts, train_per_client=64,
+        test_per_client=32, num_classes=10,
+    )
+    tr = np.asarray(fed.train_x).reshape(6, 64, -1)
+    te = np.asarray(fed.test_x).reshape(6, 32, -1)
+    for k in range(6):
+        # byte-identical rows across the split would be contamination
+        tr_set = {r.tobytes() for r in tr[k]}
+        assert not any(r.tobytes() in tr_set for r in te[k]), f"client {k}"
+
+
+def test_materialized_weights_follow_counts():
+    key = jax.random.key(0)
+    px, py = ds.make_classification_pool(key, 600, num_classes=4)
+    parts = [np.arange(0, 300), np.arange(300, 500), np.arange(500, 600)]
+    fed = ds.materialize_from_partition(
+        jax.random.key(1), px, py, parts, train_per_client=32,
+        test_per_client=16, num_classes=4,
+    )
+    w = np.asarray(fed.weights)
+    assert np.allclose(w, [0.5, 1 / 3, 1 / 6], atol=1e-6)
+    assert fed.train_x.shape == (3, 32, 28, 28, 1)
+
+
+# --- participation models ----------------------------------------------------
+
+PARTICIPATIONS = [
+    scenarios.FullParticipation(),
+    scenarios.UniformSampling(0.5),
+    scenarios.StragglerDropout(0.5, 0.4),
+    scenarios.AvailabilityCycle(0.5, period=4, duty=0.5),
+]
+
+
+@pytest.mark.parametrize("part", PARTICIPATIONS, ids=lambda p: type(p).__name__)
+def test_participation_seed_deterministic(part):
+    key = jax.random.key(7)
+    k = 12
+    for rnd in range(4):
+        i1, a1 = part.draw(key, rnd, k)
+        i2, a2 = part.draw(key, rnd, k)
+        assert np.array_equal(np.asarray(i1), np.asarray(i2))
+        assert np.array_equal(np.asarray(a1), np.asarray(a2))
+        assert i1.shape == (part.capacity(k),) == a1.shape
+        assert len(np.unique(np.asarray(i1))) == len(np.asarray(i1))  # no dup clients
+        assert float(jnp.sum(a1)) >= 1.0   # a round always has a voter
+    # a different key must be able to move the draw
+    moved = any(
+        not np.array_equal(
+            np.asarray(part.draw(key, r, k)[0]),
+            np.asarray(part.draw(jax.random.key(8), r, k)[0]),
+        )
+        for r in range(4)
+    ) or isinstance(part, scenarios.FullParticipation)
+    assert moved
+
+
+def test_availability_cycle_honors_phase():
+    part = scenarios.AvailabilityCycle(rate=1.0, period=4, duty=0.5)
+    key = jax.random.key(0)
+    k = 8
+    for rnd in range(8):
+        idx, active = part.draw(key, rnd, k)
+        phases = np.asarray(idx) % 4
+        online = ((rnd + phases) % 4) < 2
+        assert np.array_equal(np.asarray(active) > 0, online)
+
+
+def test_availability_cycle_keep_alive_on_dead_rounds():
+    """Degenerate cycles (k < period / tiny duty) must still produce >= 1
+    active client every round — a zero-voter round would clobber the
+    consensus with the vote's tie value."""
+    for part in (
+        scenarios.AvailabilityCycle(rate=1.0, period=4, duty=0.5),
+        scenarios.AvailabilityCycle(rate=0.5, period=8, duty=0.1),
+    ):
+        for k in (2, 3, 5):
+            for rnd in range(10):
+                _, active = part.draw(jax.random.key(1), rnd, k)
+                assert float(jnp.sum(active)) >= 1.0, (part, k, rnd)
+
+
+def test_participation_matches_round_bits_accounting():
+    """The runner bills each round with s = sum(active); the engines' own
+    uplink_bits metric and fl/comms must agree on every round."""
+    from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+    from repro.models import smallnets as sn
+
+    k, rounds = 8, 3
+    part = scenarios.StragglerDropout(0.5, 0.4)
+    cap = part.capacity(k)
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=k, train_per_client=32,
+        test_per_client=16,
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda kk: sn.init_mlp(kk, input_dim=784, hidden=16)
+    eng = PFed1BS(
+        PFed1BSConfig(num_clients=k, participate=cap, local_steps=2, chunk=2048),
+        loss_fn, jax.eval_shape(init_fn, jax.random.key(1)),
+    )
+    state = eng.init(init_fn, jax.random.key(2))
+    pkey = jax.random.key(9)
+    s_per_round = []
+    for r in range(rounds):
+        idx, active = part.draw(pkey, r, k)
+        s_r = int(round(float(jnp.sum(active))))
+        batches = ds.sample_round_batches(jax.random.key(10 + r), data, 2, 16)
+        state, m = eng.round(
+            state, batches, data.weights, jax.random.key(20 + r), (idx, active)
+        )
+        # engine's own uplink meter == the realized participant count * m
+        assert float(m["uplink_bits"]) == s_r * eng.m
+        assert float(m["downlink_bits"]) == eng.m
+        s_per_round.append(s_r)
+    total = comms.accumulate_round_bits(
+        "pfed1bs", n=eng.n, m=eng.m, s_per_round=s_per_round
+    )
+    assert total["uplink_bits"] == sum(s_per_round) * eng.m
+    assert total["downlink_bits"] == rounds * eng.m
+    per_round = [
+        comms.round_bits("pfed1bs", n=eng.n, m=eng.m, s=s) for s in s_per_round
+    ]
+    assert total["total_bits"] == sum(b["total_bits"] for b in per_round)
+
+
+# --- scenario build + end-to-end sweep ---------------------------------------
+
+def test_scenario_build_shapes_and_determinism():
+    sc = scenarios.paper_matrix()["dir0.3-imb"]
+    d1 = sc.build(jax.random.key(3), num_clients=6, train_per_client=32,
+                  test_per_client=16)
+    d2 = sc.build(jax.random.key(3), num_clients=6, train_per_client=32,
+                  test_per_client=16)
+    assert d1.train_x.shape == (6, 32, 28, 28, 1)
+    assert np.array_equal(np.asarray(d1.train_y), np.asarray(d2.train_y))
+    assert np.array_equal(np.asarray(d1.counts), np.asarray(d2.counts))
+    # imbalance sigma=1.0 must produce a real count spread
+    c = np.asarray(d1.counts)
+    assert c.max() > 2 * c.min()
+
+
+@pytest.mark.slow
+def test_end_to_end_sweep_losses_decrease():
+    """2 algorithms x 2 scenarios through the shared round surface: the
+    training signal must actually descend in every cell, and the artifact
+    must pass the report layer's accounting gate."""
+    cfg = runner.ExpConfig(
+        num_clients=6, rounds=6, local_steps=3, batch=16, hidden=32,
+        train_per_client=64, test_per_client=32, chunk=2048,
+    )
+    mat = scenarios.paper_matrix()
+    use = {k: mat[k] for k in ("dir0.1", "straggler")}
+    res = runner.sweep(["fedavg", "pfed1bs"], use, cfg)
+    assert len(res["cells"]) == 4
+    for cell in res["cells"]:
+        losses = cell["loss_curve"]
+        # decreasing trend: last third clearly below first third, and no
+        # catastrophic blow-up anywhere
+        assert np.mean(losses[-2:]) < np.mean(losses[:2]) * 0.85, (
+            cell["algo"], cell["scenario"], losses,
+        )
+        assert np.all(np.isfinite(losses))
+        assert cell["acc"] > 0.3
+    report.validate_matrix(res, min_algos=2, min_scenarios=2)
