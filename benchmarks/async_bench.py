@@ -1,0 +1,366 @@
+"""Async-vs-sync federation bench: time-to-target accuracy under straggler
+tails — emits BENCH_async.json (--fast: BENCH_async.fast.json).
+
+The claim this artifact carries: under a heavy-tailed latency scenario
+(exp/scenarios.async_matrix()["straggler-tail"]), the buffered async tier
+(repro/sim) reaches the same accuracy in LESS virtual time than the
+synchronous fused round, at equal billed uplink bits — because a
+synchronous round waits for the slowest active client (the tail pays
+~tail_mult x base almost every round at realistic cohort sizes) while the
+buffered server flushes on the fastest B arrivals and discounts
+stragglers by staleness instead of waiting for them.
+
+Both runs share the task, the participation draws' key discipline, the
+latency model and the bit meter:
+
+  sync    T rounds; round r costs max over the round's ACTIVE clients of
+          latency.duration(seed, c, r) virtual seconds (the server waits
+          for the slowest upload it accepts); billed via fl/comms with
+          s_r = sum(active).
+  async   buffer B < S, staleness exponent p; max_versions = T*S/B so the
+          two runs bill the SAME uplink bits (same number of client
+          uploads; async pays more m-bit broadcasts — that difference is
+          in the artifact, and is tiny: m bits per extra flush).
+
+The artifact also carries the sync-parity cell (the keystone invariant
+re-checked end-to-end: zero latency + B=S + p=0 drain bit-exact vs the
+sync engine, EF on and off) and a cost-model-at-scale block that prices
+the protocol at a REAL architecture size from repro/configs (the paper's
+table uses n = 1e6; granite-8b is ~8e9 — the async tier is aimed at the
+latter). `benchmarks/report.py --validate` gates the schema AND re-derives
+every bit count through fl/comms (sim/metrics.validate_async_artifact).
+
+Run: PYTHONPATH=src python -m benchmarks.run async [--fast]
+     (or directly: python -m benchmarks.async_bench [--fast])
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _build(fast: bool):
+    """Task + engine + the shared draw/batch closures."""
+    from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+    from repro.data import synthetic as ds
+    from repro.exp import scenarios
+    from repro.models import smallnets as sn
+
+    if fast:
+        knobs = dict(num_clients=8, rounds=6, local_steps=2, batch=16,
+                     hidden=32, train_per_client=64, test_per_client=32)
+    else:
+        knobs = dict(num_clients=10, rounds=12, local_steps=4, batch=24,
+                     hidden=48, train_per_client=128, test_per_client=64)
+
+    sc = scenarios.async_matrix()["straggler-tail"]
+    sc = dataclasses.replace(sc, noise=sc.noise * 2.0)  # separable but hard
+    data = sc.build(
+        jax.random.key(0), knobs["num_clients"],
+        train_per_client=knobs["train_per_client"],
+        test_per_client=knobs["test_per_client"],
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda k: sn.init_mlp(
+        k, input_dim=784, hidden=knobs["hidden"], classes=10
+    )
+    eval_fn = lambda p, x, y: sn.accuracy(sn.apply_mlp(p, x), y)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    capacity = sc.capacity(knobs["num_clients"])
+    eng = PFed1BS(
+        PFed1BSConfig(
+            num_clients=knobs["num_clients"], participate=capacity,
+            local_steps=knobs["local_steps"], m_ratio=0.1, chunk=2048,
+        ),
+        loss_fn, template,
+    )
+
+    participants_fn = lambda v: sc.draw_participants(
+        jax.random.key(17), v, knobs["num_clients"]
+    )
+    batch_fn = lambda v: ds.sample_round_batches(
+        jax.random.fold_in(jax.random.key(23), v), data,
+        knobs["local_steps"], knobs["batch"],
+    )
+
+    def evaluate(state):
+        accs = jax.vmap(eval_fn)(state.clients, data.test_x, data.test_y)
+        return float(accs.mean())
+
+    return sc, data, eng, init_fn, participants_fn, batch_fn, evaluate, knobs
+
+
+def run_sync(sc, data, eng, init_fn, participants_fn, batch_fn, evaluate,
+             rounds: int, seed: int = 0) -> dict:
+    """Synchronous fused rounds with a virtual wall clock: each round
+    costs the slowest active client's latency."""
+    from repro.fl import comms
+
+    state = eng.init(init_fn, jax.random.key(2))
+    t = 0.0
+    s_per_round, curve, round_times = [], [], []
+    for r in range(rounds):
+        idx, active = participants_fn(r)
+        idx_np, act_np = np.asarray(idx), np.asarray(active)
+        durations = [
+            sc.latency.duration(seed, int(c), r)
+            for c, a in zip(idx_np, act_np) if a > 0
+        ]
+        t += max(durations) if durations else 0.0
+        round_times.append(max(durations) if durations else 0.0)
+        state, _ = eng.round(
+            state, batch_fn(r), data.weights, jax.random.key(0),
+            (idx, active),
+        )
+        s_per_round.append(int(round(float(np.sum(act_np)))))
+        curve.append((t, evaluate(state)))
+    bits = comms.accumulate_round_bits(
+        "pfed1bs", n=eng.n, m=eng.m, s_per_round=s_per_round
+    )
+    # cumulative billed bits after each round (uploads + that round's
+    # m-bit broadcast) on the same virtual clock as acc_curve
+    cum = np.cumsum(s_per_round) * eng.m + np.arange(1, rounds + 1) * eng.m
+    return {
+        "rounds": rounds,
+        "s_per_round": s_per_round,
+        "round_times": round_times,
+        "cum_bits_curve": [[t_, int(b)] for (t_, _), b in zip(curve, cum)],
+        "acc_curve": [[t_, a] for t_, a in curve],
+        "final_acc": curve[-1][1],
+        "final_t": curve[-1][0],
+        "uplink_bits": bits["uplink_bits"],
+        "downlink_bits": bits["downlink_bits"],
+        "total_bits": bits["total_bits"],
+    }
+
+
+def run_async(data, eng, init_fn, participants_fn, batch_fn, evaluate,
+              latency, buffer_size: int, max_versions: int,
+              staleness_exponent: float = 0.5, seed: int = 0) -> dict:
+    from repro.sim import metrics as simmetrics
+    from repro.sim.server import AsyncConfig, AsyncSimulator
+
+    cfg = AsyncConfig(
+        buffer_size=buffer_size, staleness_exponent=staleness_exponent,
+        max_versions=max_versions, seed=seed, latency=latency,
+    )
+    sim = AsyncSimulator(eng, cfg, data.weights, participants_fn, batch_fn)
+    curve = []
+    st, rep = sim.run(
+        eng.init(init_fn, jax.random.key(2)),
+        on_flush=lambda t, v, s: curve.append((t, evaluate(s))),
+    )
+    d = rep.to_dict()
+    cum = [
+        rep.meter.cumulative_bits_at(f.t) for f in rep.flushes
+    ]
+    return {
+        "buffer_size": buffer_size,
+        "staleness_exponent": staleness_exponent,
+        "versions": rep.versions,
+        "arrivals_per_flush": d["arrivals_per_flush"],
+        "residual_arrivals": d["residual_arrivals"],
+        "lag_histogram": d["lag_histogram"],
+        "lag_summary": simmetrics.summarize_lags(
+            [tau for f in rep.flushes for tau in f.taus]
+        ),
+        "flush_t": d["flush_t"],
+        "cum_bits_curve": [[f.t, int(b)] for f, b in zip(rep.flushes, cum)],
+        "acc_curve": [[t_, a] for t_, a in curve],
+        "final_acc": curve[-1][1],
+        "final_t": rep.final_t,
+        "uplink_bits": d["uplink_bits"],
+        "downlink_bits": d["downlink_bits"],
+        "total_bits": d["total_bits"],
+    }
+
+
+def check_sync_parity(fast: bool) -> dict:
+    """The keystone invariant, re-proven on the bench task: zero latency,
+    B = S, p = 0 drain vs the sync engine, EF on and off."""
+    from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+    from repro.data import synthetic as ds
+    from repro.models import smallnets as sn
+    from repro.sim.clock import ConstantLatency
+    from repro.sim.server import AsyncConfig, AsyncSimulator
+    import repro.core.rounds as rounds
+
+    k = s = 4
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=k, train_per_client=32,
+        test_per_client=16,
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda kk: sn.init_mlp(kk, input_dim=784, hidden=16)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    rounds_ = 2 if fast else 3
+    checked = []
+    for ef in (False, True):
+        eng = PFed1BS(
+            PFed1BSConfig(num_clients=k, participate=s, local_steps=2,
+                          m_ratio=0.05, chunk=2048, error_feedback=ef),
+            loss_fn, template,
+        )
+        pf = lambda v: rounds.draw_participants(
+            jax.random.fold_in(jax.random.key(7), v), k, s, None
+        )
+        bf = lambda v: ds.sample_round_batches(
+            jax.random.fold_in(jax.random.key(9), v), data, 2, 16
+        )
+        st_sync = eng.init(init_fn, jax.random.key(2))
+        for r in range(rounds_):
+            st_sync, _ = eng.round(
+                st_sync, bf(r), data.weights, jax.random.key(0), pf(r)
+            )
+        sim = AsyncSimulator(
+            eng,
+            AsyncConfig(buffer_size=s, staleness_exponent=0.0,
+                        max_versions=rounds_, latency=ConstantLatency(0.0)),
+            data.weights, pf, bf,
+        )
+        st_async, _ = sim.run(eng.init(init_fn, jax.random.key(2)))
+        same = bool(np.array_equal(np.asarray(st_sync.v), np.asarray(st_async.v)))
+        for a, b in zip(jax.tree.leaves(st_sync.clients),
+                        jax.tree.leaves(st_async.clients)):
+            same = same and bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        if ef:
+            same = same and bool(
+                np.array_equal(np.asarray(st_sync.ef), np.asarray(st_async.ef))
+            )
+        checked.append({"error_feedback": ef, "bit_exact": same})
+    return {
+        "bit_exact": all(c["bit_exact"] for c in checked),
+        "rounds": rounds_,
+        "checked": checked,
+    }
+
+
+def cost_model_at_scale(m_ratio: float = 0.1) -> dict:
+    """Price one round at a REAL architecture size (repro/configs): the
+    README cost-model table uses n = 1e6; production federated fine-tuning
+    of granite-8b is ~8e9 parameters. Pure accounting — only shapes are
+    built (jax.eval_shape), no weights are allocated."""
+    from repro import configs
+    from repro.core import flatten
+    from repro.fl import comms
+    from repro.launch.steps import param_template
+
+    arch = configs.get("granite-8b")
+    n = flatten.tree_size(param_template(arch))
+    m = int(n * m_ratio)
+    s = 20
+    ours = comms.round_bits("pfed1bs", n=n, m=m, s=s)
+    fedavg = comms.round_bits("fedavg", n=n, m=m, s=s)
+    return {
+        "arch": arch.name,
+        "n": n,
+        "m": m,
+        "s": s,
+        "pfed1bs_mb_round": ours["total_mb"],
+        "fedavg_mb_round": fedavg["total_mb"],
+        "reduction_vs_fedavg": comms.reduction_vs_fedavg(
+            "pfed1bs", n=n, m=m, s=s
+        ),
+    }
+
+
+def bench_async_vs_sync(fast: bool = False) -> dict:
+    from repro.sim import metrics as simmetrics
+
+    sc, data, eng, init_fn, participants_fn, batch_fn, evaluate, knobs = (
+        _build(fast)
+    )
+    rounds = knobs["rounds"]
+    s_cap = sc.capacity(knobs["num_clients"])
+    buffer_size = max(2, s_cap // 2)
+    # same number of client uploads as the sync run -> equal billed uplink
+    max_versions = rounds * s_cap // buffer_size
+
+    sync = run_sync(sc, data, eng, init_fn, participants_fn, batch_fn,
+                    evaluate, rounds)
+    asyn = run_async(data, eng, init_fn, participants_fn, batch_fn, evaluate,
+                     sc.latency, buffer_size, max_versions)
+
+    target = 0.95 * min(sync["final_acc"], asyn["final_acc"])
+    sync["time_to_target_s"] = simmetrics.time_to_target(
+        sync["acc_curve"], target
+    )
+    asyn["time_to_target_s"] = simmetrics.time_to_target(
+        asyn["acc_curve"], target
+    )
+    speedup = (
+        sync["time_to_target_s"] / asyn["time_to_target_s"]
+        if sync["time_to_target_s"] and asyn["time_to_target_s"]
+        else None
+    )
+
+    def bits_at(run, t):
+        spent = [b for tt, b in run["cum_bits_curve"] if tt <= t]
+        return spent[-1] if spent else 0
+
+    sync["bits_at_target"] = (
+        bits_at(sync, sync["time_to_target_s"])
+        if sync["time_to_target_s"] is not None else None
+    )
+    asyn["bits_at_target"] = (
+        bits_at(asyn, asyn["time_to_target_s"])
+        if asyn["time_to_target_s"] is not None else None
+    )
+    out = {
+        "fast": fast,
+        "scenario": sc.name,
+        "m": eng.m,
+        "n": eng.n,
+        "config": {**knobs, "capacity": s_cap, "buffer_size": buffer_size,
+                   "max_versions": max_versions},
+        "target_acc": target,
+        "sync": sync,
+        "async": asyn,
+        "speedup_time_to_target": speedup,
+        "sync_parity": check_sync_parity(fast),
+        "cost_model_at_scale": cost_model_at_scale(),
+    }
+    simmetrics.validate_async_artifact(out)
+    return out
+
+
+def write_artifacts(results: dict, out_path: str | None = None) -> str:
+    """BENCH_async.json writer; --fast runs land in BENCH_async.fast.json
+    and never touch the canonical artifact (same policy as the other
+    benches). The canonical run is also mirrored to experiments/bench/."""
+    fast = bool(results.get("fast"))
+    if out_path is None:
+        out_path = "BENCH_async.fast.json" if fast else "BENCH_async.json"
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    if not fast:
+        os.makedirs("experiments/bench", exist_ok=True)
+        with open("experiments/bench/BENCH_async.json", "w") as f:
+            json.dump(results, f, indent=2)
+    return out_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    results = bench_async_vs_sync(fast=args.fast)
+    path = write_artifacts(results, args.out)
+    s, a = results["sync"], results["async"]
+    print(f"target acc {results['target_acc']:.4f}")
+    print(f"sync : tta {s['time_to_target_s']:.2f}s  final {s['final_acc']:.4f}"
+          f"  bits {s['total_bits']:,}")
+    print(f"async: tta {a['time_to_target_s']:.2f}s  final {a['final_acc']:.4f}"
+          f"  bits {a['total_bits']:,}  lags {a['lag_histogram']}")
+    print(f"speedup (time-to-target) {results['speedup_time_to_target']:.2f}x")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,13 @@ BENCH_SCHEMAS = {
     "BENCH_exp": [
         "cells", "algos", "scenarios", "config",
     ],
+    "BENCH_async": [
+        "m", "scenario", "config", "target_acc", "speedup_time_to_target",
+        "sync.s_per_round", "sync.time_to_target_s", "sync.uplink_bits",
+        "async.arrivals_per_flush", "async.time_to_target_s",
+        "async.uplink_bits", "async.lag_histogram",
+        "sync_parity.bit_exact", "cost_model_at_scale.n",
+    ],
 }
 
 
@@ -73,6 +80,15 @@ def validate_bench_artifacts(fast: bool, root: str = ".") -> list[str]:
 
             try:
                 validate_matrix(obj)
+            except ValueError as e:
+                problems.append(f"{path}: {e}")
+        if stem == "BENCH_async" and not any(p.startswith(path) for p in problems):
+            # sync-parity cell present + bit-exact, bits re-derivable from
+            # fl/comms, async time-to-target beats sync
+            from repro.sim.metrics import validate_async_artifact
+
+            try:
+                validate_async_artifact(obj)
             except ValueError as e:
                 problems.append(f"{path}: {e}")
     return problems

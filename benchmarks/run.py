@@ -24,6 +24,11 @@ same protocols); the full-scale numbers live in the dry-run roofline.
                   scenarios (Dirichlet alpha, label skew, imbalance,
                   stragglers, availability cycling) -> accuracy vs bits
                   (BENCH_exp.json; --fast emits BENCH_exp.fast.json)
+  async           async federation tier: sync vs buffered-async
+                  time-to-target accuracy under a straggler-tail latency
+                  scenario, sync-parity cell, cost model at a real
+                  configs/ architecture size (BENCH_async.json; --fast
+                  emits BENCH_async.fast.json)
   roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
@@ -353,6 +358,25 @@ def bench_exp(fast=False):
     return results
 
 
+def bench_async(fast=False):
+    """Async-vs-sync time-to-target — emits BENCH_async.json (fast:
+    BENCH_async.fast.json; see benchmarks/async_bench.py)."""
+    from benchmarks import async_bench
+
+    results = async_bench.bench_async_vs_sync(fast=fast)
+    s, a = results["sync"], results["async"]
+    emit("async/sync", (s["time_to_target_s"] or 0.0) * 1e6,
+         f"final_acc={s['final_acc']:.4f} bits={s['total_bits']}")
+    emit("async/buffered", (a["time_to_target_s"] or 0.0) * 1e6,
+         f"final_acc={a['final_acc']:.4f} bits={a['total_bits']} "
+         f"B={a['buffer_size']} p={a['staleness_exponent']}")
+    emit("async/speedup", 0.0,
+         f"time_to_target={results['speedup_time_to_target']:.2f}x "
+         f"parity={'OK' if results['sync_parity']['bit_exact'] else 'FAIL'}")
+    async_bench.write_artifacts(results)
+    return results
+
+
 BENCHES = {
     "table2": bench_table2,
     "fig3_fig4": bench_fig3_fig4,
@@ -366,6 +390,7 @@ BENCHES = {
     "round_sharded": bench_round_sharded,
     "serve": bench_serve,
     "exp": bench_exp,
+    "async": bench_async,
     "roofline": bench_roofline,
 }
 

@@ -2,6 +2,15 @@
 
 Every entry cites its source paper/model card. `get(name)` returns the full
 ArchConfig; `get(name).reduced()` is the CPU smoke-test variant.
+
+Reachability audit (PR 5): every one of the ten configs is exercised —
+tests/test_models.py and tests/test_sharding_data_ckpt.py parametrize over
+ARCH_NAMES, launch/dryrun.py --all compiles all of them, launch/train.py
+and serve_bench/test_serve/test_perf_features use granite-8b and
+starcoder2-7b directly, and benchmarks/async_bench.py prices the Table-2
+cost model at granite-8b's REAL parameter count (n ≈ 8.25e9 via
+jax.eval_shape — the README table's n = 1e6 is the paper's toy setting).
+A config removed from this registry fails tests; none are dead weight.
 """
 from repro.configs import (
     falcon_mamba_7b, starcoder2_7b, granite_moe_3b, internvl2_26b,

@@ -43,6 +43,38 @@ def majority_vote_popcount(words: jax.Array) -> jax.Array:
     return kops.vote_popcount(words)
 
 
+def staleness_weights(tau: jax.Array, exponent: float) -> jax.Array:
+    """Polynomial staleness discount 1/(1+tau)^p for buffered async votes.
+
+    tau: (B,) non-negative consensus-version lags (server version at flush
+    minus the version each arriving client downloaded); exponent p >= 0.
+    p = 0 returns exactly 1.0 for every row — multiplying a vote weight by
+    it is a float no-op, which is what makes the async tier's zero-staleness
+    drain bit-exact with the synchronous round (repro/sim, DESIGN.md §9).
+    FedBuff and FedAsync both use this family; p is
+    sim/server.py::AsyncConfig.staleness_exponent.
+    """
+    if exponent == 0.0:
+        return jnp.ones_like(jnp.asarray(tau, jnp.float32))
+    tau = jnp.asarray(tau, jnp.float32)
+    return (1.0 + tau) ** (-float(exponent))
+
+
+def staleness_weighted_vote(zs: jax.Array, p: jax.Array, tau: jax.Array,
+                            exponent: float) -> jax.Array:
+    """REFERENCE semantics of the async tier's flush vote (Lemma 1 with
+    per-client staleness discounts): v = sign(sum_k p_k/(1+tau_k)^p z_k).
+    zs: (B, m); p, tau: (B,).
+
+    The simulator's production flush does NOT call this directly — it
+    composes `staleness_weights` with the engine's order-pinned vote paths
+    (pfed1bs.vote_scattered for natural-client-order parity with the sync
+    round, kernels/ops.vote_packed_ragged for the wire format), because
+    this buffer-order accumulation is not bit-stable under resampling.
+    Tests compare against this form (tests/test_async_sim.py)."""
+    return majority_vote(zs, p * staleness_weights(tau, exponent))
+
+
 def server_objective(v: jax.Array, zs: jax.Array, p: jax.Array) -> jax.Array:
     """sum_k p_k g(v, z_k) with the exact one-sided l1 regularizer."""
     return jnp.einsum("k,k->", p, jax.vmap(lambda z: one_sided_l1(v, z))(zs))

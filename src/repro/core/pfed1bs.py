@@ -250,7 +250,17 @@ class PFed1BS:
         corrected = Phi w + e; z = sign(corrected); e' = corrected -
         alpha * z with the l1-optimal alpha = mean|corrected| per client.
         zs, ef: (rows, m) float32 -> (corrected, signs, new_ef) same shape.
-        Single source of truth for all three round executors."""
+        Single source of truth for every round executor AND the async
+        tier's dispatch (repro/sim/server.py).
+
+        BIT-EXACTNESS CONSTRAINT: this chain (in particular the alpha mean
+        reduction) must be compiled in the SAME program as the cohort
+        update + sketch that produced `zs` — XLA compiles the reduction a
+        ulp apart when `zs` instead enters as a program argument, even
+        behind optimization_barriers. That is why the async tier quantizes
+        at dispatch (one program with the cohort, like the sync round)
+        rather than at flush; see sim/server.py::_cohort_client_side and
+        tests/test_async_sim.py."""
         corrected = zs + ef
         signs = jnp.sign(corrected) + (corrected == 0)
         alpha = jnp.mean(jnp.abs(corrected), axis=1, keepdims=True)
@@ -264,6 +274,39 @@ class PFed1BS:
         return rounds.draw_participants(
             key, self.cfg.num_clients, self.cfg.participate, participants
         )
+
+    # -- cohort primitives (shared by the fused round AND the async tier) ------
+
+    def cohort_update(self, clients, batches, idx, v):
+        """Gather the `idx` cohort and run the vmapped local update against
+        consensus `v`, sketching each updated client exactly once.
+
+        clients/batches: stacked (K, ...) pytrees; idx: (S,) distinct client
+        ids; v: (m,) consensus. Returns (upd (S,...) pytree, task_loss (S,),
+        zs (S, m) pre-EF sketches). This is THE client-side computation of
+        the fused round; the async simulator (repro/sim) dispatches cohorts
+        through this same method so a zero-latency drain is bit-exact with
+        the synchronous round (tests/test_async_sim.py).
+        """
+        take = lambda tree: jax.tree.map(lambda a: a[idx], tree)
+        upd, task_loss = jax.vmap(
+            lambda p, b: self._client_update(p, b, v)
+        )(take(clients), take(batches))
+        zs = jax.vmap(self._sketch_client)(upd)                # (S, m)
+        return upd, task_loss, zs
+
+    def vote_scattered(self, signs, idx, w_s):
+        """Lemma 1 vote over a cohort, accumulated in NATURAL client order:
+        the (S, m) sign rows and (S,) masked weights are scattered into
+        zero-initialized (K, m)/(K,) buffers before the weighted sign-sum,
+        so float accumulation order never depends on the sampling
+        permutation (see the §4 note — permutation-order sums can flip
+        near-zero consensus signs). Shared by the fused round, the sharded
+        executor's exact vote, and the async tier's buffer flush."""
+        k = self.cfg.num_clients
+        signs_full = jnp.zeros((k, self.m), jnp.float32).at[idx].set(signs)
+        w_full = jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
+        return consensus.majority_vote(signs_full, w_full)
 
     @functools.partial(jax.jit, static_argnums=0)
     def round(self, state: FLState, batches, weights, key, participants=None):
@@ -287,24 +330,21 @@ class PFed1BS:
         per sampled client per round, threaded through vote, metrics and
         Psi (on the pre-EF sketches, matching Eq. 28)."""
         cfg = self.cfg
-        k = cfg.num_clients
 
         # partial participation: sample S clients without replacement
         idx, active = self._draw_participants(key, participants)
 
-        take = lambda tree: jax.tree.map(lambda a: a[idx], tree)
-        upd, task_loss = jax.vmap(
-            lambda p, b: self._client_update(p, b, state.v)
-        )(take(state.clients), take(batches))
+        # gather -> vmapped update -> one sketch per sampled client
+        # (cohort_update; non-sampled clients never pay local SGD and their
+        # unchanged sketches are never recomputed)
+        upd, task_loss, zs = self.cohort_update(
+            state.clients, batches, idx, state.v
+        )
 
         # scatter updated models back; non-sampled AND inactive (dropped-out)
         # clients keep theirs
         clients = rounds.scatter_rows(state.clients, idx, upd, active)
 
-        # uplink: only the S sampled clients are sketched — exactly once per
-        # round; non-sampled clients kept their params and transmit nothing,
-        # so their (unchanged) sketches are never recomputed.
-        zs = jax.vmap(self._sketch_client)(upd)                # (S, m)
         zs_phi = zs            # pre-EF sketches Phi w (the Eq. 28 potential)
         new_ef = state.ef
         if cfg.error_feedback:
@@ -316,17 +356,11 @@ class PFed1BS:
             signs = jnp.sign(zs) + (zs == 0)                   # {-1,+1}
         packed = self._pack_uplink(signs)
 
-        # server: weighted majority vote over the sampled clients (Lemma 1).
-        # Vote in natural client order with zero weights for non-sampled
-        # rows: summing the S rows in permutation order changes float
-        # accumulation and can flip near-zero consensus signs, so the fused
-        # round would diverge from the staged one on the algorithm's core
-        # discrete object. Dropped-out rows (active=0) cast no vote.
+        # server: weighted majority vote over the sampled clients (Lemma 1),
+        # accumulated in natural client order (vote_scattered). Dropped-out
+        # rows (active=0) cast no vote.
         w_s = weights[idx] * active
-        signs_full = jnp.zeros((k, self.m), jnp.float32).at[idx].set(signs)
-        v_new = consensus.majority_vote(
-            signs_full, jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
-        )
+        v_new = self.vote_scattered(signs, idx, w_s)
 
         potential = self._potential_from_sketches(
             upd, zs_phi, v_new, task_loss, w_s

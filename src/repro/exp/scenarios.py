@@ -19,6 +19,14 @@ composes the three axes as frozen dataclasses:
                      engines (core/pfed1bs.py, core/baselines.py) treat
                      active=0 as "trained nothing landed": params kept, no
                      vote, no bits.
+  latency axis       ConstantLatency | ComputeNetworkLatency |
+                     StragglerTailLatency (sim/clock.py) — how long each
+                     client's round trip takes in VIRTUAL seconds. The
+                     synchronous harness uses it only to cost a round
+                     (sync waits for the slowest active client); the async
+                     tier (repro/sim, DESIGN.md §9) drives its event queue
+                     with it. None (the default) means time is not
+                     modeled, which is every pre-async scenario.
 
 Every participation draw has a STATIC capacity S (= the engine's
 `participate`), so the jitted round never retraces across rounds; dropout
@@ -177,6 +185,8 @@ class Scenario:
     imbalance: float = 0.0        # lognormal sigma; 0 = balanced counts
     noise: float = 1.0
     concept_shift: bool = False   # reserved: per-client label permutation
+    latency: object | None = None  # sim/clock.py LatencyModel; None = time
+    #                                not modeled (sync-only scenario)
 
     def capacity(self, num_clients: int) -> int:
         return self.participation.capacity(num_clients)
@@ -235,5 +245,38 @@ def paper_matrix() -> dict[str, Scenario]:
         "cycling": Scenario(
             "cycling", DirichletPartition(0.3),
             AvailabilityCycle(0.5, period=4, duty=0.5),
+        ),
+    }
+
+
+def async_matrix() -> dict[str, Scenario]:
+    """Scenarios with the latency axis set — what the async tier
+    (repro/sim) simulates and benchmarks/async_bench.py sweeps. Imported
+    lazily so the sync-only harness never pays the sim import."""
+    from repro.sim.clock import (
+        ComputeNetworkLatency,
+        ConstantLatency,
+        StragglerTailLatency,
+    )
+
+    return {
+        # every client equally fast: async buys nothing (control cell)
+        "uniform-const": Scenario(
+            "uniform-const", DirichletPartition(0.3), UniformSampling(0.5),
+            latency=ConstantLatency(1.0),
+        ),
+        # persistent device heterogeneity + network tail
+        "hetero-lognormal": Scenario(
+            "hetero-lognormal", DirichletPartition(0.3), UniformSampling(0.5),
+            latency=ComputeNetworkLatency(client_speed_sigma=0.6),
+        ),
+        # the headline regime: a heavy straggler tail bounds every
+        # synchronous round while the buffered server flushes on the
+        # fastest B arrivals
+        "straggler-tail": Scenario(
+            "straggler-tail", DirichletPartition(0.3), UniformSampling(0.5),
+            latency=StragglerTailLatency(
+                tail_prob=0.25, tail_mult=10.0, tail_scale=1.0
+            ),
         ),
     }

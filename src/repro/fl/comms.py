@@ -51,7 +51,14 @@ def round_bits(algo: str, *, n: int, m: int, s: int, num_tensors: int = 1) -> di
     n: model parameters; m: sketch rows (pFed1BS/OBCSAA only); s: number of
     participating clients S; num_tensors: pytree leaf count (FedBAT only —
     see module docstring). Returns integer bit counts
-    {uplink_bits, downlink_bits, total_bits} plus total_mb (float, MB).
+    {uplink_bits, downlink_bits, total_bits} plus total_mb (float).
+
+    UNIT CONVENTION: total_mb is DECIMAL megabytes — total_bits / 8e6,
+    i.e. 1 MB = 10^6 bytes (SI), NOT 2^20-byte MiB. This is the unit the
+    README cost-model tables print and tests/test_comms_table2.py pins
+    (160.0 MB for FedAvg at n=1e6, S=20 — the round number is only round
+    in decimal). Anything comparing against these figures must divide by
+    8e6, not 8 * 2**20.
     """
     algo = algo.lower()
     if algo == "fedavg":
@@ -80,7 +87,8 @@ def accumulate_round_bits(algo: str, *, n: int, m: int, s_per_round,
     counted once per round regardless of s_r, exactly as `round_bits` does.
 
     s_per_round: iterable of ints. Returns {uplink_bits, downlink_bits,
-    total_bits, total_mb, rounds}.
+    total_bits, total_mb, rounds}; total_mb uses the same decimal-MB
+    (total_bits / 8e6) convention as `round_bits`.
     """
     up = down = 0
     rounds = 0

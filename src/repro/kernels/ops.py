@@ -274,6 +274,26 @@ def vote_packed(words: jax.Array, weights: jax.Array, impl: str = "auto") -> jax
     return vote_pallas(wp, weights, block_words=bw, interpret=not _on_tpu())[:nw]
 
 
+def vote_packed_ragged(words: jax.Array, weights: jax.Array,
+                       valid: jax.Array, impl: str = "auto") -> jax.Array:
+    """Weighted vote over a RAGGED buffer padded to a static row capacity.
+
+    The async tier's buffer flush (repro/sim/server.py) votes over however
+    many uploads have arrived — B on a full flush, fewer on the final
+    drain — but a jitted vote must see a static shape. Callers keep a
+    fixed-capacity (B, W) uint32 buffer and a (B,) `valid` mask; invalid
+    rows (stale slots from a previous flush, never-filled tail rows) are
+    annihilated by zeroing their weight before the weighted vote, so their
+    word content never matters. weights: (B,) float (already including any
+    staleness discount); valid: (B,) float/bool.
+
+    Returns (W,) uint32 packed consensus, ties -> +1 (vote_packed
+    semantics).
+    """
+    w = weights * valid.astype(weights.dtype)
+    return vote_packed(words, w, impl=impl)
+
+
 def vote_popcount(words: jax.Array, impl: str = "auto") -> jax.Array:
     """UNWEIGHTED majority vote, fully word-level (no unpack, no floats).
 

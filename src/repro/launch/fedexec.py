@@ -58,7 +58,7 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
     """
     cfg = eng.cfg
     mesh = eng.fed_mesh
-    k, s, m = cfg.num_clients, cfg.participate, eng.m
+    m = eng.m
     pad = (-m) % 32
     nw = (m + pad) // 32
 
@@ -125,13 +125,11 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
         v_new = kops.unpack_signs(vw)[:m]
     else:
         # Lemma 1 exactly: unpack server-side, vote in natural client order
-        # with zero weights on non-sampled rows — the same float
-        # accumulation as the fused round (see §4 note on vote ordering),
-        # hence bit-exact with it on a 1-device mesh.
+        # with zero weights on non-sampled rows (eng.vote_scattered — the
+        # same float accumulation as the fused round, see §4 note on vote
+        # ordering), hence bit-exact with it on a 1-device mesh.
         pm = kops.unpack_signs(packed)[:, :m]
-        signs_full = jnp.zeros((k, m), jnp.float32).at[idx].set(pm)
-        p_full = jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
-        v_new = consensus.majority_vote(signs_full, p_full)
+        v_new = eng.vote_scattered(pm, idx, w_s)
 
     # ---- simulator state bookkeeping (not wire traffic) --------------------
     clients = rounds.scatter_rows(state.clients, idx, res["upd"], active)

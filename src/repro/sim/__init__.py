@@ -1,0 +1,22 @@
+"""Event-driven asynchronous federation tier (DESIGN.md §9).
+
+Virtual-time simulation of a buffered async pFed1BS server: clients
+arrive continuously under per-client latency models, their one-bit sketch
+votes accumulate in a size-B buffer, and every flush re-votes the
+consensus with staleness-discounted weights. With zero latency, buffer
+size B = S and staleness exponent p = 0, one full drain of the event
+queue is bit-exact with the synchronous fused round
+(tests/test_async_sim.py).
+
+  clock.py    deterministic virtual-time event queue + latency models
+  client.py   per-client async state (download version, in-flight flag)
+  server.py   buffered aggregator + the AsyncSimulator event loop
+  metrics.py  wall-clock-vs-bits accounting on top of fl/comms
+"""
+from repro.sim.clock import (  # noqa: F401
+    ConstantLatency,
+    ComputeNetworkLatency,
+    EventQueue,
+    StragglerTailLatency,
+)
+from repro.sim.server import AsyncConfig, AsyncSimulator  # noqa: F401

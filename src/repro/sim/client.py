@@ -1,0 +1,73 @@
+"""Per-client async state for the event-driven federation tier.
+
+A client in the async tier is a tiny state machine:
+
+    idle --dispatch(version)--> in-flight --arrival--> idle
+           downloads v^version                 upload lands; its vote
+           starts R local steps                enters the server buffer
+
+`download_version` is what staleness is measured against: when the upload
+finally lands, the server has moved on to version V, and the vote is
+discounted by 1/(1 + V - download_version)^p (core/consensus.py
+::staleness_weights). A client has at most ONE job in flight — the
+dispatch policy is version-gated (a client re-enters the pool only after
+delivering its previous vote), which is what FedBuff calls bounded
+concurrency and what keeps the zero-latency drain identical to the
+synchronous cohort schedule.
+
+The error-feedback residual named in the PR brief lives with the rest of
+the stacked engine state (FLState.ef, one (K, m) row per client). It is
+READ at dispatch — `_ef_quantize` runs inside the dispatch program
+(server.py::_cohort_client_side), which is valid precisely because of the
+version gate: with at most one job in flight, nothing can write a
+client's residual between its dispatch and the flush that delivers its
+vote — and the updated rows are WRITTEN back at flush by an exact index
+scatter. Do not move the quantize into the flush body: computing it
+outside the cohort program costs a ulp of XLA drift and breaks the
+bit-exact parity contract (tests/test_async_sim.py, DESIGN.md §9.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientState:
+    download_version: int = -1     # consensus version last downloaded
+    in_flight: bool = False
+    jobs_done: int = 0             # uploads that have landed
+    last_arrival_t: float = 0.0    # virtual time of the last landed upload
+
+
+class Roster:
+    """The K clients' async states + the version-gated dispatch rule."""
+
+    def __init__(self, num_clients: int):
+        self.states = [ClientState() for _ in range(num_clients)]
+
+    def idle(self, client: int) -> bool:
+        return not self.states[client].in_flight
+
+    def dispatch(self, client: int, version: int) -> None:
+        st = self.states[client]
+        assert not st.in_flight, f"client {client} already in flight"
+        st.in_flight = True
+        st.download_version = version
+
+    def arrive(self, client: int, t: float) -> int:
+        """Mark the client's upload as landed; returns its download version
+        (the server computes staleness against its own current version)."""
+        st = self.states[client]
+        assert st.in_flight, f"client {client} arrived without a dispatch"
+        st.in_flight = False
+        st.jobs_done += 1
+        st.last_arrival_t = float(t)
+        return st.download_version
+
+    def in_flight_count(self) -> int:
+        return sum(s.in_flight for s in self.states)
+
+    def jobs_done_counts(self) -> np.ndarray:
+        return np.asarray([s.jobs_done for s in self.states], np.int64)

@@ -1,0 +1,144 @@
+"""Deterministic virtual-time event queue + per-client latency models.
+
+Time here is VIRTUAL: the simulator never reads a wall clock, so a run is
+a pure function of (engine state, scenario, seed) — replayable in tests
+and CI, and immune to host-load jitter. The queue is a binary heap keyed
+on `(t, seq)`: `seq` is a monotone push counter, so events at the same
+virtual instant pop in push order and ties can never be broken
+nondeterministically (this is what makes the zero-latency drain reproduce
+the synchronous round's client order exactly).
+
+Latency models answer one question — "how long does client k's round-trip
+take for the job it started at consensus version v?" — deterministically
+from `(seed, client, version)` via numpy SeedSequence streams (no global
+RNG state, no draw-order dependence). Three families:
+
+  ConstantLatency          every job takes the same `seconds` (0.0 is the
+                           parity configuration)
+  ComputeNetworkLatency    lognormal compute (scaled by a persistent
+                           per-client speed factor — slow devices stay
+                           slow) + shifted-exponential network, the
+                           standard FL latency decomposition
+  StragglerTailLatency     a base model mixed with a heavy tail: with
+                           probability `tail_prob` the job additionally
+                           pays `tail_mult` x an Exp(tail_scale) stall —
+                           the regime where synchronous rounds are bound
+                           by the slowest client and buffered async wins
+                           (benchmarks/async_bench.py)
+
+Models are frozen dataclasses so they compose with `exp/scenarios.py`'s
+Scenario as a fourth axis (`Scenario.latency`) without breaking hashing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, NamedTuple
+
+import numpy as np
+
+
+class Event(NamedTuple):
+    t: float          # virtual seconds
+    seq: int          # heap tiebreak: push order
+    kind: str         # "arrival" (client upload lands at the server)
+    client: int
+    payload: Any
+
+
+class EventQueue:
+    """Binary heap of Events keyed on (t, seq). Deterministic: equal-time
+    events pop in push order; pushing never reads any clock."""
+
+    def __init__(self):
+        self._heap: list[Event] = []
+        self._seq = 0
+
+    def push(self, t: float, kind: str, client: int, payload=None) -> Event:
+        assert t >= 0.0 and np.isfinite(t), t
+        ev = Event(float(t), self._seq, kind, int(client), payload)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Event:
+        return self._heap[0]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+def _rng(seed: int, *stream: int) -> np.random.Generator:
+    """Independent deterministic stream for (seed, *stream) — SeedSequence
+    spawning keys the stream on the whole tuple, so per-(client, version)
+    draws never alias and never depend on draw order."""
+    return np.random.default_rng(np.random.SeedSequence((seed,) + stream))
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantLatency:
+    """Every job takes `seconds` of virtual time. seconds=0.0 is the
+    parity configuration: all uploads of a cohort land at dispatch time,
+    in dispatch order (heap seq)."""
+    seconds: float = 0.0
+
+    def duration(self, seed: int, client: int, version: int) -> float:
+        return float(self.seconds)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeNetworkLatency:
+    """compute ~ speed_k * LogNormal(mu, sigma) + network ~ shift + Exp(scale).
+
+    speed_k is a PERSISTENT per-client lognormal factor (drawn once from
+    (seed, client)): device heterogeneity, not per-round noise. The
+    per-job lognormal models R local steps' compute variance; the shifted
+    exponential is the classic last-mile network model (a floor `shift`
+    plus a memoryless tail)."""
+    compute_mu: float = 0.0        # log-scale of per-job compute seconds
+    compute_sigma: float = 0.25
+    net_shift: float = 0.05        # network floor, seconds
+    net_scale: float = 0.05        # Exp mean of the network tail
+    client_speed_sigma: float = 0.4  # lognormal sigma of persistent speed_k
+
+    def client_speed(self, seed: int, client: int) -> float:
+        return float(_rng(seed, client, 0xC0).lognormal(
+            mean=0.0, sigma=self.client_speed_sigma
+        ))
+
+    def duration(self, seed: int, client: int, version: int) -> float:
+        g = _rng(seed, client, version, 0x01)
+        compute = self.client_speed(seed, client) * g.lognormal(
+            mean=self.compute_mu, sigma=self.compute_sigma
+        )
+        net = self.net_shift + g.exponential(self.net_scale)
+        return float(compute + net)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerTailLatency:
+    """Mixture: `base` latency, plus — with probability `tail_prob` — a
+    heavy stall of tail_mult * Exp(tail_scale) (background tasks, radio
+    dropouts, airplane mode). The tail draw is keyed on (seed, client,
+    version) like the base, so a given job is a straggler or not
+    deterministically."""
+    base: ComputeNetworkLatency = ComputeNetworkLatency()
+    tail_prob: float = 0.15
+    tail_mult: float = 10.0
+    tail_scale: float = 1.0
+
+    def duration(self, seed: int, client: int, version: int) -> float:
+        d = self.base.duration(seed, client, version)
+        g = _rng(seed, client, version, 0x7A)
+        if g.uniform() < self.tail_prob:
+            d += self.tail_mult * g.exponential(self.tail_scale)
+        return float(d)
+
+
+LatencyModel = ConstantLatency | ComputeNetworkLatency | StragglerTailLatency

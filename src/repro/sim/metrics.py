@@ -1,0 +1,222 @@
+"""Wall-clock-vs-bits accounting for the async tier.
+
+`fl/comms.py` answers "how many bits did a round cost"; the async tier
+also needs WHEN those bits were on the wire — a buffered server that
+flushes early spends the same per-upload bits but compresses them into
+less virtual time. `AsyncMeter` time-stamps every billing event (one
+m-bit uplink per landed upload, one m-bit consensus broadcast per flush)
+and the report re-derives the totals through
+`fl/comms.accumulate_round_bits` with the recorded arrivals-per-flush as
+the realized `s_per_round` — the identical invoice the synchronous
+scenario harness uses, so sync and async runs are compared at equal
+billed bits (`benchmarks/report.py --validate` gates on the
+re-derivation, like the exp matrix).
+
+`SimReport` is the run artifact: the flush log (virtual time, arrivals,
+staleness lags), the consensus-version lag histogram, the billing
+timeline, and `time_to_target` over an accuracy-vs-virtual-time curve.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.fl import comms
+
+
+@dataclasses.dataclass
+class AsyncMeter:
+    """Time-stamped bit billing: (t, bits) event lists per direction."""
+    m: int
+    uplink_events: list = dataclasses.field(default_factory=list)
+    downlink_events: list = dataclasses.field(default_factory=list)
+
+    def bill_uplink(self, t: float) -> None:
+        self.uplink_events.append((float(t), self.m))
+
+    def bill_downlink(self, t: float) -> None:
+        self.downlink_events.append((float(t), self.m))
+
+    @property
+    def uplink_bits(self) -> int:
+        return sum(b for _, b in self.uplink_events)
+
+    @property
+    def downlink_bits(self) -> int:
+        return sum(b for _, b in self.downlink_events)
+
+    @property
+    def total_bits(self) -> int:
+        return self.uplink_bits + self.downlink_bits
+
+    def bits_by_second(self, bucket: float = 1.0) -> dict[int, int]:
+        """Bits on the wire per virtual-`bucket`-second bin (both
+        directions) — the load profile a capacity planner reads."""
+        out: dict[int, int] = {}
+        for t, b in self.uplink_events + self.downlink_events:
+            out[int(t // bucket)] = out.get(int(t // bucket), 0) + b
+        return dict(sorted(out.items()))
+
+    def cumulative_bits_at(self, t: float) -> int:
+        return sum(
+            b
+            for ts, b in self.uplink_events + self.downlink_events
+            if ts <= t
+        )
+
+
+@dataclasses.dataclass
+class FlushRecord:
+    version: int          # consensus version this flush PRODUCED
+    t: float              # virtual time of the flush
+    arrivals: int         # uploads in the buffer (B, or fewer on drain)
+    taus: list            # per-upload consensus-version lags at the flush
+    task_loss: float
+
+
+@dataclasses.dataclass
+class SimReport:
+    """One async run, fully re-derivable."""
+    m: int
+    flushes: list[FlushRecord] = dataclasses.field(default_factory=list)
+    meter: AsyncMeter | None = None
+    residual_arrivals: int = 0     # billed uploads still buffered at stop
+    # NB: accuracy curves are the CALLER's to build (the simulator has no
+    # eval function) — pass an on_flush hook to AsyncSimulator.run, as
+    # benchmarks/async_bench.py does, and feed `time_to_target` with it.
+
+    @property
+    def versions(self) -> int:
+        return len(self.flushes)
+
+    @property
+    def arrivals_per_flush(self) -> list[int]:
+        return [f.arrivals for f in self.flushes]
+
+    @property
+    def final_t(self) -> float:
+        return self.flushes[-1].t if self.flushes else 0.0
+
+    def lag_histogram(self) -> dict[int, int]:
+        """Consensus-version lag (staleness tau) histogram over every
+        upload that entered a flush."""
+        out: dict[int, int] = {}
+        for f in self.flushes:
+            for tau in f.taus:
+                out[int(tau)] = out.get(int(tau), 0) + 1
+        return dict(sorted(out.items()))
+
+    def expected_bits(self) -> dict:
+        """The fl/comms re-invoice of this run: each flush is billed like a
+        sync round with s = its arrival count (m bits per upload + ONE
+        m-bit broadcast), plus m uplink bits per still-buffered residual
+        arrival (transmitted, never flushed before the stop)."""
+        bits = comms.accumulate_round_bits(
+            "pfed1bs", n=0, m=self.m, s_per_round=self.arrivals_per_flush
+        )
+        return {
+            "uplink_bits": bits["uplink_bits"] + self.residual_arrivals * self.m,
+            "downlink_bits": bits["downlink_bits"],
+        }
+
+    def check_billing(self) -> None:
+        """Raise ValueError unless the time-stamped meter re-derives
+        exactly from fl/comms over the recorded flush log."""
+        expect = self.expected_bits()
+        got = {
+            "uplink_bits": self.meter.uplink_bits,
+            "downlink_bits": self.meter.downlink_bits,
+        }
+        if got != expect:
+            raise ValueError(
+                f"async billing mismatch: meter {got} != comms re-invoice "
+                f"{expect}"
+            )
+
+    def to_dict(self) -> dict:
+        return {
+            "m": self.m,
+            "versions": self.versions,
+            "arrivals_per_flush": self.arrivals_per_flush,
+            "residual_arrivals": self.residual_arrivals,
+            "final_t": self.final_t,
+            "lag_histogram": {str(k): v for k, v in self.lag_histogram().items()},
+            "uplink_bits": self.meter.uplink_bits,
+            "downlink_bits": self.meter.downlink_bits,
+            "total_bits": self.meter.total_bits,
+            "flush_t": [f.t for f in self.flushes],
+            "task_loss_curve": [f.task_loss for f in self.flushes],
+        }
+
+
+def time_to_target(curve, target: float) -> float | None:
+    """First virtual time at which accuracy >= target on a [(t, acc), ...]
+    curve; None if never reached."""
+    for t, acc in curve:
+        if acc >= target:
+            return float(t)
+    return None
+
+
+def validate_async_artifact(obj: dict) -> None:
+    """Schema + accounting gate for BENCH_async(.fast).json — the async
+    analogue of exp/report.validate_matrix, run by
+    `benchmarks/report.py --validate`:
+
+      * the sync-parity cell must be present and bit-exact,
+      * both runs' billed bits must re-derive exactly from fl/comms over
+        the recorded arrivals-per-flush / clients-per-round,
+      * async must beat sync on time-to-target accuracy.
+    """
+    parity = obj.get("sync_parity")
+    if not isinstance(parity, dict) or parity.get("bit_exact") is not True:
+        raise ValueError("sync_parity cell missing or not bit_exact")
+    a = obj["async"]
+    bits = comms.accumulate_round_bits(
+        "pfed1bs", n=0, m=obj["m"], s_per_round=a["arrivals_per_flush"]
+    )
+    expect_up = bits["uplink_bits"] + a.get("residual_arrivals", 0) * obj["m"]
+    if a["uplink_bits"] != expect_up or a["downlink_bits"] != bits["downlink_bits"]:
+        raise ValueError(
+            f"async bits do not re-derive from fl/comms: recorded "
+            f"({a['uplink_bits']}, {a['downlink_bits']}) != expected "
+            f"({expect_up}, {bits['downlink_bits']})"
+        )
+    s = obj["sync"]
+    sbits = comms.accumulate_round_bits(
+        "pfed1bs", n=0, m=obj["m"], s_per_round=s["s_per_round"]
+    )
+    for k in ("uplink_bits", "downlink_bits"):
+        if s[k] != sbits[k]:
+            raise ValueError(
+                f"sync bits do not re-derive from fl/comms: {k} {s[k]} != "
+                f"{sbits[k]}"
+            )
+    # the fairness premise of the headline claim: the two runs carry the
+    # SAME number of client uploads, so the speedup is compared at equal
+    # billed uplink bits (async additionally pays one m-bit broadcast per
+    # extra flush — that asymmetry is visible in downlink_bits)
+    if a["uplink_bits"] != s["uplink_bits"]:
+        raise ValueError(
+            f"async/sync uplink bits differ ({a['uplink_bits']} vs "
+            f"{s['uplink_bits']}): the time-to-target comparison is no "
+            f"longer at equal billed bits"
+        )
+    tts, tta = s["time_to_target_s"], a["time_to_target_s"]
+    if tta is None:
+        raise ValueError("async run never reached the target accuracy")
+    if tts is not None and not tta < tts:
+        raise ValueError(
+            f"async time-to-target {tta} does not beat sync {tts}"
+        )
+
+
+def summarize_lags(taus: list[int]) -> dict:
+    taus = np.asarray(taus if taus else [0], np.float64)
+    return {
+        "mean": float(taus.mean()),
+        "p50": float(np.percentile(taus, 50)),
+        "p99": float(np.percentile(taus, 99)),
+        "max": float(taus.max()),
+    }

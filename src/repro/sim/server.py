@@ -1,0 +1,284 @@
+"""Buffered asynchronous pFed1BS server + the virtual-time event loop.
+
+The FedBuff-style protocol, specialized to one-bit sketch votes:
+
+  * the server holds a VERSIONED consensus v^V (FLState.round is the
+    version counter) and a size-B buffer of landed uploads;
+  * a dispatched client downloads the current consensus, runs its R local
+    steps through the SAME cohort computation as the synchronous fused
+    round (core/pfed1bs.py::cohort_update), and its one-bit sketch vote
+    lands after a latency-model delay (sim/clock.py);
+  * every B-th arrival FLUSHES: the buffered votes are re-voted with
+    staleness-discounted weights p_k / (1 + tau_k)^p (tau_k = consensus
+    versions elapsed since that client's download;
+    core/consensus.py::staleness_weights), EF residuals are updated
+    through the engine's own `_ef_quantize`, client params scatter
+    through core/rounds.scatter_rows, and the new consensus version is
+    broadcast (billed: one m-bit downlink per flush, one m-bit uplink per
+    arrival — sim/metrics.py);
+  * dispatch is version-gated (sim/client.py): at every flush the
+    participation draw for the NEW version runs over the currently idle
+    clients; stragglers still in flight simply land later, stale.
+
+The cheapness of the re-vote is the point: pFed1BS's server state is m
+sign-sums, so flushing every B arrivals costs one (B, m) weighted
+majority vote — no model-delta averaging, no optimizer state. The vote
+runs either in float sign space (`vote="exact"`, Lemma 1 in natural
+client order — the parity path) or on the packed wire words over the
+ragged buffer (`vote="packed"`, kernels/ops.py::vote_packed_ragged,
+ties -> +1).
+
+KEYSTONE INVARIANT (pinned by tests/test_async_sim.py): with
+ConstantLatency(0), buffer_size B = S and staleness_exponent p = 0, one
+full drain of the event queue is BIT-EXACT with the synchronous fused
+round — same consensus, same client params, same EF residuals, EF on and
+off, flat and leaf layouts. Every departure from the synchronous
+semantics must therefore be switched by latency, B, or p — never by the
+event-loop plumbing itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus, rounds
+from repro.kernels import ops as kops
+from repro.sim import metrics as simmetrics
+from repro.sim.client import Roster
+from repro.sim.clock import ConstantLatency, EventQueue, LatencyModel
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Async-tier knobs. The (0-latency, B=S, p=0) corner is sync parity."""
+    buffer_size: int                     # B: arrivals per flush
+    staleness_exponent: float = 0.0      # p in 1/(1+tau)^p
+    max_versions: int = 10               # stop after this many flushes
+    seed: int = 0                        # latency-model stream seed
+    latency: LatencyModel = ConstantLatency(0.0)
+    vote: str = "exact"                  # "exact" | "packed" (ragged wire vote)
+    flush_partial_on_drain: bool = True  # ragged final flush if the queue
+    #                                      empties with a part-full buffer
+
+
+@dataclasses.dataclass
+class _Buffered:
+    """One landed upload waiting in the server buffer."""
+    client: int
+    download_version: int
+    staged_version: int   # which staged cohort holds its rows
+    row: int              # row index within that cohort
+    t: float
+
+
+class AsyncSimulator:
+    """Event loop binding an engine to the buffered async server.
+
+    engine: a PFed1BS instance (any sketch layout; fused semantics).
+    weights: (K,) aggregation weights p_k.
+    participants_fn(version) -> (idx (S,), active (S,)): the participation
+      draw for the cohort dispatched at `version` (core/rounds.py
+      semantics — active=0 rows are computed but never dispatched).
+    batch_fn(version) -> (K, R, B, ...) pytree: the round's minibatches,
+      same contract as the synchronous harness. Sharing these two
+      callables with a synchronous run is what makes sync-vs-async
+      comparisons (and the parity test) exact.
+    """
+
+    def __init__(self, engine, cfg: AsyncConfig, weights,
+                 participants_fn: Callable, batch_fn: Callable):
+        assert cfg.vote in ("exact", "packed"), cfg.vote
+        assert cfg.buffer_size >= 1
+        self.eng = engine
+        self.cfg = cfg
+        self.weights = jnp.asarray(weights, jnp.float32)
+        self.participants_fn = participants_fn
+        self.batch_fn = batch_fn
+        self._cohort = jax.jit(self._cohort_client_side)
+        self._flush_cache: dict = {}   # (b, has_ef) -> jitted flush body
+
+    def _cohort_client_side(self, clients, batches, idx, v, ef):
+        """The whole client side of a dispatch, ONE jitted program:
+        cohort_update plus sign-quantization (EF-corrected when enabled).
+
+        EF is applied at DISPATCH, not at flush: a client has at most one
+        job in flight (version-gated dispatch), so its residual cannot be
+        written between dispatch and the flush that delivers its vote —
+        quantizing early is semantically identical to quantizing at upload
+        time. It is also what makes EF parity BIT-exact: the EF chain
+        (and the sketch feeding it) must live in the same program as the
+        local update, the way the synchronous round compiles it — split
+        across programs, XLA's compilation of the alpha mean drifts a ulp
+        (see tests/test_async_sim.py::test_parity_*). The flush then only
+        performs exact operations: index scatters and the sign vote."""
+        upd, task_loss, zs = self.eng.cohort_update(clients, batches, idx, v)
+        if ef is None:
+            signs = jnp.sign(zs) + (zs == 0)                   # {-1,+1}
+            return upd, task_loss, zs, signs, None
+        _, signs, new_rows = self.eng._ef_quantize(zs, ef[idx])
+        return upd, task_loss, zs, signs, new_rows
+
+    # -- jitted flush bodies (cached per ragged buffer size) -----------------
+
+    def _flush_fn(self, b: int, has_ef: bool):
+        # per-instance cache (an lru_cache on the method would key on self
+        # and retain dead simulators at class level)
+        key = (b, has_ef)
+        if key in self._flush_cache:
+            return self._flush_cache[key]
+        eng, cfg = self.eng, self.cfg
+
+        def flush(clients, ef, signs, ids, tau, w_base, params_rows, ef_rows):
+            stale = consensus.staleness_weights(tau, cfg.staleness_exponent)
+            w = w_base * stale
+            if has_ef:
+                ef = ef.at[ids].set(ef_rows)
+            if cfg.vote == "packed":
+                # ragged wire vote at the STATIC buffer capacity: a drain
+                # flush with b < B pads its packed words up to B rows and
+                # masks them out, so the vote kernel always sees one shape
+                words = eng._pack_uplink(signs)          # (b, nw) wire words
+                cap = max(cfg.buffer_size, b)
+                valid = jnp.pad(jnp.ones((b,), jnp.float32), (0, cap - b))
+                vw = kops.vote_packed_ragged(
+                    jnp.pad(words, ((0, cap - b), (0, 0))),
+                    jnp.pad(w, (0, cap - b)),
+                    valid,
+                )
+                v_new = kops.unpack_signs(vw)[: eng.m]
+            else:
+                v_new = eng.vote_scattered(signs, ids, w)
+            clients = rounds.scatter_rows(
+                clients, ids, params_rows, jnp.ones((b,), jnp.float32)
+            )
+            return clients, v_new, ef, w
+
+        self._flush_cache[key] = jax.jit(flush)
+        return self._flush_cache[key]
+
+    # -- the event loop ------------------------------------------------------
+
+    def run(self, state, on_flush: Callable | None = None):
+        """Drain the event queue for cfg.max_versions flushes starting from
+        a synchronous FLState. Returns (final FLState, SimReport).
+        on_flush(t, version, state) fires after every consensus bump (eval
+        hooks; its cost is outside virtual time)."""
+        eng, cfg = self.eng, self.cfg
+        k = eng.cfg.num_clients
+        queue = EventQueue()
+        roster = Roster(k)
+        meter = simmetrics.AsyncMeter(m=eng.m)
+        report = simmetrics.SimReport(m=eng.m, meter=meter)
+        staged: dict[int, dict] = {}
+        buffer: list[_Buffered] = []
+        version = 0
+        t = 0.0
+
+        def dispatch_cohort(t_now: float, ver: int, st):
+            """Draw participants for `ver` over idle clients, run the
+            client side against the current consensus, stage the rows,
+            and push one arrival event per dispatched client."""
+            idx, active = self.participants_fn(ver)
+            idx_np = np.asarray(idx)
+            act_np = np.asarray(active)
+            dispatchable = [
+                (row, int(c))
+                for row, (c, a) in enumerate(zip(idx_np, act_np))
+                if a > 0 and roster.idle(int(c))
+            ]   # others: dropped out / still chewing their last job
+            if not dispatchable:
+                return   # nobody to run — skip the cohort program entirely
+            batches = self.batch_fn(ver)
+            upd, task_loss, _zs, signs, ef_rows = self._cohort(
+                st.clients, batches, idx, st.v, st.ef
+            )
+            # the pre-EF sketches are not staged: no flush reads them, and
+            # a straggler cohort can stay staged for many versions
+            entry = {"upd": upd, "task_loss": task_loss,
+                     "signs": signs, "ef_rows": ef_rows,
+                     "refs": len(dispatchable)}
+            for row, c in dispatchable:
+                roster.dispatch(c, ver)
+                delay = cfg.latency.duration(cfg.seed, c, ver)
+                queue.push(t_now + delay, "arrival", c, payload=(ver, row))
+            staged[ver] = entry
+
+        def flush(t_now: float, st):
+            nonlocal version, buffer
+            b = len(buffer)
+            has_ef = st.ef is not None
+            ids = jnp.asarray([e.client for e in buffer], jnp.int32)
+            tau = jnp.asarray(
+                [version - e.download_version for e in buffer], jnp.float32
+            )
+            row_of = lambda name, e: staged[e.staged_version][name][e.row]
+            signs = jnp.stack([row_of("signs", e) for e in buffer])
+            ef_rows = (
+                jnp.stack([row_of("ef_rows", e) for e in buffer])
+                if has_ef else None
+            )
+            params_rows = jax.tree.map(
+                lambda *rows: jnp.stack(rows),
+                *[
+                    jax.tree.map(
+                        lambda a, e=e: a[e.row], staged[e.staged_version]["upd"]
+                    )
+                    for e in buffer
+                ],
+            )
+            tls = jnp.stack([row_of("task_loss", e) for e in buffer])
+            w_base = self.weights[ids]
+            clients, v_new, ef, w = self._flush_fn(b, has_ef)(
+                st.clients, st.ef, signs, ids, tau, w_base, params_rows,
+                ef_rows,
+            )
+            task = float(jnp.sum(tls * w) / jnp.maximum(jnp.sum(w), 1e-9))
+            for e in buffer:   # release staged cohorts once fully delivered
+                staged[e.staged_version]["refs"] -= 1
+                if staged[e.staged_version]["refs"] == 0:
+                    del staged[e.staged_version]
+            report.flushes.append(simmetrics.FlushRecord(
+                version=version + 1, t=t_now, arrivals=b,
+                taus=[int(version - e.download_version) for e in buffer],
+                task_loss=task,
+            ))
+            buffer = []
+            version += 1
+            meter.bill_downlink(t_now)
+            st = st._replace(
+                clients=clients, v=v_new, round=st.round + 1, ef=ef
+            )
+            if on_flush is not None:
+                on_flush(t_now, version, st)
+            return st
+
+        dispatch_cohort(0.0, 0, state)
+        while version < cfg.max_versions:
+            if not queue:
+                if buffer and cfg.flush_partial_on_drain:
+                    state = flush(t, state)      # ragged drain flush
+                    if version < cfg.max_versions:
+                        dispatch_cohort(t, version, state)
+                    continue
+                break
+            ev = queue.pop()
+            t = ev.t
+            roster.arrive(ev.client, t)
+            meter.bill_uplink(t)
+            sv, row = ev.payload
+            buffer.append(_Buffered(
+                client=ev.client,
+                download_version=sv,
+                staged_version=sv, row=row, t=t,
+            ))
+            if len(buffer) >= cfg.buffer_size:
+                state = flush(t, state)
+                if version < cfg.max_versions:
+                    dispatch_cohort(t, version, state)
+        report.residual_arrivals = len(buffer)
+        report.check_billing()
+        return state, report

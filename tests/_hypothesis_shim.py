@@ -5,8 +5,16 @@ the suite must still *collect* cleanly (the container image does not ship
 hypothesis). Importing ``given``/``settings``/``hst`` from here instead of
 from hypothesis directly turns each property test into an explicit skip when
 the dependency is absent, while every plain test in the module keeps running.
+
+The CI matrix has one leg that installs hypothesis (ci.yml `extras`), so
+the property tests run somewhere on every push. That leg also sets
+``REQUIRE_HYPOTHESIS=1``: if the install silently drops out of the image,
+this module hard-fails at import instead of quietly skipping everything —
+the leg reports 0 hypothesis skips by construction.
 """
 from __future__ import annotations
+
+import os
 
 import pytest
 
@@ -16,6 +24,12 @@ try:
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        raise RuntimeError(
+            "REQUIRE_HYPOTHESIS is set but hypothesis is not installed — "
+            "this environment promised to RUN the property tests, not skip "
+            "them (see .github/workflows/ci.yml, extras leg)"
+        )
 
     def given(*_args, **_kwargs):
         def deco(fn):

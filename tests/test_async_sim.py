@@ -1,0 +1,407 @@
+"""Async federation tier (repro/sim, DESIGN.md §9).
+
+Contracts pinned here:
+  * KEYSTONE PARITY: with zero latency, buffer size B = S and staleness
+    exponent p = 0, one full drain of the event queue is BIT-exact with
+    the synchronous fused round — consensus, client params AND EF
+    residuals, with EF on and off, flat and leaf layouts (the same parity
+    discipline the sharded executors pinned in tests/test_fedexec.py).
+  * The virtual clock is deterministic: equal-time events pop in push
+    order, latency draws are pure functions of (seed, client, version).
+  * Buffered operation under real latency: every flush holds exactly B
+    arrivals, stragglers land with positive consensus-version lag, and
+    the time-stamped billing re-derives exactly from fl/comms.
+  * The ragged final drain and the packed ragged wire vote
+    (kernels/ops.vote_packed_ragged).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus, rounds
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.data import synthetic as ds
+from repro.kernels import ops as kops
+from repro.models import smallnets as sn
+from repro.sim import clock as simclock
+from repro.sim import metrics as simmetrics
+from repro.sim.client import Roster
+from repro.sim.server import AsyncConfig, AsyncSimulator
+
+
+# ---------------------------------------------------------------------------
+# clock
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_push_order():
+    q = simclock.EventQueue()
+    q.push(2.0, "arrival", 0)
+    q.push(1.0, "arrival", 1)
+    q.push(1.0, "arrival", 2)   # same t as client 1: must pop AFTER it
+    q.push(0.5, "arrival", 3)
+    got = [(q.pop().client) for _ in range(len(q))]
+    assert got == [3, 1, 2, 0]
+
+
+def test_event_queue_zero_latency_preserves_push_order():
+    q = simclock.EventQueue()
+    for c in (5, 0, 3, 1):
+        q.push(0.0, "arrival", c)
+    assert [q.pop().client for _ in range(4)] == [5, 0, 3, 1]
+
+
+@pytest.mark.parametrize("model", [
+    simclock.ConstantLatency(0.25),
+    simclock.ComputeNetworkLatency(),
+    simclock.StragglerTailLatency(),
+], ids=lambda m: type(m).__name__)
+def test_latency_models_deterministic_and_nonnegative(model):
+    for client in (0, 3):
+        for version in (0, 7):
+            d1 = model.duration(seed=1, client=client, version=version)
+            d2 = model.duration(seed=1, client=client, version=version)
+            assert d1 == d2
+            assert d1 >= 0.0 and np.isfinite(d1)
+    # a different seed moves the stochastic models
+    if not isinstance(model, simclock.ConstantLatency):
+        assert (
+            model.duration(seed=1, client=0, version=0)
+            != model.duration(seed=2, client=0, version=0)
+        )
+
+
+def test_straggler_tail_heavier_than_base():
+    base = simclock.ComputeNetworkLatency()
+    tail = simclock.StragglerTailLatency(base=base, tail_prob=1.0,
+                                         tail_mult=10.0)
+    ds_ = [tail.duration(0, c, 0) - base.duration(0, c, 0) for c in range(8)]
+    assert min(ds_) > 0           # tail_prob=1: every job pays the stall
+
+
+def test_client_speed_is_persistent():
+    m = simclock.ComputeNetworkLatency(client_speed_sigma=1.0)
+    assert m.client_speed(0, 3) == m.client_speed(0, 3)
+    speeds = {m.client_speed(0, c) for c in range(8)}
+    assert len(speeds) == 8       # heterogeneous across clients
+
+
+# ---------------------------------------------------------------------------
+# staleness weights
+# ---------------------------------------------------------------------------
+
+def test_staleness_weights_p0_is_exact_ones():
+    w = consensus.staleness_weights(jnp.asarray([0.0, 3.0, 17.0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(w), np.ones(3, np.float32))
+
+
+def test_staleness_weights_monotone():
+    tau = jnp.arange(6, dtype=jnp.float32)
+    w = np.asarray(consensus.staleness_weights(tau, 1.0))
+    assert np.all(np.diff(w) < 0)
+    np.testing.assert_allclose(w, 1.0 / (1.0 + np.arange(6)), rtol=1e-6)
+    # stronger exponent discounts harder
+    w2 = np.asarray(consensus.staleness_weights(tau, 2.0))
+    assert np.all(w2[1:] < w[1:])
+
+
+def test_staleness_weighted_vote_downweights_stale_rows():
+    zs = jnp.asarray([[1.0, 1.0], [-1.0, -1.0], [-1.0, -1.0]])
+    p = jnp.ones((3,))
+    # fresh +1 row vs two very stale -1 rows: discount flips the outcome
+    tau = jnp.asarray([0.0, 10.0, 10.0])
+    v = consensus.staleness_weighted_vote(zs, p, tau, 2.0)
+    np.testing.assert_array_equal(np.asarray(v), [1.0, 1.0])
+    v0 = consensus.staleness_weighted_vote(zs, p, tau, 0.0)
+    np.testing.assert_array_equal(np.asarray(v0), [-1.0, -1.0])
+
+
+# ---------------------------------------------------------------------------
+# roster
+# ---------------------------------------------------------------------------
+
+def test_roster_version_gating():
+    r = Roster(3)
+    assert r.idle(0)
+    r.dispatch(0, version=4)
+    assert not r.idle(0)
+    with pytest.raises(AssertionError):
+        r.dispatch(0, version=5)          # one job in flight max
+    assert r.arrive(0, t=1.5) == 4        # returns the download version
+    assert r.idle(0) and r.states[0].jobs_done == 1
+    with pytest.raises(AssertionError):
+        r.arrive(1, t=0.0)                # never dispatched
+
+
+# ---------------------------------------------------------------------------
+# the keystone parity contract
+# ---------------------------------------------------------------------------
+
+K, S, R = 6, 6, 2
+
+
+@pytest.fixture(scope="module")
+def task():
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=K, train_per_client=48,
+        test_per_client=24,
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda k: sn.init_mlp(k, input_dim=784, hidden=16)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    return data, loss_fn, init_fn, template
+
+
+def _fns(data):
+    participants_fn = lambda v: rounds.draw_participants(
+        jax.random.fold_in(jax.random.key(7), v), K, S, None
+    )
+    batch_fn = lambda v: ds.sample_round_batches(
+        jax.random.fold_in(jax.random.key(9), v), data, R, 16
+    )
+    return participants_fn, batch_fn
+
+
+def _parity_check(task, error_feedback, layout, rounds_=3):
+    data, loss_fn, init_fn, template = task
+    cfg = PFed1BSConfig(
+        num_clients=K, participate=S, local_steps=R, m_ratio=0.05,
+        chunk=2048, error_feedback=error_feedback, layout=layout,
+    )
+    eng = PFed1BS(cfg, loss_fn, template)
+    participants_fn, batch_fn = _fns(data)
+
+    st_sync = eng.init(init_fn, jax.random.key(2))
+    for r in range(rounds_):
+        st_sync, _ = eng.round(
+            st_sync, batch_fn(r), data.weights, jax.random.key(0),
+            participants_fn(r),
+        )
+
+    sim = AsyncSimulator(
+        eng,
+        AsyncConfig(buffer_size=S, staleness_exponent=0.0,
+                    max_versions=rounds_,
+                    latency=simclock.ConstantLatency(0.0)),
+        data.weights, participants_fn, batch_fn,
+    )
+    st_async, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+
+    assert rep.versions == rounds_
+    assert rep.arrivals_per_flush == [S] * rounds_
+    assert rep.lag_histogram() == {0: S * rounds_}   # nothing ever stale
+    np.testing.assert_array_equal(np.asarray(st_sync.v), np.asarray(st_async.v))
+    for a, b in zip(jax.tree.leaves(st_sync.clients),
+                    jax.tree.leaves(st_async.clients)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    if error_feedback:
+        np.testing.assert_array_equal(
+            np.asarray(st_sync.ef), np.asarray(st_async.ef)
+        )
+    return rep
+
+
+@pytest.mark.parametrize("error_feedback", [False, True])
+def test_parity_zero_latency_drain_bit_exact_flat(task, error_feedback):
+    rep = _parity_check(task, error_feedback, "flat")
+    # the drain was also billed exactly like the sync rounds
+    assert rep.meter.uplink_bits == 3 * S * rep.m
+    assert rep.meter.downlink_bits == 3 * rep.m
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("error_feedback", [False, True])
+def test_parity_zero_latency_drain_bit_exact_leaf(task, error_feedback):
+    _parity_check(task, error_feedback, "leaf")
+
+
+# ---------------------------------------------------------------------------
+# buffered operation under latency
+# ---------------------------------------------------------------------------
+
+def _engine(task, **over):
+    data, loss_fn, init_fn, template = task
+    cfg = PFed1BSConfig(**{
+        "num_clients": K, "participate": S, "local_steps": R,
+        "m_ratio": 0.05, "chunk": 2048, **over,
+    })
+    return PFed1BS(cfg, loss_fn, template), data, init_fn
+
+
+@pytest.mark.parametrize("vote", ["exact", "packed"])
+def test_buffered_flushes_and_staleness(task, vote):
+    eng, data, init_fn = _engine(task, error_feedback=True)
+    participants_fn, batch_fn = _fns(data)
+    cfg = AsyncConfig(
+        buffer_size=3, staleness_exponent=0.5, max_versions=6,
+        latency=simclock.StragglerTailLatency(tail_prob=0.4), vote=vote,
+    )
+    sim = AsyncSimulator(eng, cfg, data.weights, participants_fn, batch_fn)
+    st, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+    assert rep.versions == 6
+    assert rep.arrivals_per_flush == [3] * 6     # every flush exactly B
+    lags = rep.lag_histogram()
+    assert sum(lags.values()) == 18
+    assert any(tau > 0 for tau in lags)          # stragglers landed stale
+    # consensus values stay in the vote codomain
+    vals = set(np.unique(np.asarray(st.v)))
+    assert vals <= {-1.0, 0.0, 1.0}
+    if vote == "packed":
+        assert vals <= {-1.0, 1.0}               # wire vote never emits 0
+    # billing re-derives from fl/comms (check_billing ran inside run;
+    # assert the totals once more from the artifact view)
+    d = rep.to_dict()
+    assert d["uplink_bits"] == 18 * eng.m
+    assert d["downlink_bits"] == 6 * eng.m
+
+
+def test_run_is_deterministic(task):
+    eng, data, init_fn = _engine(task)
+    participants_fn, batch_fn = _fns(data)
+    cfg = AsyncConfig(buffer_size=2, staleness_exponent=1.0, max_versions=5,
+                      latency=simclock.ComputeNetworkLatency())
+    outs = []
+    for _ in range(2):
+        sim = AsyncSimulator(eng, cfg, data.weights, participants_fn, batch_fn)
+        st, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+        outs.append((st, rep))
+    (s1, r1), (s2, r2) = outs
+    assert [f.t for f in r1.flushes] == [f.t for f in r2.flushes]
+    assert r1.arrivals_per_flush == r2.arrivals_per_flush
+    np.testing.assert_array_equal(np.asarray(s1.v), np.asarray(s2.v))
+
+
+def test_ragged_final_drain(task):
+    """B larger than the dispatched cohort: the queue empties part-full and
+    the drain flush votes the ragged remainder."""
+    eng, data, init_fn = _engine(task)
+    participants_fn, batch_fn = _fns(data)
+    cfg = AsyncConfig(buffer_size=S + 2, max_versions=2,
+                      latency=simclock.ConstantLatency(1.0))
+    sim = AsyncSimulator(eng, cfg, data.weights, participants_fn, batch_fn)
+    st, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+    assert rep.versions == 2
+    assert rep.arrivals_per_flush == [S, S]      # ragged: S < B per flush
+    assert rep.residual_arrivals == 0
+
+
+def test_in_flight_clients_are_not_redispatched(task):
+    """With a spread of latencies and B < S, slow clients are still in
+    flight when new cohorts are drawn; the roster must never double-dispatch
+    and their late arrivals must carry tau > 0."""
+    eng, data, init_fn = _engine(task)
+    participants_fn, batch_fn = _fns(data)
+    cfg = AsyncConfig(buffer_size=2, staleness_exponent=1.0, max_versions=8,
+                      latency=simclock.StragglerTailLatency(tail_prob=0.5))
+    sim = AsyncSimulator(eng, cfg, data.weights, participants_fn, batch_fn)
+    st, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+    assert rep.versions == 8
+    assert any(tau > 0 for tau in rep.lag_histogram())
+    # flush times strictly increase with positive latency
+    ts = [f.t for f in rep.flushes]
+    assert all(b >= a for a, b in zip(ts, ts[1:])) and ts[-1] > ts[0]
+
+
+# ---------------------------------------------------------------------------
+# ragged packed vote
+# ---------------------------------------------------------------------------
+
+def test_vote_packed_ragged_ignores_invalid_rows():
+    rng = np.random.default_rng(0)
+    words = jnp.asarray(
+        rng.integers(0, 2**32, size=(5, 7), dtype=np.uint32)
+    )
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(5,)), jnp.float32)
+    ref = kops.vote_packed(words[:3], w[:3])
+    # pad to capacity 5 with GARBAGE rows masked out
+    valid = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    got = kops.vote_packed_ragged(words, w, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# metrics layer
+# ---------------------------------------------------------------------------
+
+def test_meter_time_stamped_billing():
+    m = simmetrics.AsyncMeter(m=100)
+    m.bill_uplink(0.2)
+    m.bill_uplink(1.4)
+    m.bill_downlink(1.4)
+    assert m.uplink_bits == 200 and m.downlink_bits == 100
+    assert m.bits_by_second(1.0) == {0: 100, 1: 200}
+    assert m.cumulative_bits_at(1.0) == 100
+    assert m.cumulative_bits_at(2.0) == 300
+
+
+def test_time_to_target():
+    curve = [(0.0, 0.1), (1.0, 0.5), (2.0, 0.9)]
+    assert simmetrics.time_to_target(curve, 0.5) == 1.0
+    assert simmetrics.time_to_target(curve, 0.95) is None
+
+
+def test_report_billing_check_catches_mismatch():
+    rep = simmetrics.SimReport(m=10, meter=simmetrics.AsyncMeter(m=10))
+    rep.flushes.append(simmetrics.FlushRecord(
+        version=1, t=0.0, arrivals=2, taus=[0, 0], task_loss=0.0
+    ))
+    with pytest.raises(ValueError, match="billing mismatch"):
+        rep.check_billing()      # meter never billed anything
+    rep.meter.bill_uplink(0.0)
+    rep.meter.bill_uplink(0.0)
+    rep.meter.bill_downlink(0.0)
+    rep.check_billing()          # now consistent
+
+
+def test_validate_async_artifact_gates():
+    good = {
+        "m": 10,
+        "sync_parity": {"bit_exact": True},
+        "async": {"arrivals_per_flush": [2, 2], "residual_arrivals": 0,
+                  "uplink_bits": 40, "downlink_bits": 20,
+                  "time_to_target_s": 1.0},
+        "sync": {"s_per_round": [2, 2], "uplink_bits": 40,
+                 "downlink_bits": 20, "time_to_target_s": 3.0},
+    }
+    simmetrics.validate_async_artifact(good)
+    bad = {**good, "sync_parity": {"bit_exact": False}}
+    with pytest.raises(ValueError, match="bit_exact"):
+        simmetrics.validate_async_artifact(bad)
+    bad = {**good, "async": {**good["async"], "uplink_bits": 41}}
+    with pytest.raises(ValueError, match="re-derive"):
+        simmetrics.validate_async_artifact(bad)
+    bad = {**good, "async": {**good["async"], "time_to_target_s": 5.0}}
+    with pytest.raises(ValueError, match="beat"):
+        simmetrics.validate_async_artifact(bad)
+    # equal-billed-bits premise: sync billing must match async's uploads
+    bad = {**good,
+           "sync": {**good["sync"], "s_per_round": [3, 3],
+                    "uplink_bits": 60}}
+    with pytest.raises(ValueError, match="equal billed bits"):
+        simmetrics.validate_async_artifact(bad)
+
+
+# ---------------------------------------------------------------------------
+# scenario composition (the fourth axis)
+# ---------------------------------------------------------------------------
+
+def test_async_scenarios_compose_with_participation(task):
+    from repro.exp import scenarios
+
+    mat = scenarios.async_matrix()
+    assert set(mat) >= {"uniform-const", "hetero-lognormal", "straggler-tail"}
+    sc = mat["straggler-tail"]
+    assert isinstance(sc.latency, simclock.StragglerTailLatency)
+    hash(sc)                      # still a frozen, hashable Scenario
+
+    # drive the simulator with the scenario's OWN participation draw
+    eng, data, init_fn = _engine(task, participate=sc.capacity(K))
+    participants_fn = lambda v: sc.draw_participants(jax.random.key(3), v, K)
+    _, batch_fn = _fns(data)
+    cfg = AsyncConfig(buffer_size=2, max_versions=4, latency=sc.latency)
+    sim = AsyncSimulator(eng, cfg, data.weights, participants_fn, batch_fn)
+    st, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+    assert rep.versions == 4
+    assert all(a == 2 for a in rep.arrivals_per_flush)

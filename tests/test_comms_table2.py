@@ -47,6 +47,19 @@ def test_concrete_readme_numbers():
     assert mb["pfed1bs"] == 0.2625
 
 
+def test_total_mb_is_decimal_megabytes():
+    """total_mb is SI decimal MB (bits / 8e6), NOT binary MiB — the README
+    tables and the docstring promise exactly this. FedAvg's 160.0 is only
+    a round number in decimal; the MiB value differs by ~4.9%."""
+    got = comms.round_bits("fedavg", n=N, m=M, s=S)
+    assert got["total_mb"] == got["total_bits"] / 8e6 == 160.0
+    mib = got["total_bits"] / (8 * 2**20)
+    assert abs(got["total_mb"] - mib) > 7  # the two conventions are far apart
+    # and the accumulated meter uses the same convention
+    acc = comms.accumulate_round_bits("pfed1bs", n=N, m=M, s_per_round=[S, S])
+    assert acc["total_mb"] == acc["total_bits"] / 8e6
+
+
 def test_num_tensors_only_affects_fedbat():
     """num_tensors is FedBAT's per-tensor scale count (one fp32 alpha per
     tensor); every other algorithm ignores it."""

@@ -1,0 +1,165 @@
+"""core/rounds.py round-surface helpers: scatter with unsorted/duplicate-free
+index vectors, mixed-dtype stacked pytrees, and the billing invariant that
+an inactive (straggler) client is never invoiced.
+
+Property tests run under hypothesis when installed (the CI extras leg);
+plain examples always run (tests/_hypothesis_shim.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rounds
+from repro.fl import comms
+from tests._hypothesis_shim import given, settings, hst
+
+
+# ---------------------------------------------------------------------------
+# scatter_rows
+# ---------------------------------------------------------------------------
+
+def _tree(k=6, d=3):
+    """Stacked client tree with MIXED dtypes: float weights + int counters."""
+    return {
+        "w": jnp.arange(k * d, dtype=jnp.float32).reshape(k, d),
+        "steps": jnp.arange(k, dtype=jnp.int32) * 10,
+    }
+
+
+def test_scatter_rows_unsorted_idx():
+    """Duplicate-free but UNSORTED idx must land each row on its own
+    client, independent of draw order."""
+    tree = _tree()
+    idx = jnp.asarray([4, 0, 2], jnp.int32)          # unsorted
+    rows = {
+        "w": jnp.full((3, 3), -1.0, jnp.float32),
+        "steps": jnp.asarray([100, 200, 300], jnp.int32),
+    }
+    active = jnp.ones((3,), jnp.float32)
+    out = rounds.scatter_rows(tree, idx, rows, active)
+    np.testing.assert_array_equal(np.asarray(out["steps"]),
+                                  [200, 10, 300, 30, 100, 50])
+    for row, c in enumerate([4, 0, 2]):
+        np.testing.assert_array_equal(np.asarray(out["w"][c]),
+                                      np.asarray(rows["w"][row]))
+    # untouched clients keep their rows bit-for-bit
+    for c in (1, 3, 5):
+        np.testing.assert_array_equal(np.asarray(out["w"][c]),
+                                      np.asarray(tree["w"][c]))
+
+
+def test_scatter_rows_mixed_dtype_straggler_mask():
+    """active=0 rows keep the client's old row on EVERY leaf, including
+    integer leaves (the new row must be cast, not the mask arithmetic)."""
+    tree = _tree()
+    idx = jnp.asarray([5, 1], jnp.int32)
+    rows = {
+        "w": jnp.full((2, 3), 7.5, jnp.float32),
+        # float64-ish input rows: scatter casts to the leaf dtype
+        "steps": jnp.asarray([111.0, 222.0], jnp.float32),
+    }
+    active = jnp.asarray([0.0, 1.0], jnp.float32)    # client 5 dropped out
+    out = rounds.scatter_rows(tree, idx, rows, active)
+    assert out["steps"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out["steps"]),
+                                  [0, 222, 20, 30, 40, 50])
+    np.testing.assert_array_equal(np.asarray(out["w"][5]),
+                                  np.asarray(tree["w"][5]))
+    np.testing.assert_array_equal(np.asarray(out["w"][1]), [7.5, 7.5, 7.5])
+
+
+@given(hst.integers(min_value=1, max_value=8), hst.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_scatter_rows_permutation_property(s, seed):
+    """For ANY duplicate-free permutation prefix idx and ANY active mask:
+    active rows land, inactive and unsampled rows are bit-identical to the
+    input tree."""
+    k = 8
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.permutation(k)[:s], jnp.int32)
+    active = jnp.asarray(rng.integers(0, 2, size=s), jnp.float32)
+    tree = _tree(k=k)
+    rows = {
+        "w": jnp.asarray(rng.normal(size=(s, 3)), jnp.float32),
+        "steps": jnp.asarray(rng.integers(0, 999, size=s), jnp.int32),
+    }
+    out = rounds.scatter_rows(tree, idx, rows, active)
+    landed = {int(c) for c, a in zip(np.asarray(idx), np.asarray(active)) if a > 0}
+    for c in range(k):
+        for leaf, new in (("w", rows["w"]), ("steps", rows["steps"])):
+            if c in landed:
+                row = int(np.flatnonzero(np.asarray(idx) == c)[0])
+                np.testing.assert_array_equal(np.asarray(out[leaf][c]),
+                                              np.asarray(new[row]))
+            else:
+                np.testing.assert_array_equal(np.asarray(out[leaf][c]),
+                                              np.asarray(tree[leaf][c]))
+
+
+# ---------------------------------------------------------------------------
+# draw_participants + billing: stragglers are never invoiced
+# ---------------------------------------------------------------------------
+
+def test_draw_participants_external_pair_passthrough():
+    idx = jnp.asarray([3, 1, 4], jnp.int32)
+    active = jnp.asarray([1, 0, 1], jnp.int32)       # int mask in, float out
+    got_idx, got_active = rounds.draw_participants(
+        jax.random.key(0), 6, 3, (idx, active)
+    )
+    np.testing.assert_array_equal(np.asarray(got_idx), np.asarray(idx))
+    assert got_active.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got_active), [1.0, 0.0, 1.0])
+
+
+def test_draw_participants_default_draw_all_active():
+    idx, active = rounds.draw_participants(jax.random.key(3), 10, 4, None)
+    assert idx.shape == (4,) == active.shape
+    assert len(np.unique(np.asarray(idx))) == 4
+    np.testing.assert_array_equal(np.asarray(active), np.ones(4))
+
+
+@given(
+    hst.integers(min_value=1, max_value=12),
+    hst.integers(min_value=0, max_value=2**31 - 1),
+    hst.integers(min_value=2, max_value=6),
+)
+@settings(max_examples=25, deadline=None)
+def test_inactive_clients_never_billed_property(s, seed, rounds_n):
+    """For ANY externally drawn (idx, active) sequence, the run's invoice
+    through accumulate_round_bits equals the sum over rounds of
+    (active clients) * m uplink — a straggler whose active=0 contributes
+    exactly zero bits, no matter which client id it carries."""
+    k, m = 16, 512
+    rng = np.random.default_rng(seed)
+    s_real = []
+    for _ in range(rounds_n):
+        idx = jnp.asarray(rng.permutation(k)[:s], jnp.int32)
+        active = jnp.asarray(rng.integers(0, 2, size=s), jnp.float32)
+        got_idx, got_active = rounds.draw_participants(
+            jax.random.key(0), k, s, (idx, active)
+        )
+        # the billing contract: s_r = sum(active), never len(idx)
+        s_real.append(int(np.sum(np.asarray(got_active))))
+    bill = comms.accumulate_round_bits(
+        "pfed1bs", n=10_000, m=m, s_per_round=s_real
+    )
+    assert bill["uplink_bits"] == sum(s_real) * m
+    assert bill["downlink_bits"] == rounds_n * m          # broadcast per round
+    # padding every round's draw with extra PURE STRAGGLERS (active=0 rows)
+    # leaves sum(active) — and therefore the invoice — unchanged
+    s_padded = []
+    for s_r in s_real:
+        extra = int(rng.integers(1, 4))
+        idx = jnp.asarray(rng.permutation(k)[:s_r + extra], jnp.int32)
+        active = jnp.concatenate([
+            jnp.ones((s_r,), jnp.float32), jnp.zeros((extra,), jnp.float32)
+        ])
+        _, got_active = rounds.draw_participants(
+            jax.random.key(0), k, s_r + extra, (idx, active)
+        )
+        s_padded.append(int(np.sum(np.asarray(got_active))))
+    assert s_padded == s_real
+    bill2 = comms.accumulate_round_bits(
+        "pfed1bs", n=10_000, m=m, s_per_round=s_padded
+    )
+    assert bill == bill2
