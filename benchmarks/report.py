@@ -48,6 +48,10 @@ BENCH_SCHEMAS = {
         "async.uplink_bits", "async.lag_histogram",
         "sync_parity.bit_exact", "cost_model_at_scale.n",
     ],
+    "BENCH_robust": [
+        "config", "m", "honest", "garbage_parity.bit_exact",
+        "signflip_curve", "rr_curve", "recovery.recovered_frac",
+    ],
 }
 
 
@@ -89,6 +93,15 @@ def validate_bench_artifacts(fast: bool, root: str = ".") -> list[str]:
 
             try:
                 validate_async_artifact(obj)
+            except ValueError as e:
+                problems.append(f"{path}: {e}")
+        if stem == "BENCH_robust" and not any(p.startswith(path) for p in problems):
+            # garbage cell bit-exact with honest, equal billed bits across
+            # every cell, defense recovers >= half the attack's accuracy gap
+            from repro.exp.report import validate_robust
+
+            try:
+                validate_robust(obj)
             except ValueError as e:
                 problems.append(f"{path}: {e}")
     return problems

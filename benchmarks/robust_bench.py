@@ -1,0 +1,261 @@
+"""Robustness bench: accuracy vs adversary fraction x defense, and vs
+epsilon — emits BENCH_robust.json (DESIGN.md §10).
+
+The experimental design, in the order the numbers should be read:
+
+  honest          the baseline cell: no adversary, no privacy, no defense.
+  garbage_parity  ScaledGarbage(20%, scale=1e6) vs honest — the
+                  CALIBRATION cell: sign quantization provably neutralizes
+                  magnitude garbage (sign(c*z) = sign(z), c > 0), so the
+                  attacked run must be BIT-exact with the honest one, per
+                  seed, accuracy and loss curve both. If this cell drifts,
+                  the injection hook leaked past the encoder.
+  signflip_curve  accuracy vs SignFlipAttack fraction (0-40% of clients)
+                  x defense in {none, trim, reputation}. The attack is
+                  given its worst case: client weights are lognormal-
+                  imbalanced and the byzantine PLACEMENT is adversarial —
+                  the mask seed is searched so the compromised clients
+                  hold the largest p_k mass below the 50% breakdown point
+                  (a 20%-of-clients bloc holding ~46% of the vote mass).
+                  This is what makes 20% sign-flippers actually corrupt a
+                  weighted majority vote; head-count-minority attacks with
+                  uniform weights are absorbed by the vote's own margin.
+  rr_curve        accuracy vs RandomizedResponse epsilon (no adversary):
+                  the privacy-utility knee of the one-bit uplink.
+  recovery        the headline gate: at 20% sign-flippers, the trimmed
+                  vote must recover >= half of the accuracy gap the attack
+                  opened, at unchanged billed uplink bits
+                  (exp/report.validate_robust re-checks from the file).
+
+Every cell shares ONE scenario (Dirichlet 0.3, lognormal imbalance, full
+participation) and is averaged over the same seeds, so differences are
+attributable to the attack/defense axes alone.
+
+Run: PYTHONPATH=src python -m benchmarks.run robust [--fast]
+     (or this module directly: python -m benchmarks.robust_bench [--fast])
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+
+def adversarial_placement(weights, fraction: float, num_clients: int,
+                          target: float = 0.42, search: int = 300) -> int:
+    """Adversarial byzantine placement: the mask seed whose compromised
+    clients hold p_k mass closest to `target` — heavy (far above the
+    client fraction, which is what imbalance buys the attacker) but
+    safely below the 50% breakdown point, past which NO vote defense is
+    sound (a byzantine vote majority owns every weighted consensus bit,
+    including the defense's reference) and the comparison measures
+    nothing but impossibility."""
+    from repro.core import rounds
+
+    w = np.asarray(weights)
+    best, best_d = 0, float("inf")
+    for seed in range(search):
+        mask = np.asarray(rounds.byzantine_mask(seed, num_clients, fraction))
+        d = abs(float((mask * w).sum()) - target)
+        if d < best_d:
+            best, best_d = seed, d
+    return best
+
+
+def bench_robust(fast: bool = False, progress=None) -> dict:
+    from repro.exp import report, runner, scenarios
+
+    base = scenarios.Scenario(
+        "robust", scenarios.DirichletPartition(0.3),
+        scenarios.FullParticipation(), imbalance=1.0,
+    )
+    if fast:
+        cfg = runner.ExpConfig(
+            num_clients=10, rounds=8, local_steps=2, batch=16, hidden=32,
+            train_per_client=32, test_per_client=32, chunk=2048,
+            m_ratio=0.25, lam=0.1, noise_scale=3.0,
+            trim_frac=0.2, rep_beta=0.5,
+        )
+        seeds = (2,)
+        fractions = (0.0, 0.2)
+        defenses = ("none", "trim")
+        epsilons = (2.0,)
+    else:
+        cfg = runner.ExpConfig(
+            num_clients=10, rounds=10, local_steps=2, batch=16, hidden=32,
+            train_per_client=32, test_per_client=32, chunk=2048,
+            m_ratio=0.25, lam=0.1, noise_scale=3.0,
+            trim_frac=0.2, rep_beta=0.5,
+        )
+        seeds = (0, 1, 2)
+        fractions = (0.0, 0.1, 0.2, 0.3, 0.4)
+        defenses = ("none", "trim", "reputation")
+        epsilons = (0.5, 1.0, 2.0, 4.0)
+
+    # the placement search needs the realized client weights
+    import jax
+
+    from repro.core import rounds
+
+    data = base.build(jax.random.key(0), cfg.num_clients)
+    placements = {
+        f: adversarial_placement(data.weights, f, cfg.num_clients)
+        for f in fractions if f > 0
+    }
+
+    def run(scenario, defense="none", tag=""):
+        """One seed-averaged cell; keeps per-seed curves for parity."""
+        per_seed = [
+            runner.run_cell(
+                "pfed1bs", scenario,
+                dataclasses.replace(cfg, defense=defense, seed=s),
+            )
+            for s in seeds
+        ]
+        cell = dict(per_seed[0])
+        cell["acc"] = float(np.mean([c["acc"] for c in per_seed]))
+        cell["acc_per_seed"] = [c["acc"] for c in per_seed]
+        cell["loss_curves_per_seed"] = [c["loss_curve"] for c in per_seed]
+        cell["uplink_bits"] = sum(c["uplink_bits"] for c in per_seed)
+        cell["downlink_bits"] = sum(c["downlink_bits"] for c in per_seed)
+        if progress is not None:
+            progress(tag or scenario.name, cell)
+        return cell
+
+    honest = run(base, tag="honest")
+
+    # -- calibration: scaled garbage is provably a no-op ---------------------
+    garbage = run(
+        dataclasses.replace(
+            base, adversary=scenarios.ScaledGarbage(
+                0.2, scale=1e6, seed=placements.get(0.2, 0)
+            ),
+        ),
+        tag="garbage20",
+    )
+    garbage_parity = {
+        "honest_acc": honest["acc"],
+        "garbage_acc": garbage["acc"],
+        "honest_loss_curve": honest["loss_curves_per_seed"],
+        "garbage_loss_curve": garbage["loss_curves_per_seed"],
+        "bit_exact": (
+            garbage["acc_per_seed"] == honest["acc_per_seed"]
+            and garbage["loss_curves_per_seed"] == honest["loss_curves_per_seed"]
+        ),
+    }
+
+    # -- accuracy vs adversary fraction x defense ----------------------------
+    signflip_curve = []
+    for frac in fractions:
+        adv = (
+            scenarios.SignFlipAttack(frac, seed=placements[frac])
+            if frac > 0 else None
+        )
+        scen = dataclasses.replace(base, adversary=adv)
+        for defense in defenses:
+            signflip_curve.append(
+                run(scen, defense, tag=f"signflip{frac:.0%}/{defense}")
+            )
+
+    # -- accuracy vs epsilon -------------------------------------------------
+    rr_curve = [
+        run(
+            dataclasses.replace(
+                base, privacy=scenarios.RandomizedResponse(eps)
+            ),
+            tag=f"rr-eps{eps}",
+        )
+        for eps in epsilons
+    ]
+
+    # -- the headline recovery gate ------------------------------------------
+    at = lambda f, d: next(
+        c for c in signflip_curve
+        if c["adversary_fraction"] == f and c["defense"] == d
+    )
+    undef = at(0.2, "none")
+    defended = max(
+        (at(0.2, d) for d in defenses if d != "none"),
+        key=lambda c: c["acc"],
+    )
+    gap = honest["acc"] - undef["acc"]
+    recovery = {
+        "fraction": 0.2,
+        "defense": defended["defense"],
+        "honest_acc": honest["acc"],
+        "undefended_acc": undef["acc"],
+        "defended_acc": defended["acc"],
+        "recovered_frac": (
+            (defended["acc"] - undef["acc"]) / gap if gap > 0 else 1.0
+        ),
+    }
+
+    results = {
+        "fast": fast,
+        "config": dataclasses.asdict(cfg),
+        "seeds": list(seeds),
+        "m": honest["m"],
+        "placements": {str(f): s for f, s in placements.items()},
+        "byz_mass": {
+            str(f): float(
+                (np.asarray(rounds.byzantine_mask(s, cfg.num_clients, f))
+                 * np.asarray(data.weights)).sum()
+            )
+            for f, s in placements.items()
+        },
+        "honest": honest,
+        "garbage_parity": garbage_parity,
+        "signflip_curve": signflip_curve,
+        "rr_curve": rr_curve,
+        "recovery": recovery,
+    }
+    report.validate_robust(results)
+    return results
+
+
+def write_artifacts(results: dict, out_path: str | None = None) -> str:
+    """BENCH_robust.json writer; --fast runs land in BENCH_robust.fast.json
+    and never touch the canonical artifacts. The canonical run also renders
+    experiments/bench/ROBUST.md."""
+    from repro.exp import report
+
+    fast = bool(results.get("fast"))
+    if out_path is None:
+        out_path = "BENCH_robust.fast.json" if fast else "BENCH_robust.json"
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    if not fast:
+        os.makedirs("experiments/bench", exist_ok=True)
+        with open("experiments/bench/BENCH_robust.json", "w") as f:
+            json.dump(results, f, indent=2)
+        with open("experiments/bench/ROBUST.md", "w") as f:
+            f.write(report.robust_markdown(results))
+    return out_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    results = bench_robust(
+        fast=args.fast,
+        progress=lambda tag, c: print(
+            f"{tag:24s} acc={c['acc']:.4f} bits={c['uplink_bits']:,}",
+            flush=True,
+        ),
+    )
+    rec = results["recovery"]
+    print(
+        f"recovery: defense={rec['defense']} "
+        f"recovered_frac={rec['recovered_frac']:.2f}"
+    )
+    path = write_artifacts(results, args.out)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,11 @@ same protocols); the full-scale numbers live in the dry-run roofline.
                   scenario, sync-parity cell, cost model at a real
                   configs/ architecture size (BENCH_async.json; --fast
                   emits BENCH_async.fast.json)
+  robust          robustness curves: accuracy vs Byzantine adversary
+                  fraction x defense (none/trim/reputation) and vs
+                  randomized-response epsilon, garbage-neutralization
+                  parity, recovery gate (BENCH_robust.json; --fast emits
+                  BENCH_robust.fast.json)
   roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
@@ -358,6 +363,27 @@ def bench_exp(fast=False):
     return results
 
 
+def bench_robust(fast=False):
+    """Robustness curves — accuracy vs adversary fraction x defense and vs
+    RR epsilon; emits BENCH_robust.json (fast: BENCH_robust.fast.json; see
+    benchmarks/robust_bench.py)."""
+    from benchmarks import robust_bench
+
+    results = robust_bench.bench_robust(
+        fast=fast,
+        progress=lambda tag, c: emit(
+            f"robust/{tag}", c["us_per_round"],
+            f"acc={c['acc']:.4f} uplink_bits={c['uplink_bits']}"
+        ),
+    )
+    rec = results["recovery"]
+    emit("robust/recovery", 0.0,
+         f"defense={rec['defense']} recovered_frac={rec['recovered_frac']:.2f} "
+         f"garbage_parity={'OK' if results['garbage_parity']['bit_exact'] else 'FAIL'}")
+    robust_bench.write_artifacts(results)
+    return results
+
+
 def bench_async(fast=False):
     """Async-vs-sync time-to-target — emits BENCH_async.json (fast:
     BENCH_async.fast.json; see benchmarks/async_bench.py)."""
@@ -391,6 +417,7 @@ BENCHES = {
     "serve": bench_serve,
     "exp": bench_exp,
     "async": bench_async,
+    "robust": bench_robust,
     "roofline": bench_roofline,
 }
 

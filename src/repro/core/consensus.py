@@ -1,10 +1,27 @@
-"""Server-side consensus aggregation (paper Eq. 8, Lemma 1).
+"""Server-side consensus aggregation (paper Eq. 8, Lemma 1) + robust votes.
 
 The server's discrete problem min_{v in {+-1}^m} sum_k p_k g(v, z_k) has the
 exact closed-form minimizer v* = sign(sum_k p_k z_k) — a weighted majority
 vote. `majority_vote` keeps jnp.sign semantics (tie -> 0, matching the paper's
 note that v may contain {-1, 0, +1}); the packed transport path breaks ties
 to +1 (a tie has measure zero under real-valued weights).
+
+TIE-BREAKING CONVENTIONS (pinned by tests/test_regularizer_consensus.py::
+test_tie_break_conventions — adversaries can FORCE exact ties, e.g. a
+sign-flipped row exactly cancels its honest twin under uniform weights, so
+the divergence between the vote paths must be explicit, not folklore):
+
+  float paths    majority_vote, staleness_weighted_vote, trimmed_vote,
+                 reputation_vote             tie (sum == 0)  ->  0
+  packed paths   majority_vote_packed, majority_vote_popcount,
+                 trimmed_vote_packed         tie             -> +1
+
+Each robust vote inherits the convention of the base vote it composes:
+`trimmed_vote`/`reputation_vote` revote through `majority_vote` (tie -> 0);
+`trimmed_vote_packed` revotes through the packed word vote (tie -> +1).
+A 0 in a float consensus counts as DISagreement for every voter in the
+trim ranking and the reputation EMA (z * 0 > 0 is False) — uniformly, so
+it can never reorder voters relative to each other.
 """
 from __future__ import annotations
 
@@ -73,6 +90,100 @@ def staleness_weighted_vote(zs: jax.Array, p: jax.Array, tau: jax.Array,
     this buffer-order accumulation is not bit-stable under resampling.
     Tests compare against this form (tests/test_async_sim.py)."""
     return majority_vote(zs, p * staleness_weights(tau, exponent))
+
+
+# --- robust votes (Byzantine defense layer, DESIGN.md §10) -------------------
+
+def trimmed_vote(zs: jax.Array, p: jax.Array, trim: int):
+    """Coordinate-free trimmed weighted vote: drop the `trim` most
+    DISAGREEING voters, then revote.
+
+    1. provisional Lemma-1 vote v0 = sign(sum_k p_k z_k);
+    2. per-voter disagreement d_k = mean_j(z_kj * v0_j < 0) (the fraction
+       of coordinates voting against the provisional consensus — a
+       sign-flip attacker scores near 1, honest heterogeneous clients
+       cluster well below);
+    3. zero the weights of the top-`trim` voters by d_k (stable argsort:
+       equal disagreement breaks to the lower client index, deterministic)
+       — but never below one survivor: the realized trim count is
+       min(trim, voters - 1) with voters = #(p > 0), so a part-full async
+       buffer can't be trimmed to an empty vote;
+    4. revote with the kept weights.
+
+    The provisional vote is UNWEIGHTED (one voter, one vote): the attack
+    surface of the weighted vote is weight concentration — a colluding
+    bloc holding 20% of the clients can hold >40% of the p_k mass under
+    data imbalance and drag the provisional consensus toward itself, at
+    which point ranking disagreement against that consensus trims the
+    HONEST voters. Measuring disagreement against the head-count majority
+    keeps the reference honest whenever byzantine CLIENTS (not mass) are
+    a minority, which is the standard Byzantine assumption. The final
+    revote stays p-weighted (Lemma 1 fidelity on the kept voters).
+
+    zs: (K, m) sign rows in natural client order (0 rows for non-voters);
+    p: (K,) weights, p_k = 0 marks a non-voter (never counted, never
+    trimmed). Returns (v, kept_weights). Tie convention: INHERITS
+    majority_vote's tie -> 0 in both the provisional and the final vote; a
+    provisional 0 counts as disagreement for everyone equally, so it
+    cannot reorder the trim ranking."""
+    v0 = majority_vote(zs, (p > 0).astype(jnp.float32))
+    dis = jnp.mean((zs * v0[None, :] < 0).astype(jnp.float32), axis=1)
+    dis = jnp.where(p > 0, dis, -jnp.inf)          # non-voters rank last
+    voters = jnp.sum((p > 0).astype(jnp.int32))
+    t = jnp.minimum(jnp.asarray(trim, jnp.int32), jnp.maximum(voters - 1, 0))
+    order = jnp.argsort(-dis)                      # stable: ties -> low index
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    kept = jnp.where(ranks < t, 0.0, p)
+    return majority_vote(zs, kept), kept
+
+
+def trimmed_vote_packed(words: jax.Array, p: jax.Array, trim: int):
+    """Trimmed vote on the packed wire words (kernels/ops.py
+    ::vote_packed_trimmed): same rank-and-drop scheme with the
+    disagreement measured as the XOR-popcount Hamming distance to the
+    provisional packed consensus. words: (K, W) uint32; p: (K,). Returns
+    the packed (W,) uint32 consensus. Tie convention: INHERITS the packed
+    vote's tie -> +1 (both provisional and final), so a tie bit broken to
+    +1 counts as disagreement only for the -1 voters — unlike the float
+    path, where a 0 consensus bit penalizes everyone. With no exact vote
+    ties the two paths pick the same voters and the same consensus
+    (tests/test_robust.py pins this)."""
+    return kops.vote_packed_trimmed(words, p, trim)
+
+
+def reputation_vote(zs: jax.Array, p: jax.Array, rep: jax.Array,
+                    beta: float):
+    """Reputation-weighted vote: per-client multiplicative weights learned
+    as an EMA of each voter's sign-agreement history.
+
+    Vote with w_k = p_k * rep_k, then update rep toward this round's
+    agreement a_k = mean_j(z_kj * ref_j > 0) for the clients that voted
+    (rep' = (1-beta) rep + beta a; non-voters keep their reputation). The
+    agreement REFERENCE is the unweighted head-count majority, not the
+    returned weighted vote, for the same reason trimmed_vote ranks
+    against it: a weight-heavy colluding bloc can drag the weighted
+    consensus toward itself and then score perfect "agreement" with its
+    own corruption. A persistent sign-flipper's agreement against the
+    honest head-count sits near 0, so its effective weight decays
+    geometrically while honest clients hover near their natural agreement
+    level. rep in [0,1]^K stays in [0,1] (an EMA of [0,1] values), hence
+    non-negative and finite under ANY adversarial history
+    (hypothesis-pinned in tests/test_robust.py).
+
+    BIT-EXACTNESS NOTE: a_k is a mean of 0/1 floats — integer partial
+    sums, exact in float32 for any m < 2^24 — and the EMA is elementwise,
+    so recomputing the chain in a different jitted program (the async
+    flush vs the fused round) yields bit-identical reputations, unlike
+    EF's alpha mean (see pfed1bs._ef_quantize). zs: (K, m) natural-order
+    sign rows (0 rows for non-voters); p, rep: (K,). Returns (v, rep').
+    Tie convention: INHERITS majority_vote's tie -> 0 (returned vote AND
+    reference); a 0 reference bit counts as disagreement for every
+    voter's EMA equally."""
+    v = majority_vote(zs, p * rep)
+    ref = majority_vote(zs, (p > 0).astype(jnp.float32))
+    agree = jnp.mean((zs * ref[None, :] > 0).astype(jnp.float32), axis=1)
+    rep_new = jnp.where(p > 0, (1.0 - beta) * rep + beta * agree, rep)
+    return v, rep_new
 
 
 def server_objective(v: jax.Array, zs: jax.Array, p: jax.Array) -> jax.Array:

@@ -92,6 +92,30 @@ class PFed1BSConfig:
     #                                e_k += Phi w_k - alpha_k z_k with the
     #                                l1-optimal scale alpha_k = mean|Phi w + e|.
     #                                Recovers accuracy at aggressive m/n.
+    # --- robustness / privacy axes (DESIGN.md §10) ---
+    adversary: Any = None          # duck-typed Byzantine model with
+    #                                .corrupt(zs, idx, rnd, num_clients) —
+    #                                exp/scenarios.py SignFlipAttack /
+    #                                ColludingBloc / ScaledGarbage (frozen,
+    #                                hashable); corruption is injected on the
+    #                                cohort sketches post-encode, pre-vote via
+    #                                core/rounds.corrupt_cohort in EVERY
+    #                                executor (fused, sharded, async).
+    privacy: Any = None            # duck-typed uplink privatizer with
+    #                                .flip(signs, idx, rnd) and .debias() —
+    #                                exp/scenarios.py RandomizedResponse;
+    #                                flips wire sign bits per (round, client),
+    #                                billing unchanged (one bit is one bit).
+    defense: str = "none"          # "none" | "trim" (drop the trim_frac * S
+    #                                most-disagreeing voters per vote) |
+    #                                "reputation" (per-client EMA of sign-
+    #                                agreement multiplies the vote weights;
+    #                                carried as FLState.rep, requires
+    #                                vote="exact").
+    trim_frac: float = 0.2         # fraction of the cohort the trimmed vote
+    #                                drops (static count: round(frac * S)).
+    rep_beta: float = 0.25         # reputation EMA step toward this round's
+    #                                sign agreement.
 
 
 class FLState(NamedTuple):
@@ -99,6 +123,7 @@ class FLState(NamedTuple):
     v: jax.Array                   # (m,) consensus in {-1,0,+1}
     round: jax.Array               # scalar int32
     ef: Any = None                 # (K, m) EF residuals when enabled
+    rep: Any = None                # (K,) reputation EMA (defense="reputation")
 
 
 class PFed1BS:
@@ -127,6 +152,10 @@ class PFed1BS:
                  mesh=None):
         assert cfg.layout in ("flat", "leaf"), cfg.layout
         assert cfg.vote in ("exact", "popcount"), cfg.vote
+        assert cfg.defense in ("none", "trim", "reputation"), cfg.defense
+        if cfg.defense == "reputation":
+            # the popcount vote is weightless — reputation has nowhere to act
+            assert cfg.vote == "exact", "defense='reputation' needs vote='exact'"
         self.cfg = cfg
         self.loss_fn = loss_fn     # loss_fn(params, batch) -> scalar
         self.n = flatten.tree_size(params_template)
@@ -167,11 +196,17 @@ class PFed1BS:
             if self.cfg.error_feedback
             else None
         )
+        rep = (
+            jnp.ones((self.cfg.num_clients,), jnp.float32)
+            if self.cfg.defense == "reputation"
+            else None
+        )
         return FLState(
             clients=clients,
             v=jnp.zeros((self.m,), jnp.float32),        # v^0 = 0 (Alg. 1)
             round=jnp.int32(0),
             ef=ef,
+            rep=rep,
         )
 
     # -- client side ---------------------------------------------------------
@@ -277,23 +312,68 @@ class PFed1BS:
 
     # -- cohort primitives (shared by the fused round AND the async tier) ------
 
-    def cohort_update(self, clients, batches, idx, v):
+    def cohort_update(self, clients, batches, idx, v, rnd=None):
         """Gather the `idx` cohort and run the vmapped local update against
         consensus `v`, sketching each updated client exactly once.
 
         clients/batches: stacked (K, ...) pytrees; idx: (S,) distinct client
-        ids; v: (m,) consensus. Returns (upd (S,...) pytree, task_loss (S,),
-        zs (S, m) pre-EF sketches). This is THE client-side computation of
-        the fused round; the async simulator (repro/sim) dispatches cohorts
-        through this same method so a zero-latency drain is bit-exact with
-        the synchronous round (tests/test_async_sim.py).
+        ids; v: (m,) consensus; rnd: the round/version counter (traced int32)
+        keying Byzantine corruption when cfg.adversary is set. Returns (upd
+        (S,...) pytree, task_loss (S,), zs (S, m) pre-EF sketches — already
+        CORRUPTED under an adversary: the attack replaces what the client
+        TRANSMITS, never its local model, so `upd` is always honest). This
+        is THE client-side computation of the fused round; the async
+        simulator (repro/sim) dispatches cohorts through this same method so
+        a zero-latency drain is bit-exact with the synchronous round
+        (tests/test_async_sim.py), adversary included (tests/test_robust.py).
         """
         take = lambda tree: jax.tree.map(lambda a: a[idx], tree)
         upd, task_loss = jax.vmap(
             lambda p, b: self._client_update(p, b, v)
         )(take(clients), take(batches))
         zs = jax.vmap(self._sketch_client)(upd)                # (S, m)
+        zs = rounds.corrupt_cohort(
+            self.cfg.adversary, zs, idx, rnd, self.cfg.num_clients
+        )
         return upd, task_loss, zs
+
+    def privatize_uplink(self, signs, idx, rnd):
+        """Randomized-response flips on the wire signs (cfg.privacy; identity
+        when None). Applied AFTER EF quantization: the client's residual uses
+        its true signs — the flip happens at transmission."""
+        return rounds.privatize_signs(self.cfg.privacy, signs, idx, rnd)
+
+    def vote_defended(self, signs, idx, w_s, rep):
+        """The defense-dispatched Lemma-1 vote, shared by the fused round,
+        the sharded executor's exact vote and the async flush: scatter the
+        cohort into natural client order (vote_scattered's permutation-
+        stability argument), fold the RR debias factor into the weights
+        (rounds.rr_debias — a sign vote is invariant to the uniform scaling,
+        but the weighted sum becomes an unbiased estimator of the
+        non-private one), then vote per cfg.defense. Returns (v, rep') with
+        rep' == rep unless defense="reputation"."""
+        cfg = self.cfg
+        if cfg.privacy is not None:
+            w_s = w_s * cfg.privacy.debias()
+        if cfg.defense == "none":
+            return self.vote_scattered(signs, idx, w_s), rep
+        k = cfg.num_clients
+        signs_full = jnp.zeros((k, self.m), jnp.float32).at[idx].set(signs)
+        w_full = jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
+        if cfg.defense == "trim":
+            v, _ = consensus.trimmed_vote(signs_full, w_full, self.trim_count)
+            return v, rep
+        v, rep_new = consensus.reputation_vote(
+            signs_full, w_full, rep, cfg.rep_beta
+        )
+        return v, rep_new
+
+    @property
+    def trim_count(self) -> int:
+        """Static voters-to-drop of the trimmed vote: round(trim_frac * S).
+        consensus.trimmed_vote further clamps to voters-1 at trace time, so
+        a part-full async buffer is never trimmed empty."""
+        return max(0, int(round(self.cfg.trim_frac * self.cfg.participate)))
 
     def vote_scattered(self, signs, idx, w_s):
         """Lemma 1 vote over a cohort, accumulated in NATURAL client order:
@@ -336,9 +416,10 @@ class PFed1BS:
 
         # gather -> vmapped update -> one sketch per sampled client
         # (cohort_update; non-sampled clients never pay local SGD and their
-        # unchanged sketches are never recomputed)
+        # unchanged sketches are never recomputed). Byzantine corruption (if
+        # any) lands inside cohort_update, keyed by the round counter.
         upd, task_loss, zs = self.cohort_update(
-            state.clients, batches, idx, state.v
+            state.clients, batches, idx, state.v, state.round
         )
 
         # scatter updated models back; non-sampled AND inactive (dropped-out)
@@ -354,13 +435,16 @@ class PFed1BS:
             new_ef = state.ef.at[idx].set(ef_rows)
         else:
             signs = jnp.sign(zs) + (zs == 0)                   # {-1,+1}
+        signs = self.privatize_uplink(signs, idx, state.round)
         packed = self._pack_uplink(signs)
 
         # server: weighted majority vote over the sampled clients (Lemma 1),
-        # accumulated in natural client order (vote_scattered). Dropped-out
+        # accumulated in natural client order and routed through the
+        # configured defense (vote_defended == vote_scattered when
+        # defense="none" and privacy=None — identical program). Dropped-out
         # rows (active=0) cast no vote.
         w_s = weights[idx] * active
-        v_new = self.vote_scattered(signs, idx, w_s)
+        v_new, new_rep = self.vote_defended(signs, idx, w_s, state.rep)
 
         potential = self._potential_from_sketches(
             upd, zs_phi, v_new, task_loss, w_s
@@ -374,8 +458,12 @@ class PFed1BS:
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),
         }
+        if cfg.defense == "reputation":
+            metrics["rep_min"] = jnp.min(new_rep)
+            metrics["rep_mean"] = jnp.mean(new_rep)
         return (
-            FLState(clients=clients, v=v_new, round=state.round + 1, ef=new_ef),
+            FLState(clients=clients, v=v_new, round=state.round + 1,
+                    ef=new_ef, rep=new_rep),
             metrics,
         )
 
@@ -420,16 +508,27 @@ class PFed1BS:
         clients = jax.tree.map(keep, new_clients, state.clients)
 
         zs = jax.vmap(self._sketch_client)(clients)            # (K, m)
+        # adversary/privacy over ALL K rows, keyed by client id — the same
+        # per-client values the fused round computes for its cohort; rows
+        # outside the cohort are masked out of the vote anyway
+        all_ids = jnp.arange(k, dtype=jnp.int32)
+        zs = rounds.corrupt_cohort(
+            cfg.adversary, zs, all_ids, state.round, k
+        )
         new_ef = state.ef
         if cfg.error_feedback:
             corrected, _, updated = self._ef_quantize(zs, state.ef)
             new_ef = jnp.where(mask[:, None] > 0, updated, state.ef)
             zs = jnp.where(mask[:, None] > 0, corrected, zs)
         signs = jnp.sign(zs) + (zs == 0)                       # {-1,+1}
+        signs = self.privatize_uplink(signs, all_ids, state.round)
         packed = self._pack_uplink(signs)
 
         pw = weights * mask
-        v_new = consensus.majority_vote(signs, pw)
+        if cfg.defense == "none" and cfg.privacy is None:
+            v_new, new_rep = consensus.majority_vote(signs, pw), state.rep
+        else:
+            v_new, new_rep = self.vote_defended(signs, all_ids, pw, state.rep)
 
         potential = self._potential(clients, v_new, task_loss, weights)
         metrics = {
@@ -441,7 +540,8 @@ class PFed1BS:
             "packed_words": jnp.float32(packed.shape[-1]),
         }
         return (
-            FLState(clients=clients, v=v_new, round=state.round + 1, ef=new_ef),
+            FLState(clients=clients, v=v_new, round=state.round + 1,
+                    ef=new_ef, rep=new_rep),
             metrics,
         )
 

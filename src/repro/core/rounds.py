@@ -7,8 +7,23 @@ PFed1BS's three executors (core/pfed1bs.py fused/staged,
 launch/fedexec.py sharded) and BaselineFL (core/baselines.py) all resolve
 participants through `draw_participants` and apply updates through
 `scatter_rows`, so the invariant cannot silently diverge between them.
+
+ADVERSARY / PRIVACY INJECTION POINT (DESIGN.md §10): Byzantine corruption
+and randomized-response bit flips also live here and only here. Both act
+on the TRANSMITTED sketch — post-encode, pre-vote — never on the client's
+local model: an attacked system is hurt through the corrupted consensus
+it broadcasts back, which is the paper's actual attack surface. The math
+is seed-deterministic and keyed by (seed, round, client id), NOT by the
+cohort position, so the fused, sharded and async executors all corrupt
+the same (round, client) pairs bit-for-bit (tests/test_robust.py). The
+adversary/privacy OBJECTS are frozen dataclasses in exp/scenarios.py
+(the scenario axis); they delegate every number back to the functions
+below, mirroring how the partition axis delegates to data/synthetic.py —
+core never imports exp.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -36,3 +51,119 @@ def scatter_rows(tree, idx, rows, active):
         return old.at[idx].set(kept)
 
     return jax.tree.map(one, tree, rows)
+
+
+# --- Byzantine adversary axis (DESIGN.md §10) --------------------------------
+
+def byzantine_mask(seed: int, num_clients: int, fraction: float) -> jax.Array:
+    """The STATIC Byzantine membership: exactly round(fraction * K) clients,
+    chosen by a seeded permutation. A pure function of (seed, K, fraction) —
+    every executor recomputes it at trace time and gets the identical (K,)
+    0/1 float mask, which is what makes injection seed-deterministic across
+    the fused, sharded and async paths."""
+    count = int(round(fraction * num_clients))
+    count = max(0, min(num_clients, count))
+    mask = jnp.zeros((num_clients,), jnp.float32)
+    if count == 0:
+        return mask
+    perm = jax.random.permutation(jax.random.key(seed), num_clients)
+    return mask.at[perm[:count]].set(1.0)
+
+
+def corrupt_sign_flip(zs: jax.Array, byz: jax.Array) -> jax.Array:
+    """Sign-flip attack: Byzantine rows transmit -z (vote exactly against
+    their own honest sketch). zs: (S, m); byz: (S,) 0/1."""
+    return jnp.where(byz[:, None] > 0, -zs, zs)
+
+
+def corrupt_scaled(zs: jax.Array, byz: jax.Array, scale: float) -> jax.Array:
+    """Magnitude attack: Byzantine rows transmit scale * z. Under one-bit
+    sign quantization this is PROVABLY a no-op for any scale > 0 —
+    sign(scale * z) == sign(z) — which tests/test_robust.py pins bit-exactly
+    (the property holds whenever scaling does not underflow a negative value
+    to -0.0 or overflow to a non-finite; see ScaledGarbage's docstring)."""
+    return jnp.where(byz[:, None] > 0, scale * zs, zs)
+
+
+def colluding_target(target_key: int, m: int) -> jax.Array:
+    """The crafted consensus a colluding bloc agrees on: one Rademacher
+    (m,) sign vector derived from `target_key`, identical at every round
+    and on every executor."""
+    return jax.random.rademacher(
+        jax.random.key(target_key), (m,), dtype=jnp.float32
+    )
+
+
+def corrupt_colluding(zs: jax.Array, byz: jax.Array,
+                      target: jax.Array) -> jax.Array:
+    """Colluding-bloc attack: every Byzantine row transmits the SAME crafted
+    sketch, maximizing their joint pull on the vote (uncoordinated attackers
+    partially cancel; a bloc never does)."""
+    return jnp.where(byz[:, None] > 0, target[None, :], zs)
+
+
+def corrupt_cohort(adversary, zs: jax.Array, idx: jax.Array, rnd,
+                   num_clients: int) -> jax.Array:
+    """THE adversary hook every executor routes its cohort sketches through
+    (post-encode, pre-vote). `adversary` is any object with
+    .corrupt(zs, idx, rnd, num_clients) — the frozen dataclasses in
+    exp/scenarios.py — or None (identity, no trace change). zs: (S, m)
+    float sketches of cohort `idx`; rnd: the round/version counter (traced
+    int32 is fine)."""
+    if adversary is None:
+        return zs
+    if rnd is None:
+        rnd = jnp.int32(0)
+    return adversary.corrupt(zs, idx, rnd, num_clients)
+
+
+# --- randomized-response privacy axis (DESIGN.md §10) ------------------------
+
+def rr_flip_probability(epsilon: float) -> float:
+    """Binary randomized response calibrated to epsilon-LDP: each uplink
+    bit is kept with probability p = e^eps / (1 + e^eps) and flipped with
+    q = 1 - p = 1 / (1 + e^eps); p/q = e^eps is the LDP constraint."""
+    assert epsilon > 0, f"randomized response needs epsilon > 0, got {epsilon}"
+    return 1.0 / (1.0 + math.exp(epsilon))
+
+
+def rr_debias(epsilon: float) -> float:
+    """Unbiasing factor for RR'd sign votes: E[flipped sign] =
+    (p - q) * sign = tanh(eps/2) * sign, so dividing the vote weights by
+    tanh(eps/2) makes the weighted sign-sum an unbiased estimator of the
+    non-private one. A sign vote is invariant to uniform positive weight
+    scaling, so with a single epsilon this is a principled no-op — carried
+    anyway so per-client epsilons compose correctly."""
+    assert epsilon > 0, f"randomized response needs epsilon > 0, got {epsilon}"
+    return 1.0 / math.tanh(epsilon / 2.0)
+
+
+def rr_flip(signs: jax.Array, idx: jax.Array, rnd, seed: int,
+            epsilon: float) -> jax.Array:
+    """Flip each uplink sign bit independently with the RR-calibrated
+    probability. The flip stream is keyed by (seed, round, CLIENT ID) —
+    never by cohort position — so every executor flips the same bits of
+    the same (round, client) pairs. signs: (S, m) in {-1,+1}; idx: (S,)
+    client ids; rnd: round/version counter."""
+    q = rr_flip_probability(epsilon)
+    if rnd is None:
+        rnd = jnp.int32(0)
+    base = jax.random.fold_in(jax.random.key(seed), rnd)
+
+    def one(row, cid):
+        flip = jax.random.bernoulli(jax.random.fold_in(base, cid), q, row.shape)
+        return jnp.where(flip, -row, row)
+
+    return jax.vmap(one)(signs, idx)
+
+
+def privatize_signs(privacy, signs: jax.Array, idx: jax.Array,
+                    rnd) -> jax.Array:
+    """THE privacy hook for the uplink wire signs (post-quantize, post-EF —
+    the flip happens at transmission; a client's own EF residual uses its
+    true signs, since the client knows what it computed). `privacy` is any
+    object with .flip(signs, idx, rnd) — exp/scenarios.py's
+    RandomizedResponse — or None (identity)."""
+    if privacy is None:
+        return signs
+    return privacy.flip(signs, idx, rnd)

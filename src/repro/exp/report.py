@@ -9,6 +9,15 @@ on a matrix thinner than the acceptance floor (5 algorithms x 3
 scenarios), and — the accounting invariant — if any pFed1BS cell's billed
 bits differ from re-invoicing its recorded per-round participation
 through fl/comms.accumulate_round_bits.
+
+`validate_robust` is the same gate for the robustness artifact
+(benchmarks/robust_bench.py -> BENCH_robust.json, DESIGN.md §10). Its
+three load-bearing invariants: the scaled-garbage cell must be BIT-exact
+with the honest run (sign quantization neutralizes magnitude garbage —
+if this trips, corruption leaked past the encode), every cell must bill
+identical uplink bits (robustness axes are free at the wire), and the
+headline defense must recover >= `min_recovery` of the accuracy gap the
+attack opened (defended vs undefended vs honest, same data, same seeds).
 """
 from __future__ import annotations
 
@@ -59,6 +68,100 @@ def validate_matrix(results: dict, min_algos: int = 5,
                     f"cell {cell['algo']}/{cell['scenario']}: recorded {k}="
                     f"{cell[k]} != comms re-invoice {expect[k]}"
                 )
+
+
+ROBUST_TOP_KEYS = (
+    "config", "m", "honest", "garbage_parity", "signflip_curve", "rr_curve",
+    "recovery",
+)
+
+
+def validate_robust(results: dict, min_recovery: float = 0.5) -> None:
+    """Raise ValueError unless `results` is a well-formed BENCH_robust
+    artifact satisfying the §10 invariants (see module docstring)."""
+    for key in ROBUST_TOP_KEYS:
+        if key not in results:
+            raise ValueError(f"robust artifact missing top-level key {key!r}")
+    honest = results["honest"]
+    if honest.get("defense") != "none" or honest.get("adversary") is not None:
+        raise ValueError(
+            "honest baseline cell must have defense='none' and no adversary"
+        )
+
+    # 1. neutralized-garbage parity: bit-exact, not approximately equal
+    gp = results["garbage_parity"]
+    if not gp.get("bit_exact"):
+        raise ValueError("garbage_parity.bit_exact is not True")
+    if gp["garbage_acc"] != gp["honest_acc"] or (
+        gp["garbage_loss_curve"] != gp["honest_loss_curve"]
+    ):
+        raise ValueError(
+            "scaled-garbage cell is not bit-exact with the honest vote: "
+            f"acc {gp['garbage_acc']} vs {gp['honest_acc']} — corruption "
+            "leaked past the sign quantizer"
+        )
+
+    # 2. at least one defended-vs-undefended pair at the same attack level
+    curve = results["signflip_curve"]
+    by_frac: dict[float, set] = {}
+    for c in curve:
+        by_frac.setdefault(c["adversary_fraction"], set()).add(c["defense"])
+    paired = [
+        f for f, defs in by_frac.items()
+        if f > 0 and "none" in defs and (defs - {"none"})
+    ]
+    if not paired:
+        raise ValueError(
+            "signflip_curve has no attacked fraction with both an "
+            "undefended and a defended cell"
+        )
+
+    # 3. headline recovery: the defense closes >= min_recovery of the gap
+    rec = results["recovery"]
+    gap = rec["honest_acc"] - rec["undefended_acc"]
+    recovered = rec["defended_acc"] - rec["undefended_acc"]
+    frac = recovered / gap if gap > 0 else 1.0
+    if abs(frac - rec["recovered_frac"]) > 1e-9:
+        raise ValueError(
+            f"recovery.recovered_frac={rec['recovered_frac']} does not "
+            f"re-derive from its own cells ({frac})"
+        )
+    if frac < min_recovery:
+        raise ValueError(
+            f"defense {rec['defense']!r} recovered only {frac:.3f} of the "
+            f"accuracy gap at fraction {rec['fraction']}; need >= "
+            f"{min_recovery}"
+        )
+
+    # 4. one bit is one bit: every cell bills identical uplink bits
+    cells = [honest, *curve, *results["rr_curve"]]
+    bits = {c["uplink_bits"] for c in cells}
+    if len(bits) != 1:
+        raise ValueError(
+            f"uplink bits differ across robustness cells: {sorted(bits)} — "
+            "an attack or defense changed the wire bill"
+        )
+    for c in results["rr_curve"]:
+        if not (c.get("epsilon") or 0) > 0:
+            raise ValueError(f"rr_curve cell has invalid epsilon: {c}")
+
+
+def robust_markdown(results: dict) -> str:
+    """README-style digest: accuracy vs adversary fraction x defense, and
+    accuracy vs epsilon."""
+    lines = ["| fraction | defense | acc |", "|---|---|---|"]
+    for c in sorted(results["signflip_curve"],
+                    key=lambda c: (c["adversary_fraction"], c["defense"])):
+        lines.append(
+            f"| {c['adversary_fraction']:.2f} | {c['defense']} "
+            f"| {c['acc']:.4f} |"
+        )
+    lines.append("")
+    lines.append("| epsilon | acc |")
+    lines.append("|---|---|")
+    for c in sorted(results["rr_curve"], key=lambda c: c["epsilon"]):
+        lines.append(f"| {c['epsilon']:.1f} | {c['acc']:.4f} |")
+    return "\n".join(lines)
 
 
 def _by_scenario(cells):

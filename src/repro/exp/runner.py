@@ -70,6 +70,12 @@ class ExpConfig:
     # sharded_baseline_round)
     executor: str = "fused"
     fed_shards: int = 1
+    # robust voting defense (pfed1bs only; DESIGN.md §10): "none" | "trim"
+    # (drop the trim_frac*S most consensus-disagreeing voters per round) |
+    # "reputation" (per-client EMA of sign-agreement weights the vote)
+    defense: str = "none"
+    trim_frac: float = 0.2
+    rep_beta: float = 0.25
 
 
 def make_task(cfg: ExpConfig):
@@ -82,9 +88,15 @@ def make_task(cfg: ExpConfig):
     return init_fn, loss_fn, eval_fn
 
 
-def build_engine(algo: str, cfg: ExpConfig, capacity: int, loss_fn, template):
-    """One engine per cell, capacity = the scenario's static S."""
+def build_engine(algo: str, cfg: ExpConfig, capacity: int, loss_fn, template,
+                 scenario: Scenario | None = None):
+    """One engine per cell, capacity = the scenario's static S. The
+    scenario's adversary/privacy axes thread into the pfed1bs engine; the
+    global-model baselines transmit float payloads with no vote to defend,
+    so those axes are out of scope for them (refused, not ignored)."""
     sharded = cfg.executor == "sharded"
+    adversary = scenario.adversary if scenario is not None else None
+    privacy = scenario.privacy if scenario is not None else None
     if algo == "pfed1bs":
         return PFed1BS(
             PFed1BSConfig(
@@ -93,9 +105,19 @@ def build_engine(algo: str, cfg: ExpConfig, capacity: int, loss_fn, template):
                 mu=cfg.mu, gamma=cfg.gamma, m_ratio=cfg.m_ratio,
                 chunk=cfg.chunk, sketch_seed=cfg.seed,
                 sharded_round=sharded, fed_shards=cfg.fed_shards,
+                adversary=adversary, privacy=privacy,
+                defense=cfg.defense, trim_frac=cfg.trim_frac,
+                rep_beta=cfg.rep_beta,
             ),
             loss_fn, template,
         )
+    if adversary is not None or privacy is not None:
+        raise ValueError(
+            f"adversary/privacy axes are one-bit-vote semantics; baseline "
+            f"{algo!r} has no vote to corrupt or defend"
+        )
+    if cfg.defense != "none":
+        raise ValueError(f"defense={cfg.defense!r} requires algo='pfed1bs'")
     return BaselineFL(
         BaselineConfig(
             algo=algo, num_clients=cfg.num_clients, participate=capacity,
@@ -130,7 +152,7 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
     num_tensors = len(jax.tree.leaves(template))
 
     capacity = scenario.capacity(cfg.num_clients)
-    eng = build_engine(algo, cfg, capacity, loss_fn, template)
+    eng = build_engine(algo, cfg, capacity, loss_fn, template, scenario)
     m_dim = eng.m if algo == "pfed1bs" else eng.spec.m
     state = eng.init(init_fn, jax.random.fold_in(base, 23))
 
@@ -165,11 +187,19 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
     bits = comms.accumulate_round_bits(
         algo, n=n, m=m_dim, s_per_round=s_per_round, num_tensors=num_tensors
     )
+    adv = scenario.adversary
     return {
         "algo": algo,
         "scenario": scenario.name,
         "acc": acc,
         "acc_std": acc_std,
+        # robustness axes of the cell (DESIGN.md §10; None/"none" = honest)
+        "defense": cfg.defense,
+        "adversary": type(adv).__name__ if adv is not None else None,
+        "adversary_fraction": adv.fraction if adv is not None else 0.0,
+        "epsilon": (
+            scenario.privacy.epsilon if scenario.privacy is not None else None
+        ),
         "loss_curve": losses,
         "acc_curve": acc_curve,
         "s_per_round": s_per_round,

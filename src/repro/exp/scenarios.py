@@ -34,9 +34,22 @@ and unavailability surface as active-mask zeros, and the per-round billed
 client count is sum(active) — exactly the `s` that fl/comms.round_bits is
 invoiced with (tests/test_scenarios.py pins this).
 
+Two robustness axes ride the same composite (DESIGN.md §10):
+
+  adversary axis     SignFlipAttack | ColludingBloc | ScaledGarbage — a
+                     static seed-deterministic round(fraction*K)-client
+                     bloc corrupts its transmitted sketches POST-encode,
+                     PRE-vote (core/rounds.py); the client's local model
+                     is never touched, only what it claims on the wire.
+  privacy axis       RandomizedResponse(epsilon) — epsilon-LDP uplink bit
+                     flips with the debias correction folded into the
+                     server's vote weights. Both axes are billed nothing
+                     extra by fl/comms.py: one bit is one bit.
+
 `paper_matrix()` is the named registry the benchmarks sweep
-(benchmarks/exp_bench.py -> BENCH_exp.json). DESIGN.md §8 documents the
-layer.
+(benchmarks/exp_bench.py -> BENCH_exp.json); `robust_matrix()` is the
+adversary/privacy registry (benchmarks/robust_bench.py ->
+BENCH_robust.json). DESIGN.md §8 / §10 document the layers.
 """
 from __future__ import annotations
 
@@ -165,12 +178,107 @@ class AvailabilityCycle:
         return idx, active.at[0].set(first)
 
 
+# --- adversary axis (DESIGN.md §10) ------------------------------------------
+#
+# WHO is Byzantine is a static, seed-deterministic property of the
+# population: round(fraction*K) clients picked by a seeded permutation
+# (core/rounds.py::byzantine_mask) — not a per-round redraw, matching the
+# standard Byzantine model where the adversary controls fixed machines.
+# WHAT they transmit replaces the float sketch POST-encode, PRE-vote
+# (core/pfed1bs.py::cohort_update), so the honest local model is intact
+# and only the wire is lied on — and all three executors (fused, sharded,
+# async) inject bit-identically because the hook lives in the one shared
+# cohort program. All math delegates to core/rounds.py; these dataclasses
+# are configuration, so `core` never imports `exp`.
+
+@dataclasses.dataclass(frozen=True)
+class SignFlipAttack:
+    """Byzantine clients transmit -z: the strongest untargeted one-bit
+    attack (every corrupted coordinate votes against the honest sign)."""
+    fraction: float
+    seed: int = 0
+
+    def corrupt(self, zs, idx, rnd, num_clients):
+        from repro.core import rounds
+        byz = rounds.byzantine_mask(self.seed, num_clients, self.fraction)
+        return rounds.corrupt_sign_flip(zs, byz[idx])
+
+
+@dataclasses.dataclass(frozen=True)
+class ColludingBloc:
+    """Byzantine clients agree on ONE crafted Rademacher sketch and all
+    transmit it — the bloc votes as a unit, the worst case for an
+    unweighted majority at a given fraction."""
+    fraction: float
+    target_key: int = 0
+    seed: int = 0
+
+    def corrupt(self, zs, idx, rnd, num_clients):
+        from repro.core import rounds
+        byz = rounds.byzantine_mask(self.seed, num_clients, self.fraction)
+        target = rounds.colluding_target(self.target_key, zs.shape[-1])
+        return rounds.corrupt_colluding(zs, byz[idx], target)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledGarbage:
+    """Byzantine clients transmit scale*z (huge-magnitude garbage). Sign
+    quantization provably neutralizes it: sign(scale*z) = sign(z) for any
+    scale > 0, so the defended AND undefended votes are bit-exact with the
+    honest run (the calibration cell of BENCH_robust; property-tested in
+    tests/test_robust.py). This is the robustness argument magnitude-based
+    compressors cannot make."""
+    fraction: float
+    scale: float = 1e6
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.scale > 0, "scale <= 0 is a sign attack, not garbage"
+
+    def corrupt(self, zs, idx, rnd, num_clients):
+        from repro.core import rounds
+        byz = rounds.byzantine_mask(self.seed, num_clients, self.fraction)
+        return rounds.corrupt_scaled(zs, byz[idx], self.scale)
+
+
+# --- privacy axis (DESIGN.md §10) --------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RandomizedResponse:
+    """epsilon-local-DP uplink: every client flips each transmitted bit
+    independently with probability q = 1/(1 + e^eps) (Warner's randomized
+    response — the optimal local DP mechanism for one bit). Flips are
+    keyed (seed, round, CLIENT ID) so every executor flips the same bits
+    (core/rounds.py::rr_flip). The server folds the 1/tanh(eps/2) debias
+    into the vote weights (core/pfed1bs.py::vote_defended). Billing is
+    unchanged: one bit is one bit, flipped or not (fl/comms.py)."""
+    epsilon: float
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.epsilon > 0, "RR requires epsilon > 0"
+
+    @property
+    def flip_probability(self) -> float:
+        from repro.core import rounds
+        return rounds.rr_flip_probability(self.epsilon)
+
+    def flip(self, signs, idx, rnd):
+        from repro.core import rounds
+        return rounds.rr_flip(signs, idx, rnd, self.seed, self.epsilon)
+
+    def debias(self) -> float:
+        from repro.core import rounds
+        return rounds.rr_debias(self.epsilon)
+
+
 # --- the composite -----------------------------------------------------------
 
 Partition = DirichletPartition | LabelSkewPartition | IIDPartition
 Participation = (
     FullParticipation | UniformSampling | StragglerDropout | AvailabilityCycle
 )
+Adversary = SignFlipAttack | ColludingBloc | ScaledGarbage
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +295,8 @@ class Scenario:
     concept_shift: bool = False   # reserved: per-client label permutation
     latency: object | None = None  # sim/clock.py LatencyModel; None = time
     #                                not modeled (sync-only scenario)
+    adversary: object | None = None  # Adversary dataclass; None = all honest
+    privacy: object | None = None    # RandomizedResponse; None = raw signs
 
     def capacity(self, num_clients: int) -> int:
         return self.participation.capacity(num_clients)
@@ -245,6 +355,30 @@ def paper_matrix() -> dict[str, Scenario]:
         "cycling": Scenario(
             "cycling", DirichletPartition(0.3),
             AvailabilityCycle(0.5, period=4, duty=0.5),
+        ),
+    }
+
+
+def robust_matrix() -> dict[str, Scenario]:
+    """The adversary/privacy registry benchmarks/robust_bench.py sweeps.
+    All cells share ONE data/participation base so accuracy differences
+    are attributable to the attack/defense axes alone; the garbage cell
+    is the bit-exact calibration anchor (see ScaledGarbage)."""
+    base = dict(partition=DirichletPartition(0.3),
+                participation=UniformSampling(0.5))
+    return {
+        "honest": Scenario("honest", **base),
+        "garbage20": Scenario(
+            "garbage20", **base, adversary=ScaledGarbage(0.2, scale=1e6)
+        ),
+        "signflip20": Scenario(
+            "signflip20", **base, adversary=SignFlipAttack(0.2)
+        ),
+        "colluding20": Scenario(
+            "colluding20", **base, adversary=ColludingBloc(0.2, target_key=7)
+        ),
+        "rr-eps2": Scenario(
+            "rr-eps2", **base, privacy=RandomizedResponse(2.0)
         ),
     }
 

@@ -31,6 +31,13 @@ broadcast message (every client receives the same m bits), which is how
 the paper counts it and how the sharded executor realizes it
 (launch/fedexec.py broadcasts one consensus over the `fed` axis).
 
+The robustness axes (DESIGN.md §10) change NOTHING here by design: a
+Byzantine client's corrupted sketch is still S*m uplink bits, a
+RandomizedResponse-flipped bit is still one bit, and the trimmed /
+reputation defenses are server-side re-weightings of bits already paid
+for. One bit is one bit — BENCH_robust's validator asserts equal billed
+bits across every attack x defense x privacy cell.
+
 These formulas are pinned, with concrete numbers, by
 tests/test_comms_table2.py — the same numbers shown in README.md. Change
 all three together.

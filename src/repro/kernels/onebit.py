@@ -15,6 +15,11 @@ Kernels:
                          ceil(log2(K+1)) bit-sliced uint32 planes and the
                          majority test is one carry-propagating constant add
                          — no 32x unpack, no float math (DESIGN.md §6.2)
+  xor_popcount_pallas  : (K, W) uint32 vs a (W,) reference row -> (K, W)
+                         int32 per-word differing-bit counts (SWAR popcount
+                         of the XOR, no unpack) — the Hamming-distance
+                         measure of the trimmed packed vote (DESIGN.md §10);
+                         callers row-sum the word counts
 """
 from __future__ import annotations
 
@@ -129,6 +134,45 @@ def vote_popcount_pallas(words, *, block_words: int = 512, interpret: bool = Fal
         interpret=interpret,
     )(words)
     return out[0]
+
+
+def _xor_popcount_kernel(w_ref, v_ref, o_ref):
+    """Per-word count of bits differing from the reference row.
+
+    XOR then the classic SWAR popcount — pair, nibble, byte-fold via
+    shifts (no 32-bit multiply): pure VPU bitwise ops on uint32 lanes,
+    same alignment story as pack/unpack. Per-word counts <= 32 so every
+    intermediate byte field stays far below overflow.
+    """
+    x = w_ref[...] ^ v_ref[...]                              # (rows, W)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = x + (x >> 8)
+    x = x + (x >> 16)
+    o_ref[...] = (x & jnp.uint32(0x3F)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_words", "interpret"))
+def xor_popcount_pallas(words, vwords, *, block_rows: int = 8,
+                        block_words: int = 512, interpret: bool = False):
+    """(K, W) uint32 rows vs (W,) uint32 reference -> (K, W) int32 per-word
+    Hamming counts (sum along the word axis for per-row distances)."""
+    rows, nw = words.shape
+    block_rows = min(block_rows, rows)
+    block_words = min(block_words, nw)
+    assert rows % block_rows == 0 and nw % block_words == 0
+    return pl.pallas_call(
+        _xor_popcount_kernel,
+        grid=(rows // block_rows, nw // block_words),
+        in_specs=[
+            pl.BlockSpec((block_rows, block_words), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_words), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_words), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, nw), jnp.int32),
+        interpret=interpret,
+    )(words, vwords[None])
 
 
 @functools.partial(jax.jit, static_argnames=("block_words", "interpret"))

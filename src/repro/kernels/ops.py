@@ -19,6 +19,7 @@ from repro.kernels.onebit import (
     unpack_pallas,
     vote_pallas,
     vote_popcount_pallas,
+    xor_popcount_pallas,
 )
 from repro.kernels.srht import dfht_pallas, srht_adj_pallas, srht_fwd_pallas
 
@@ -292,6 +293,59 @@ def vote_packed_ragged(words: jax.Array, weights: jax.Array,
     """
     w = weights * valid.astype(weights.dtype)
     return vote_packed(words, w, impl=impl)
+
+
+def hamming_packed(words: jax.Array, ref_words: jax.Array,
+                   impl: str = "auto") -> jax.Array:
+    """Per-row Hamming distance between packed sketches and a packed
+    reference (the trimmed packed vote's disagreement score).
+
+    words: (K, W) uint32; ref_words: (W,) uint32 -> (K,) int32. The Pallas
+    path XOR-popcounts word-level (kernels/onebit.py, no unpack) with the
+    usual pad-to-alignment-and-slice; padded words are zero on both sides
+    so they contribute 0 to every row equally.
+    """
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.hamming_ref(words, ref_words)
+    rows, nw = words.shape
+    rpad = (-rows) % 8
+    wpad = (-nw) % 128
+    wp = jnp.pad(words, ((0, rpad), (0, wpad)))
+    vp = jnp.pad(ref_words, (0, wpad))
+    bw = _block_words_for(nw + wpad, 512)
+    counts = xor_popcount_pallas(wp, vp, block_words=bw,
+                                 interpret=not _on_tpu())
+    return jnp.sum(counts[:rows, :nw], axis=-1)
+
+
+def vote_packed_trimmed(words: jax.Array, weights: jax.Array, trim: int,
+                        impl: str = "auto") -> jax.Array:
+    """Trimmed weighted vote on the wire format (DESIGN.md §10): rank the
+    voters by Hamming distance to a provisional packed consensus, zero the
+    `trim` most-disagreeing voters' weights (never below one survivor),
+    revote. Equal distances break to the lower client index (stable
+    argsort); zero-weight rows never vote and are never trimmed.
+
+    The provisional consensus is UNWEIGHTED (uniform over the active
+    voters) for the same reason as core/consensus.trimmed_vote: a
+    weight-heavy colluding bloc must not be able to drag the ranking
+    reference toward its own corruption. The final revote is weighted.
+
+    words: (K, W) uint32; weights: (K,) float -> (W,) uint32 packed
+    consensus. Ties -> +1 in both votes (vote_packed semantics). Padded
+    word columns are constant across rows, so they cancel in every
+    pairwise distance comparison and cannot reorder the trim ranking.
+    """
+    v0 = vote_packed(words, (weights > 0).astype(jnp.float32), impl=impl)
+    d = hamming_packed(words, v0, impl=impl)
+    score = jnp.where(weights > 0, d, -1)           # non-voters rank last
+    voters = jnp.sum((weights > 0).astype(jnp.int32))
+    t = jnp.minimum(jnp.asarray(trim, jnp.int32), jnp.maximum(voters - 1, 0))
+    order = jnp.argsort(-score)                     # stable: ties -> low index
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    kept = jnp.where(ranks < t, 0.0, weights)
+    return vote_packed(words, kept, impl=impl)
 
 
 def vote_popcount(words: jax.Array, impl: str = "auto") -> jax.Array:

@@ -114,6 +114,17 @@ def vote_ref(words: jax.Array, weights: jax.Array) -> jax.Array:
     return pack_ref(s)                           # >= 0 -> +1 handles tie->+1
 
 
+def hamming_ref(words: jax.Array, vwords: jax.Array) -> jax.Array:
+    """Per-row Hamming distance to a packed reference row.
+
+    Ground truth for the XOR-popcount kernel (the trimmed packed vote's
+    disagreement measure): row k's count of bit positions where it differs
+    from `vwords`. words: (K, W) uint32; vwords: (W,) uint32 -> (K,) int32.
+    """
+    diff = words ^ vwords[None, :]
+    return jnp.sum(jax.lax.population_count(diff).astype(jnp.int32), axis=-1)
+
+
 def vote_popcount_ref(words: jax.Array) -> jax.Array:
     """Unweighted (uniform-p_k) majority vote on packed words via bit counts.
 

@@ -72,11 +72,18 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
     ef_s = state.ef[idx] if cfg.error_feedback else None
 
     # floats are needed beyond the shard only for EF (residual update) or
-    # diagnostics; otherwise the uplink is packed in the kernel epilogue
-    wire_only = not (cfg.diagnostics or cfg.error_feedback)
+    # diagnostics; otherwise the uplink is packed in the kernel epilogue.
+    # Byzantine/RR injection also disables the packed fast path: corruption
+    # acts on the float sketch, the flips on the sign vector.
+    robust = cfg.adversary is not None or cfg.privacy is not None
+    wire_only = not (cfg.diagnostics or cfg.error_feedback or robust)
 
-    def client_shards(params, bats, v, ef):
-        """Body per fed shard: S/F clients, collective-free."""
+    def client_shards(params, bats, idx_rows, rnd, v, ef):
+        """Body per fed shard: S/F clients, collective-free. Corruption and
+        RR flips run per shard on the shard's own cohort rows — both are
+        keyed by (seed, round, client id), so the injection is identical to
+        the fused round's regardless of the shard layout
+        (core/rounds.py, tests/test_robust.py)."""
         upd, task_loss = jax.vmap(
             lambda p, b: eng._client_update(p, b, v)
         )(params, bats)
@@ -85,12 +92,16 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
             out["packed"] = jax.vmap(eng._sketch_client_packed)(upd)
             return out
         zs = jax.vmap(eng._sketch_client)(upd)              # (S/F, m) float32
+        zs = rounds.corrupt_cohort(
+            cfg.adversary, zs, idx_rows, rnd, cfg.num_clients
+        )
         if cfg.diagnostics:
             out["zs"] = zs                                   # pre-EF (Eq. 28)
         if cfg.error_feedback:
             _, signs, out["ef"] = eng._ef_quantize(zs, ef)
         else:
             signs = jnp.sign(zs) + (zs == 0)                 # {-1,+1}
+        signs = rounds.privatize_signs(cfg.privacy, signs, idx_rows, rnd)
         out["packed"] = eng._pack_uplink(signs)
         return out
 
@@ -103,10 +114,10 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
     res = shard_map(
         client_shards,
         mesh=mesh,
-        in_specs=(fed, fed, P(), fed),
+        in_specs=(fed, fed, fed, P(), P(), fed),
         out_specs=out_specs,
         check_rep=False,
-    )(clients_s, batches_s, state.v, ef_s)
+    )(clients_s, batches_s, idx, state.round, state.v, ef_s)
 
     # ---- the wire ----------------------------------------------------------
     # res["packed"] is the (S, nw) uint32 uplink; replicating it for the
@@ -121,15 +132,25 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
         # metric (below) flags rounds where the sampled weights were not
         # actually uniform and the consensus therefore differs from the
         # weighted Lemma 1 object.
-        vw = consensus.majority_vote_popcount(packed)
+        new_rep = state.rep
+        if cfg.defense == "trim":
+            # trimmed vote stays on the wire words: XOR-popcount Hamming
+            # ranking against a provisional packed consensus
+            # (kernels/ops.py::vote_packed_trimmed; ties -> +1 like every
+            # packed path). `active` doubles as the uniform weight vector so
+            # dropped-out rows neither vote nor get trimmed.
+            vw = consensus.trimmed_vote_packed(packed, active, eng.trim_count)
+        else:
+            vw = consensus.majority_vote_popcount(packed)
         v_new = kops.unpack_signs(vw)[:m]
     else:
         # Lemma 1 exactly: unpack server-side, vote in natural client order
-        # with zero weights on non-sampled rows (eng.vote_scattered — the
-        # same float accumulation as the fused round, see §4 note on vote
-        # ordering), hence bit-exact with it on a 1-device mesh.
+        # with zero weights on non-sampled rows, routed through the
+        # configured defense (eng.vote_defended — the same float
+        # accumulation as the fused round, see §4 note on vote ordering),
+        # hence bit-exact with it on a 1-device mesh.
         pm = kops.unpack_signs(packed)[:, :m]
-        v_new = eng.vote_scattered(pm, idx, w_s)
+        v_new, new_rep = eng.vote_defended(pm, idx, w_s, state.rep)
 
     # ---- simulator state bookkeeping (not wire traffic) --------------------
     clients = rounds.scatter_rows(state.clients, idx, res["upd"], active)
@@ -164,7 +185,8 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
     # FLState is a NamedTuple; _replace avoids importing core from launch
     # (core.pfed1bs lazily imports this module inside round()).
     state = state._replace(
-        clients=clients, v=v_new, round=state.round + 1, ef=new_ef
+        clients=clients, v=v_new, round=state.round + 1, ef=new_ef,
+        rep=new_rep,
     )
     return state, metrics
 

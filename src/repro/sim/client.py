@@ -39,6 +39,12 @@ class ClientState:
     in_flight: bool = False
     jobs_done: int = 0             # uploads that have landed
     last_arrival_t: float = 0.0    # virtual time of the last landed upload
+    reputation: float = 1.0        # server-side trust mirror: EMA of sign-
+    #                                agreement with the consensus, updated at
+    #                                flushes when defense="reputation"
+    #                                (core/consensus.py::reputation_vote);
+    #                                purely observational here — the voting
+    #                                copy lives on FLState.rep
 
 
 class Roster:
@@ -65,6 +71,16 @@ class Roster:
         st.jobs_done += 1
         st.last_arrival_t = float(t)
         return st.download_version
+
+    def set_reputation(self, values) -> None:
+        """Mirror the engine's (K,) reputation vector onto the roster
+        (called by the server after each defended flush)."""
+        assert len(values) == len(self.states)
+        for st, r in zip(self.states, values):
+            st.reputation = float(r)
+
+    def reputation(self) -> np.ndarray:
+        return np.asarray([s.reputation for s in self.states], np.float32)
 
     def in_flight_count(self) -> int:
         return sum(s.in_flight for s in self.states)

@@ -82,6 +82,9 @@ class SimReport:
     flushes: list[FlushRecord] = dataclasses.field(default_factory=list)
     meter: AsyncMeter | None = None
     residual_arrivals: int = 0     # billed uploads still buffered at stop
+    final_reputation: list | None = None   # (K,) trust EMA at stop, only
+    #                                        when defense="reputation"
+    #                                        (DESIGN.md §10)
     # NB: accuracy curves are the CALLER's to build (the simulator has no
     # eval function) — pass an on_flush hook to AsyncSimulator.run, as
     # benchmarks/async_bench.py does, and feed `time_to_target` with it.
@@ -135,7 +138,11 @@ class SimReport:
             )
 
     def to_dict(self) -> dict:
-        return {
+        extra = (
+            {"final_reputation": self.final_reputation}
+            if self.final_reputation is not None else {}
+        )
+        return extra | {
             "m": self.m,
             "versions": self.versions,
             "arrivals_per_flush": self.arrivals_per_flush,

@@ -35,6 +35,18 @@ round — same consensus, same client params, same EF residuals, EF on and
 off, flat and leaf layouts. Every departure from the synchronous
 semantics must therefore be switched by latency, B, or p — never by the
 event-loop plumbing itself.
+
+ROBUSTNESS (DESIGN.md §10): the adversary / privacy axes ride the same
+plumbing. Corruption happens inside `cohort_update` (keyed by the
+DOWNLOAD version — the async analogue of the sync round counter, so the
+zero-latency drain corrupts exactly the rounds the fused run corrupts),
+RR flips apply to the wire signs at dispatch, and the flush re-vote runs
+through the engine's `vote_defended` (trimmed / reputation-weighted
+voting with the RR debias folded in). Reputation state (per-client EMA
+of sign-agreement) lives on FLState.rep, is updated only at flushes —
+where votes actually land — and is mirrored onto the Roster for
+inspection. Defended flushes require `vote="exact"`: the ragged packed
+vote has no trimmed/reputation variant (asserted at construction).
 """
 from __future__ import annotations
 
@@ -93,6 +105,11 @@ class AsyncSimulator:
                  participants_fn: Callable, batch_fn: Callable):
         assert cfg.vote in ("exact", "packed"), cfg.vote
         assert cfg.buffer_size >= 1
+        # defended votes (trim / reputation) exist only in float sign space;
+        # the ragged packed flush vote has no trimmed variant.
+        assert engine.cfg.defense == "none" or cfg.vote == "exact", (
+            "defense requires vote='exact' in the async tier"
+        )
         self.eng = engine
         self.cfg = cfg
         self.weights = jnp.asarray(weights, jnp.float32)
@@ -101,7 +118,7 @@ class AsyncSimulator:
         self._cohort = jax.jit(self._cohort_client_side)
         self._flush_cache: dict = {}   # (b, has_ef) -> jitted flush body
 
-    def _cohort_client_side(self, clients, batches, idx, v, ef):
+    def _cohort_client_side(self, clients, batches, idx, v, ef, rnd):
         """The whole client side of a dispatch, ONE jitted program:
         cohort_update plus sign-quantization (EF-corrected when enabled).
 
@@ -114,12 +131,21 @@ class AsyncSimulator:
         local update, the way the synchronous round compiles it — split
         across programs, XLA's compilation of the alpha mean drifts a ulp
         (see tests/test_async_sim.py::test_parity_*). The flush then only
-        performs exact operations: index scatters and the sign vote."""
-        upd, task_loss, zs = self.eng.cohort_update(clients, batches, idx, v)
+        performs exact operations: index scatters and the sign vote.
+
+        `rnd` is the dispatch (download) version: Byzantine corruption
+        inside cohort_update and the RR uplink flips are both keyed by
+        (seed, rnd, client id), so the zero-latency drain injects exactly
+        what the synchronous round counter would (tests/test_robust.py)."""
+        upd, task_loss, zs = self.eng.cohort_update(
+            clients, batches, idx, v, rnd
+        )
         if ef is None:
             signs = jnp.sign(zs) + (zs == 0)                   # {-1,+1}
+            signs = self.eng.privatize_uplink(signs, idx, rnd)
             return upd, task_loss, zs, signs, None
         _, signs, new_rows = self.eng._ef_quantize(zs, ef[idx])
+        signs = self.eng.privatize_uplink(signs, idx, rnd)
         return upd, task_loss, zs, signs, new_rows
 
     # -- jitted flush bodies (cached per ragged buffer size) -----------------
@@ -132,7 +158,8 @@ class AsyncSimulator:
             return self._flush_cache[key]
         eng, cfg = self.eng, self.cfg
 
-        def flush(clients, ef, signs, ids, tau, w_base, params_rows, ef_rows):
+        def flush(clients, ef, rep, signs, ids, tau, w_base, params_rows,
+                  ef_rows):
             stale = consensus.staleness_weights(tau, cfg.staleness_exponent)
             w = w_base * stale
             if has_ef:
@@ -150,12 +177,15 @@ class AsyncSimulator:
                     valid,
                 )
                 v_new = kops.unpack_signs(vw)[: eng.m]
+                rep_new = rep
             else:
-                v_new = eng.vote_scattered(signs, ids, w)
+                # defense dispatch + RR debias; defense="none"/no privacy
+                # reduces to vote_scattered exactly (the parity path)
+                v_new, rep_new = eng.vote_defended(signs, ids, w, rep)
             clients = rounds.scatter_rows(
                 clients, ids, params_rows, jnp.ones((b,), jnp.float32)
             )
-            return clients, v_new, ef, w
+            return clients, v_new, ef, rep_new, w
 
         self._flush_cache[key] = jax.jit(flush)
         return self._flush_cache[key]
@@ -194,7 +224,7 @@ class AsyncSimulator:
                 return   # nobody to run — skip the cohort program entirely
             batches = self.batch_fn(ver)
             upd, task_loss, _zs, signs, ef_rows = self._cohort(
-                st.clients, batches, idx, st.v, st.ef
+                st.clients, batches, idx, st.v, st.ef, jnp.int32(ver)
             )
             # the pre-EF sketches are not staged: no flush reads them, and
             # a straggler cohort can stay staged for many versions
@@ -232,9 +262,9 @@ class AsyncSimulator:
             )
             tls = jnp.stack([row_of("task_loss", e) for e in buffer])
             w_base = self.weights[ids]
-            clients, v_new, ef, w = self._flush_fn(b, has_ef)(
-                st.clients, st.ef, signs, ids, tau, w_base, params_rows,
-                ef_rows,
+            clients, v_new, ef, rep_new, w = self._flush_fn(b, has_ef)(
+                st.clients, st.ef, st.rep, signs, ids, tau, w_base,
+                params_rows, ef_rows,
             )
             task = float(jnp.sum(tls * w) / jnp.maximum(jnp.sum(w), 1e-9))
             for e in buffer:   # release staged cohorts once fully delivered
@@ -250,8 +280,11 @@ class AsyncSimulator:
             version += 1
             meter.bill_downlink(t_now)
             st = st._replace(
-                clients=clients, v=v_new, round=st.round + 1, ef=ef
+                clients=clients, v=v_new, round=st.round + 1, ef=ef,
+                rep=rep_new,
             )
+            if eng.cfg.defense == "reputation":
+                roster.set_reputation(np.asarray(rep_new))
             if on_flush is not None:
                 on_flush(t_now, version, st)
             return st
@@ -280,5 +313,9 @@ class AsyncSimulator:
                 if version < cfg.max_versions:
                     dispatch_cohort(t, version, state)
         report.residual_arrivals = len(buffer)
+        if eng.cfg.defense == "reputation":
+            report.final_reputation = [
+                float(x) for x in np.asarray(state.rep)
+            ]
         report.check_billing()
         return state, report

@@ -91,3 +91,44 @@ def test_client_sampling_variance_lemma6():
         idx = rng.choice(k, s, replace=False)
         trials.append(np.sum((zs[idx].mean(0) - zbar) ** 2))
     assert np.mean(trials) <= bound * 1.02, (np.mean(trials), bound)
+
+
+def test_tie_break_conventions():
+    """S1: the float and packed vote paths DIVERGE on exact ties, by design
+    (consensus.py module docstring). Float paths: tie -> 0 (jnp.sign
+    semantics, paper's {-1,0,+1} consensus). Packed paths: tie -> +1 (a
+    packed word has no zero bit). Robust votes inherit their base vote's
+    convention. An adversary can FORCE a tie — one sign-flipped row exactly
+    cancels its honest twin under uniform weights — so the divergence is
+    pinned here rather than left as folklore."""
+    from repro.kernels import ops as kops
+
+    # two voters, equal weight, opposite signs on every coordinate -> tie
+    # (m = 32: the packed paths require whole uint32 words)
+    row = jnp.tile(jnp.asarray([1.0, -1.0]), 16)
+    zs = jnp.stack([row, -row])
+    p = jnp.asarray([0.5, 0.5])
+
+    # float paths: tie -> 0
+    np.testing.assert_array_equal(np.asarray(cons.majority_vote(zs, p)), 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(cons.staleness_weighted_vote(zs, p, jnp.zeros(2), 0.5)),
+        0.0,
+    )
+    v_rep, _ = cons.reputation_vote(zs, p, jnp.ones(2), beta=0.5)
+    np.testing.assert_array_equal(np.asarray(v_rep), 0.0)
+    # trimmed_vote with trim=0 keeps both voters -> still a tie -> 0
+    v_tr, kept = cons.trimmed_vote(zs, p, trim=0)
+    np.testing.assert_array_equal(np.asarray(v_tr), 0.0)
+    np.testing.assert_array_equal(np.asarray(kept), np.asarray(p))
+
+    # packed paths: the same tie -> +1 on every bit
+    words = kops.pack_signs(zs)
+    ones = np.asarray(kops.unpack_signs(kops.vote_packed(words, p)))
+    np.testing.assert_array_equal(ones, 1.0)
+    pop = np.asarray(kops.unpack_signs(kops.vote_popcount(words)))
+    np.testing.assert_array_equal(pop, 1.0)
+    tr = np.asarray(
+        kops.unpack_signs(cons.trimmed_vote_packed(words, p, trim=0))
+    )
+    np.testing.assert_array_equal(tr, 1.0)

@@ -1,0 +1,355 @@
+"""Robustness tier: Byzantine injection, robust votes, RR privacy
+(DESIGN.md §10).
+
+Contracts pinned here:
+  * Seed-determinism of the adversary axis: the byzantine mask is a pure
+    function of (seed, K, fraction) with exactly round(fraction*K) members,
+    and injection lands identically in the fused, sharded and async
+    executors — the robust round is bit-exact across all three for every
+    defense x privacy combination (the §6/§9 parity contracts survive the
+    robustness axes).
+  * Sign quantization provably neutralizes magnitude garbage:
+    sign(c * z) == sign(z) for any c > 0 (hypothesis property + engine-level
+    bit-exactness of the full state).
+  * The trimmed vote zeroes a planted sign-flipper's weight; the
+    reputation EMA decays it geometrically; reputations stay in [0, 1] and
+    finite under ANY adversarial sign history (hypothesis property).
+  * Randomized response flips deterministically per (seed, round, client)
+    at the calibrated rate q = 1/(1+e^eps), and the debias factor is
+    1/tanh(eps/2).
+  * The packed trimmed vote (XOR-popcount Hamming ranking) matches the
+    float trimmed vote when no exact vote tie exists; hamming_packed
+    matches the numpy popcount oracle on both impls.
+  * One bit is one bit: attack, defense and privacy leave the billed
+    uplink/downlink bits unchanged.
+  * Baselines refuse the adversary/privacy axes loudly (exp/runner.py) —
+    they have no one-bit vote to corrupt or defend.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, hst
+
+from repro.core import consensus as cons
+from repro.core import rounds
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.data import synthetic as ds
+from repro.exp import scenarios
+from repro.kernels import ops as kops
+from repro.models import smallnets as sn
+
+K, S, R = 6, 6, 2
+
+
+@pytest.fixture(scope="module")
+def task():
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=K, train_per_client=48,
+        test_per_client=24,
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda k: sn.init_mlp(k, input_dim=784, hidden=16)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    return data, loss_fn, init_fn, template
+
+
+def _engine(task, **over):
+    data, loss_fn, init_fn, template = task
+    cfg = PFed1BSConfig(**{
+        "num_clients": K, "participate": S, "local_steps": R,
+        "m_ratio": 0.05, "chunk": 2048, **over,
+    })
+    return PFed1BS(cfg, loss_fn, template), data, init_fn
+
+
+def _run(eng, data, init_fn, rounds_=3):
+    state = eng.init(init_fn, jax.random.key(2))
+    metrics = None
+    for r in range(rounds_):
+        kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(11), r))
+        batches = ds.sample_round_batches(kb, data, R, 16)
+        state, metrics = eng.round(state, batches, data.weights, kr)
+    return state, metrics
+
+
+def _tree_eq(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# byzantine membership + injection primitives
+# ---------------------------------------------------------------------------
+
+def test_byzantine_mask_deterministic_and_counted():
+    for frac, want in ((0.0, 0), (0.2, 1), (0.25, 2), (0.5, 3), (1.0, 6)):
+        m1 = np.asarray(rounds.byzantine_mask(7, 6, frac))
+        m2 = np.asarray(rounds.byzantine_mask(7, 6, frac))
+        np.testing.assert_array_equal(m1, m2)       # pure in the seed
+        assert m1.sum() == want, (frac, m1)
+        assert set(np.unique(m1)) <= {0.0, 1.0}
+    # different seeds place the same count differently (some seed pair must)
+    masks = {tuple(np.asarray(rounds.byzantine_mask(s, 6, 0.5))) for s in range(8)}
+    assert len(masks) > 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=hst.integers(min_value=0, max_value=2 ** 30),
+    scale=hst.floats(min_value=1e-6, max_value=1e6, allow_nan=False,
+                     allow_infinity=False),
+)
+def test_scaled_garbage_neutralized_property(seed, scale):
+    """S2: sign(scale * z) == sign(z) for ANY scale > 0 — the magnitude
+    attack is bit-exactly erased by the one-bit quantizer, whatever the
+    scale and whoever the byzantine clients are."""
+    rng = np.random.RandomState(seed)
+    zs = jnp.asarray(rng.randn(5, 64).astype(np.float32))
+    byz = jnp.asarray((rng.rand(5) < 0.5).astype(np.float32))
+    corrupted = rounds.corrupt_scaled(zs, byz, float(scale))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.sign(corrupted)), np.asarray(jnp.sign(zs))
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=hst.integers(min_value=0, max_value=2 ** 30),
+    beta=hst.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    rounds_=hst.integers(min_value=1, max_value=6),
+)
+def test_reputation_bounds_under_adversarial_history(seed, beta, rounds_):
+    """S2: reputations stay in [0, 1] and finite under ANY sign history —
+    the EMA of [0,1] agreements can never escape the interval, no matter
+    how adversarial the votes or how partial the participation."""
+    rng = np.random.RandomState(seed)
+    rep = jnp.ones((5,))
+    for _ in range(rounds_):
+        zs = jnp.asarray(np.sign(rng.randn(5, 32)).astype(np.float32))
+        p = jnp.asarray((rng.rand(5) * (rng.rand(5) < 0.8)).astype(np.float32))
+        _, rep = cons.reputation_vote(zs, p, rep, float(beta))
+        r = np.asarray(rep)
+        assert np.isfinite(r).all()
+        assert (r >= 0.0).all() and (r <= 1.0).all(), r
+
+
+def test_rr_flip_deterministic_and_calibrated():
+    eps = 1.0
+    signs = jnp.ones((4, 4096), jnp.float32)
+    idx = jnp.arange(4)
+    a = np.asarray(rounds.rr_flip(signs, idx, jnp.int32(3), 0, eps))
+    b = np.asarray(rounds.rr_flip(signs, idx, jnp.int32(3), 0, eps))
+    np.testing.assert_array_equal(a, b)             # pure in (seed, rnd, id)
+    c = np.asarray(rounds.rr_flip(signs, idx, jnp.int32(4), 0, eps))
+    assert not np.array_equal(a, c)                 # round changes the stream
+    q = rounds.rr_flip_probability(eps)
+    assert abs(np.mean(a < 0) - q) < 0.02           # empirical rate ~ q
+    assert np.isclose(q, 1.0 / (1.0 + np.e))
+    assert np.isclose(rounds.rr_debias(eps), 1.0 / np.tanh(0.5))
+    # LDP constraint: keep/flip odds are exactly e^eps
+    assert np.isclose((1 - q) / q, np.e ** eps)
+
+
+# ---------------------------------------------------------------------------
+# robust votes
+# ---------------------------------------------------------------------------
+
+def _planted(flippers, m=96, k=7, seed=0):
+    """k voters: honest ones share a base consensus + light noise, the
+    `flippers` transmit its exact negation."""
+    rng = np.random.RandomState(seed)
+    base = np.sign(rng.randn(m)).astype(np.float32)
+    zs = np.tile(base, (k, 1))
+    noise = rng.rand(k, m) < 0.1
+    zs = np.where(noise, -zs, zs)
+    for f in flippers:
+        zs[f] = -base
+    return jnp.asarray(zs), jnp.asarray(base)
+
+
+def test_trimmed_vote_drops_planted_flipper():
+    zs, base = _planted([2])
+    p = jnp.full((7,), 1.0 / 7)
+    v, kept = cons.trimmed_vote(zs, p, trim=1)
+    assert float(kept[2]) == 0.0                    # the flipper is trimmed
+    assert float(jnp.sum(kept > 0)) == 6.0
+    # the 6 kept voters are honest-but-noisy; their vote tracks the base
+    # consensus closely (exactness is not claimed: 10% per-voter noise can
+    # outvote a coordinate)
+    assert float(jnp.mean((v == base).astype(jnp.float32))) > 0.9
+
+
+def test_trimmed_vote_never_trims_to_empty():
+    zs, _ = _planted([0])
+    p = jnp.zeros((7,)).at[3].set(1.0)              # a single voter
+    v, kept = cons.trimmed_vote(zs, p, trim=5)      # trim clamps to voters-1
+    assert float(jnp.sum(kept > 0)) == 1.0
+    assert float(kept[3]) > 0.0
+
+
+def test_reputation_vote_decays_flipper_geometrically():
+    zs, _ = _planted([1])
+    p = jnp.full((7,), 1.0 / 7)
+    rep = jnp.ones((7,))
+    for _ in range(5):
+        _, rep = cons.reputation_vote(zs, p, rep, beta=0.5)
+    r = np.asarray(rep)
+    assert r[1] < 0.2                               # flipper decayed
+    assert (np.delete(r, 1) > 0.7).all()            # honest voters retained
+
+
+def test_packed_trimmed_matches_float_trimmed():
+    """No exact vote ties -> the XOR-popcount Hamming ranking and the float
+    disagreement ranking pick the same voters and the same consensus."""
+    rng = np.random.RandomState(3)
+    zs = np.sign(rng.randn(7, 128)).astype(np.float32)   # odd K: no ref tie
+    zs[zs == 0] = 1.0
+    p = (rng.rand(7) + 0.1).astype(np.float32)
+    v_f, _ = cons.trimmed_vote(jnp.asarray(zs), jnp.asarray(p), trim=2)
+    words = kops.pack_signs(jnp.asarray(zs))
+    v_p = kops.unpack_signs(cons.trimmed_vote_packed(words, jnp.asarray(p), 2))
+    np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v_p)[:128])
+
+
+def test_hamming_packed_matches_popcount_oracle():
+    rng = np.random.default_rng(5)
+    words = jnp.asarray(rng.integers(0, 2 ** 32, size=(9, 33), dtype=np.uint32))
+    ref = jnp.asarray(rng.integers(0, 2 ** 32, size=(33,), dtype=np.uint32))
+    want = np.asarray([
+        sum(int(a ^ b).bit_count() for a, b in zip(row, np.asarray(ref)))
+        for row in np.asarray(words)
+    ])
+    for impl in ("ref", "pallas"):
+        got = np.asarray(kops.hamming_packed(words, ref, impl=impl))
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: injection, neutralization, billing
+# ---------------------------------------------------------------------------
+
+def test_engine_scaled_garbage_bit_exact_with_honest(task):
+    eng_h, data, init_fn = _engine(task)
+    eng_g, _, _ = _engine(
+        task, adversary=scenarios.ScaledGarbage(0.5, scale=1e6, seed=4)
+    )
+    st_h, m_h = _run(eng_h, data, init_fn)
+    st_g, m_g = _run(eng_g, data, init_fn)
+    np.testing.assert_array_equal(np.asarray(st_h.v), np.asarray(st_g.v))
+    _tree_eq(st_h.clients, st_g.clients)
+    assert float(m_h["task_loss"]) == float(m_g["task_loss"])
+
+
+def test_engine_sign_flip_perturbs_the_round(task):
+    eng_h, data, init_fn = _engine(task)
+    eng_a, _, _ = _engine(task, adversary=scenarios.SignFlipAttack(0.5, seed=4))
+    st_h, _ = _run(eng_h, data, init_fn)
+    st_a, _ = _run(eng_a, data, init_fn)
+    assert not np.array_equal(np.asarray(st_h.v), np.asarray(st_a.v))
+
+
+def test_billing_is_attack_defense_privacy_invariant(task):
+    """One bit is one bit: the robustness axes change nothing at the wire."""
+    eng_h, data, init_fn = _engine(task)
+    _, m_h = _run(eng_h, data, init_fn, rounds_=1)
+    eng_r, _, _ = _engine(
+        task, adversary=scenarios.SignFlipAttack(0.25, seed=1),
+        privacy=scenarios.RandomizedResponse(1.5), defense="trim",
+    )
+    _, m_r = _run(eng_r, data, init_fn, rounds_=1)
+    for k in ("uplink_bits", "downlink_bits"):
+        assert int(m_h[k]) == int(m_r[k])
+
+
+def test_runner_refuses_adversary_on_baselines(task):
+    from repro.exp import runner
+
+    data, loss_fn, _, template = task
+    scen = scenarios.Scenario(
+        "x", scenarios.DirichletPartition(0.3), scenarios.FullParticipation(),
+        adversary=scenarios.SignFlipAttack(0.2),
+    )
+    cfg = runner.ExpConfig(num_clients=K)
+    with pytest.raises(ValueError, match="one-bit-vote semantics"):
+        runner.build_engine("fedavg", cfg, K, loss_fn, template, scenario=scen)
+    with pytest.raises(ValueError, match="defense"):
+        runner.build_engine(
+            "obda", dataclasses.replace(cfg, defense="trim"), K, loss_fn,
+            template,
+        )
+
+
+# ---------------------------------------------------------------------------
+# S3: seed-deterministic injection across the three executors
+# ---------------------------------------------------------------------------
+
+ROBUST_AXES = dict(
+    adversary=scenarios.SignFlipAttack(0.25, seed=3),
+    privacy=scenarios.RandomizedResponse(1.5),
+    trim_frac=0.2, rep_beta=0.5,
+)
+
+
+@pytest.mark.parametrize("defense", ["none", "trim", "reputation"])
+def test_fused_vs_sharded_bit_exact_under_attack(task, defense):
+    """The §6 one-device-mesh parity contract survives the robustness axes:
+    corruption + RR flips + defended vote land identically in the fused and
+    shard_map executors (same mask, same flip stream, same vote program)."""
+    eng_f, data, init_fn = _engine(task, defense=defense, **ROBUST_AXES)
+    eng_s, _, _ = _engine(
+        task, defense=defense, sharded_round=True, **ROBUST_AXES
+    )
+    st_f, m_f = _run(eng_f, data, init_fn)
+    st_s, m_s = _run(eng_s, data, init_fn)
+    np.testing.assert_array_equal(np.asarray(st_f.v), np.asarray(st_s.v))
+    _tree_eq(st_f.clients, st_s.clients)
+    np.testing.assert_array_equal(np.asarray(st_f.rep), np.asarray(st_s.rep))
+    assert float(m_f["task_loss"]) == float(m_s["task_loss"])
+
+
+@pytest.mark.parametrize("defense", ["none", "reputation"])
+def test_async_drain_bit_exact_under_attack(task, defense):
+    """The §9 keystone parity contract survives the robustness axes: a
+    zero-latency full drain (B=S, p=0) reproduces the synchronous robust
+    rounds bit-for-bit, reputation state included — the async tier keys
+    corruption and RR by the download version, which at zero staleness IS
+    the sync round counter."""
+    from repro.sim import clock as simclock
+    from repro.sim.server import AsyncConfig, AsyncSimulator
+
+    eng, data, init_fn = _engine(task, defense=defense, **ROBUST_AXES)
+    participants_fn = lambda v: rounds.draw_participants(
+        jax.random.fold_in(jax.random.key(7), v), K, S, None
+    )
+    batch_fn = lambda v: ds.sample_round_batches(
+        jax.random.fold_in(jax.random.key(9), v), data, R, 16
+    )
+
+    st_sync = eng.init(init_fn, jax.random.key(2))
+    for r in range(3):
+        st_sync, _ = eng.round(
+            st_sync, batch_fn(r), data.weights, jax.random.key(0),
+            participants_fn(r),
+        )
+
+    sim = AsyncSimulator(
+        eng,
+        AsyncConfig(buffer_size=S, staleness_exponent=0.0, max_versions=3,
+                    latency=simclock.ConstantLatency(0.0)),
+        data.weights, participants_fn, batch_fn,
+    )
+    st_async, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+
+    np.testing.assert_array_equal(np.asarray(st_sync.v), np.asarray(st_async.v))
+    _tree_eq(st_sync.clients, st_async.clients)
+    np.testing.assert_array_equal(
+        np.asarray(st_sync.rep), np.asarray(st_async.rep)
+    )
+    if defense == "reputation":
+        assert rep.final_reputation is not None
+        np.testing.assert_allclose(
+            np.asarray(rep.final_reputation), np.asarray(st_async.rep)
+        )
