@@ -1,0 +1,264 @@
+"""Hierarchical federation bench: tree-of-aggregators root-ingress scaling
+plus the counter-merge parity cell — emits BENCH_hier.json (DESIGN.md §11).
+
+Two result blocks, in the order the numbers should be read:
+
+  counter_merge_parity  the CALIBRATION cell, measured on a real (small)
+                        federation: the tree executor (launch/fedexec.
+                        hier_round, partial popcount counters merged
+                        fan_out-at-a-time up the tiers) must be BIT-exact
+                        with the flat popcount server — same consensus
+                        words, same client params, same loss curve, per
+                        round, for every tested topology (balanced,
+                        ragged, single-leaf). Plus a pure vote sweep:
+                        core/consensus.tree_vote_popcount vs the flat
+                        kernels/ops.vote_popcount on random packed words.
+                        If this cell drifts, the count-merge stopped being
+                        sum-decomposable and every scaling row below is
+                        fiction.
+  scaling               the headline curve: clients S on a log scale,
+                        10^3 -> 10^6, at fixed fan-out. Root ingress of
+                        the flat server is S*m bits (linear); the tree
+                        root ingests fan_out counters of
+                        ceil(log2(w+1))*m bits each — O(m log S), flat on
+                        this axis. Rows are billed analytically via
+                        fl/comms.hier_round_bits over the exact
+                        HierTopology the executor would build; rows with
+                        clients > the real-run limit are marked
+                        "simulated": true — no client weights are
+                        materialized at 10^6 clients (that is the point
+                        of the curve), only the wire accounting, which
+                        benchmarks/report.py --validate re-derives from
+                        fl/comms per row.
+
+Run: PYTHONPATH=src python -m benchmarks.run hier [--fast]
+     (or this module directly: python -m benchmarks.hier_bench [--fast])
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+# real engine pairs are run up to this many clients; scaling rows above it
+# are analytic billing only (the note in the artifact says exactly this)
+REAL_RUN_LIMIT = 64
+
+SIMULATED_NOTE = (
+    "scaling rows with simulated=true are analytic wire accounting "
+    f"(fl/comms.hier_round_bits over HierTopology.build): above {REAL_RUN_LIMIT} "
+    "clients no client weights are materialized — the counter-merge itself "
+    "is pinned bit-exact by the counter_merge_parity cell and "
+    "tests/test_hier.py, and the per-row bits are re-derived from fl/comms "
+    "by benchmarks/report.py --validate."
+)
+
+
+def _engine_parity(fast: bool, progress=None) -> dict:
+    """Real small runs: hier_round vs the flat popcount sharded_round,
+    identical inputs, bit-exact state or bust."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+    from repro.data import synthetic as ds
+    from repro.launch.fedexec import HierTopology
+    from repro.models import smallnets as sn
+
+    s = 8
+    rounds = 2
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=s, train_per_client=32,
+        test_per_client=16, noise=0.8,
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda k: sn.init_mlp(k, input_dim=784, hidden=16)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+
+    base = dict(num_clients=s, participate=s, local_steps=2, m_ratio=0.05,
+                chunk=2048, sharded_round=True, vote="popcount")
+    topos = {
+        "fan2-balanced": HierTopology.build(s, fan_out=2),
+        "fan4-balanced": HierTopology.build(s, fan_out=4),
+    }
+    if not fast:
+        topos["ragged"] = HierTopology(leaf_sizes=(1, 3, 4), fan_out=2)
+        topos["single-leaf"] = HierTopology(leaf_sizes=(s,), fan_out=4)
+
+    def run(cfg):
+        eng = PFed1BS(cfg, loss_fn, template)
+        state = eng.init(init_fn, jax.random.key(2))
+        losses = []
+        for r in range(rounds):
+            kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(11), r))
+            batches = ds.sample_round_batches(kb, data, cfg.local_steps, 16)
+            state, m = eng.round(state, batches, data.weights, kr)
+            losses.append(float(m["task_loss"]))
+        return state, losses, m
+
+    cfg_flat = PFed1BSConfig(**base)
+    st_flat, losses_flat, _ = run(cfg_flat)
+    cells, bit_exact = [], True
+    for name, topo in topos.items():
+        st_t, losses_t, m_t = run(dataclasses.replace(cfg_flat, topology=topo))
+        same = bool(np.array_equal(np.asarray(st_t.v), np.asarray(st_flat.v)))
+        for a, b in zip(jax.tree.leaves(st_t.clients),
+                        jax.tree.leaves(st_flat.clients)):
+            same = same and bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        same = same and losses_t == losses_flat
+        bit_exact = bit_exact and same
+        cell = {
+            "topology": name,
+            "leaf_sizes": list(topo.leaf_sizes),
+            "fan_out": topo.fan_out,
+            "tiers": int(m_t["tiers"]),
+            "root_ingress_bits": int(m_t["root_ingress_bits"]),
+            "bit_exact": same,
+        }
+        cells.append(cell)
+        if progress is not None:
+            progress(f"parity:{name}", cell)
+
+    # pure vote sweep: tree counters vs the flat popcount kernel on random
+    # packed words (no training in the loop — the vote alone, wider shapes)
+    from repro.core import consensus
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(7)
+    vote_cases = []
+    for k, leaves, fan in [(9, (3, 3, 3), 2), (16, (4, 4, 4, 4), 4),
+                           (11, (1, 3, 3, 4), 2)]:
+        words = jnp.asarray(
+            rng.integers(0, 2 ** 32, size=(k, 40), dtype=np.uint32)
+        )
+        tree = np.asarray(consensus.tree_vote_popcount(words, leaves))
+        flat = np.asarray(kops.vote_popcount(words))
+        same = bool(np.array_equal(tree, flat))
+        bit_exact = bit_exact and same
+        vote_cases.append({"clients": k, "leaf_sizes": list(leaves),
+                           "fan_out": fan, "bit_exact": same})
+
+    return {
+        "bit_exact": bit_exact,
+        "clients": s,
+        "rounds": rounds,
+        "engine_cells": cells,
+        "vote_cases": vote_cases,
+    }
+
+
+def bench_hier(fast: bool = False, progress=None) -> dict:
+    from repro.fl import comms
+    from repro.launch.fedexec import HierTopology
+
+    m = 4096
+    fan_out = 32
+    client_counts = (
+        [1_000, 10_000, 1_000_000] if fast
+        else [1_000, 3_162, 10_000, 31_623, 100_000, 316_228, 1_000_000]
+    )
+
+    parity = _engine_parity(fast, progress=progress)
+
+    scaling = []
+    for s in client_counts:
+        topo = HierTopology.build(s, fan_out=fan_out)
+        hb = topo.round_bits(m)
+        row = {
+            "clients": s,
+            "fan_out": fan_out,
+            "tiers": hb["tiers"],
+            "root_ingress_bits": hb["root_ingress_bits"],
+            "flat_ingress_bits": s * m,
+            "uplink_bits": hb["uplink_bits"],
+            "downlink_bits": hb["downlink_bits"],
+            "tier_uplink_bits": hb["tier_uplink_bits"],
+            "simulated": s > REAL_RUN_LIMIT,
+        }
+        scaling.append(row)
+        if progress is not None:
+            progress(f"scale:{s}", row)
+
+    first, last = scaling[0], scaling[-1]
+    return {
+        "fast": fast,
+        "m": m,
+        "fan_out": fan_out,
+        "counter_merge_parity": parity,
+        "scaling": scaling,
+        "root_ingress_growth": (
+            last["root_ingress_bits"] / first["root_ingress_bits"]
+        ),
+        "flat_ingress_growth": (
+            last["flat_ingress_bits"] / first["flat_ingress_bits"]
+        ),
+        "simulated_note": SIMULATED_NOTE,
+    }
+
+
+def hier_markdown(results: dict) -> str:
+    lines = [
+        "# Hierarchical federation: root ingress vs client count",
+        "",
+        f"m = {results['m']} sketch bits, fan-out {results['fan_out']}; "
+        f"counter-merge parity bit_exact = "
+        f"{results['counter_merge_parity']['bit_exact']}.",
+        "",
+        "| clients | tiers | root ingress (bits) | flat server (bits) | "
+        "ratio | simulated |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in results["scaling"]:
+        lines.append(
+            f"| {r['clients']:,} | {r['tiers']} | {r['root_ingress_bits']:,} "
+            f"| {r['flat_ingress_bits']:,} "
+            f"| {r['flat_ingress_bits'] / r['root_ingress_bits']:.0f}x "
+            f"| {r['simulated']} |"
+        )
+    lines += ["", results["simulated_note"], ""]
+    return "\n".join(lines)
+
+
+def write_artifacts(results: dict, out_path: str | None = None) -> str:
+    """BENCH_hier.json writer; --fast runs land in BENCH_hier.fast.json and
+    never touch the canonical artifacts. The canonical run also renders
+    experiments/bench/HIER.md."""
+    fast = bool(results.get("fast"))
+    if out_path is None:
+        out_path = "BENCH_hier.fast.json" if fast else "BENCH_hier.json"
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    if not fast:
+        os.makedirs("experiments/bench", exist_ok=True)
+        with open("experiments/bench/BENCH_hier.json", "w") as f:
+            json.dump(results, f, indent=2)
+        with open("experiments/bench/HIER.md", "w") as f:
+            f.write(hier_markdown(results))
+    return out_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    results = bench_hier(
+        fast=args.fast,
+        progress=lambda tag, c: print(f"{tag:16s} {json.dumps(c)[:110]}",
+                                      flush=True),
+    )
+    print(f"note: {SIMULATED_NOTE}")
+    print(
+        f"root ingress growth 10^3 -> 10^6 clients: "
+        f"{results['root_ingress_growth']:.2f}x (flat: "
+        f"{results['flat_ingress_growth']:.0f}x)"
+    )
+    path = write_artifacts(results, args.out)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

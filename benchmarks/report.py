@@ -52,6 +52,11 @@ BENCH_SCHEMAS = {
         "config", "m", "honest", "garbage_parity.bit_exact",
         "signflip_curve", "rr_curve", "recovery.recovered_frac",
     ],
+    "BENCH_hier": [
+        "m", "fan_out", "counter_merge_parity.bit_exact",
+        "counter_merge_parity.engine_cells", "scaling",
+        "root_ingress_growth", "simulated_note",
+    ],
 }
 
 
@@ -102,6 +107,16 @@ def validate_bench_artifacts(fast: bool, root: str = ".") -> list[str]:
 
             try:
                 validate_robust(obj)
+            except ValueError as e:
+                problems.append(f"{path}: {e}")
+        if stem == "BENCH_hier" and not any(p.startswith(path) for p in problems):
+            # counter-merge parity cell present + bit-exact, every scaling
+            # row's per-tier bits re-derive from fl/comms.hier_round_bits,
+            # tree root ingress O(log S) while the flat server's is linear
+            from repro.exp.report import validate_hier
+
+            try:
+                validate_hier(obj)
             except ValueError as e:
                 problems.append(f"{path}: {e}")
     return problems

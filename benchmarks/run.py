@@ -34,6 +34,11 @@ same protocols); the full-scale numbers live in the dry-run roofline.
                   randomized-response epsilon, garbage-neutralization
                   parity, recovery gate (BENCH_robust.json; --fast emits
                   BENCH_robust.fast.json)
+  hier            hierarchical tree-of-aggregators: counter-merge parity
+                  (tree vote bit-exact vs the flat popcount server) and
+                  the root-ingress-vs-client-count scaling curve 10^3 ->
+                  10^6 clients, billed via fl/comms.hier_round_bits
+                  (BENCH_hier.json; --fast emits BENCH_hier.fast.json)
   roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
@@ -384,6 +389,26 @@ def bench_robust(fast=False):
     return results
 
 
+def bench_hier(fast=False):
+    """Tree-of-aggregators parity + root-ingress scaling — emits
+    BENCH_hier.json (fast: BENCH_hier.fast.json; see
+    benchmarks/hier_bench.py)."""
+    from benchmarks import hier_bench
+
+    results = hier_bench.bench_hier(fast=fast)
+    par = results["counter_merge_parity"]
+    emit("hier/parity", 0.0,
+         f"bit_exact={'OK' if par['bit_exact'] else 'FAIL'} "
+         f"topologies={len(par['engine_cells'])}")
+    last = results["scaling"][-1]
+    emit("hier/scaling", 0.0,
+         f"clients={last['clients']} root_ingress_bits={last['root_ingress_bits']} "
+         f"flat_bits={last['flat_ingress_bits']} "
+         f"growth={results['root_ingress_growth']:.2f}x")
+    hier_bench.write_artifacts(results)
+    return results
+
+
 def bench_async(fast=False):
     """Async-vs-sync time-to-target — emits BENCH_async.json (fast:
     BENCH_async.fast.json; see benchmarks/async_bench.py)."""
@@ -418,6 +443,7 @@ BENCHES = {
     "exp": bench_exp,
     "async": bench_async,
     "robust": bench_robust,
+    "hier": bench_hier,
     "roofline": bench_roofline,
 }
 

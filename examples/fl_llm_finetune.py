@@ -25,22 +25,33 @@ from repro.data import synthetic as ds
 from repro.fl import comms
 from repro.models import lm
 
+# every size knob also reads an FLLM_* env var so the CI smoke test
+# (tests/test_examples_smoke.py) can shrink the run without forking the file
+_env = lambda name, default: int(os.environ.get(name, default))
 ap = argparse.ArgumentParser()
-ap.add_argument("--rounds", type=int, default=200)
-ap.add_argument("--clients", type=int, default=4)
-ap.add_argument("--participate", type=int, default=3)
-ap.add_argument("--local-steps", type=int, default=2)
-ap.add_argument("--batch", type=int, default=4)
-ap.add_argument("--seq", type=int, default=128)
-ap.add_argument("--d-model", type=int, default=768)
-ap.add_argument("--layers", type=int, default=12)
+ap.add_argument("--rounds", type=int, default=_env("FLLM_ROUNDS", 200))
+ap.add_argument("--clients", type=int, default=_env("FLLM_CLIENTS", 4))
+ap.add_argument("--participate", type=int,
+                default=_env("FLLM_PARTICIPATE", 3))
+ap.add_argument("--local-steps", type=int, default=_env("FLLM_LOCAL_STEPS", 2))
+ap.add_argument("--batch", type=int, default=_env("FLLM_BATCH", 4))
+ap.add_argument("--seq", type=int, default=_env("FLLM_SEQ", 128))
+ap.add_argument("--d-model", type=int, default=_env("FLLM_D_MODEL", 768))
+ap.add_argument("--layers", type=int, default=_env("FLLM_LAYERS", 12))
+ap.add_argument("--heads", type=int, default=_env("FLLM_HEADS", 12))
+ap.add_argument("--kv-heads", type=int, default=_env("FLLM_KV_HEADS", 4))
+ap.add_argument("--head-dim", type=int, default=_env("FLLM_HEAD_DIM", 64))
+ap.add_argument("--d-ff", type=int, default=_env("FLLM_D_FF", 2048))
+ap.add_argument("--vocab", type=int, default=_env("FLLM_VOCAB", 8192))
+ap.add_argument("--chunk", type=int, default=_env("FLLM_CHUNK", 16384))
 args = ap.parse_args()
 
 # ~100M-param member of the granite-8b family (same arch, smaller dims)
 cfg = dataclasses.replace(
     configs.get("granite-8b"),
-    n_layers=args.layers, d_model=args.d_model, n_heads=12, n_kv=4,
-    head_dim=64, d_ff=2048, vocab=8192, name="granite-100m",
+    n_layers=args.layers, d_model=args.d_model, n_heads=args.heads,
+    n_kv=args.kv_heads, head_dim=args.head_dim, d_ff=args.d_ff,
+    vocab=args.vocab, name="granite-100m",
 )
 print(f"arch: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
 
@@ -58,7 +69,7 @@ print(f"params per client: {n / 1e6:.1f}M")
 fl = PFed1BSConfig(
     num_clients=args.clients, participate=args.participate,
     local_steps=args.local_steps, lr=0.01, lam=5e-4, mu=1e-5, gamma=1e4,
-    m_ratio=0.1, chunk=16384,
+    m_ratio=0.1, chunk=args.chunk,
 )
 engine = PFed1BS(fl, loss_fn, template)
 state = engine.init(init_fn, jax.random.key(2))

@@ -60,6 +60,33 @@ def majority_vote_popcount(words: jax.Array) -> jax.Array:
     return kops.vote_popcount(words)
 
 
+def tree_vote_popcount(words: jax.Array, leaf_sizes, impl: str = "auto") -> jax.Array:
+    """Hierarchical uniform-weight vote: count at the leaves, merge counts,
+    finish once at the root (DESIGN.md §11).
+
+    Rows of `words` are split contiguously into leaves of the given sizes
+    (sum(leaf_sizes) == K; zero-size leaves allowed). Each leaf emits its
+    partial popcount counter, counters are summed, and the root thresholds
+    2*cnt >= K (tie -> +1). Because counting is integer addition, the
+    result is BIT-IDENTICAL to `majority_vote_popcount(words)` for every
+    partition and every merge order — the property a majority-of-majorities
+    tree does not have (tests/test_hier.py pins the 3-leaf counterexample).
+
+    words: (K, W) uint32; leaf_sizes: sequence of ints -> (W,) uint32.
+    """
+    k, nw = words.shape
+    sizes = [int(s) for s in leaf_sizes]
+    assert sum(sizes) == k, f"leaf sizes {sizes} must partition {k} rows"
+    counters, start = [], 0
+    for s in sizes:
+        counters.append(kops.popcount_partial(words[start : start + s], impl=impl))
+        start += s
+    if not counters:
+        counters = [jnp.zeros((nw, 32), jnp.int32)]
+    total = kops.merge_counters(jnp.stack(counters), impl=impl)
+    return kops.finish_vote_counts(total, k, impl=impl)
+
+
 def staleness_weights(tau: jax.Array, exponent: float) -> jax.Array:
     """Polynomial staleness discount 1/(1+tau)^p for buffered async votes.
 

@@ -106,6 +106,14 @@ class PFed1BSConfig:
     #                                exp/scenarios.py RandomizedResponse;
     #                                flips wire sign bits per (round, client),
     #                                billing unchanged (one bit is one bit).
+    topology: Any = None           # hierarchical aggregation tree
+    #                                (launch/fedexec.py::HierTopology, duck-
+    #                                typed like adversary): leaf shards emit
+    #                                partial popcount counters, tiers merge,
+    #                                the root finishes — bit-exact with the
+    #                                flat popcount vote (DESIGN.md §11).
+    #                                Requires sharded_round + vote="popcount";
+    #                                leaf sizes must sum to `participate`.
     defense: str = "none"          # "none" | "trim" (drop the trim_frac * S
     #                                most-disagreeing voters per vote) |
     #                                "reputation" (per-client EMA of sign-
@@ -156,6 +164,15 @@ class PFed1BS:
         if cfg.defense == "reputation":
             # the popcount vote is weightless — reputation has nowhere to act
             assert cfg.vote == "exact", "defense='reputation' needs vote='exact'"
+        if cfg.topology is not None:
+            # the counter tree is the popcount vote split at the leaf/root
+            # boundary — it has no float-weighted form (DESIGN.md §11)
+            assert cfg.sharded_round, "topology needs sharded_round=True"
+            assert cfg.vote == "popcount", "topology needs vote='popcount'"
+            assert cfg.topology.num_clients == cfg.participate, (
+                f"topology covers {cfg.topology.num_clients} clients, "
+                f"round samples {cfg.participate}"
+            )
         self.cfg = cfg
         self.loss_fn = loss_fn     # loss_fn(params, batch) -> scalar
         self.n = flatten.tree_size(params_template)
@@ -397,6 +414,10 @@ class PFed1BS:
         if self.cfg.sharded_round:
             from repro.launch import fedexec  # trace-time import; no cycle
 
+            if self.cfg.topology is not None:
+                return fedexec.hier_round(
+                    self, state, batches, weights, key, participants
+                )
             return fedexec.sharded_round(
                 self, state, batches, weights, key, participants
             )

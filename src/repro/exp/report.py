@@ -146,6 +146,72 @@ def validate_robust(results: dict, min_recovery: float = 0.5) -> None:
             raise ValueError(f"rr_curve cell has invalid epsilon: {c}")
 
 
+HIER_TOP_KEYS = ("m", "fan_out", "counter_merge_parity", "scaling")
+
+
+def validate_hier(results: dict, max_root_growth: float = 8.0) -> None:
+    """Raise ValueError unless `results` is a well-formed BENCH_hier
+    artifact satisfying the §11 invariants:
+
+      1. the counter-merge-equals-flat parity cell is present and
+         bit_exact (every engine topology AND every pure vote case);
+      2. every scaling row's bits re-derive EXACTLY from
+         fl/comms.hier_round_bits over the HierTopology the executor
+         would build from (clients, fan_out) — the artifact carries no
+         number this module cannot recompute;
+      3. the headline claim holds: flat-server root ingress grows
+         linearly in clients while the tree root's stays O(log S)
+         (bounded by `max_root_growth` across the whole curve).
+    """
+    from repro.fl import comms
+    from repro.launch.fedexec import HierTopology
+
+    for key in HIER_TOP_KEYS:
+        if key not in results:
+            raise ValueError(f"hier artifact missing top-level key {key!r}")
+    par = results["counter_merge_parity"]
+    if par.get("bit_exact") is not True:
+        raise ValueError("counter_merge_parity.bit_exact is not True")
+    cells = list(par.get("engine_cells", [])) + list(par.get("vote_cases", []))
+    if not cells:
+        raise ValueError("counter_merge_parity carries no cells")
+    bad = [c for c in cells if c.get("bit_exact") is not True]
+    if bad:
+        raise ValueError(f"non-bit-exact parity cells: {bad}")
+
+    m = results["m"]
+    rows = results["scaling"]
+    if len(rows) < 2:
+        raise ValueError("scaling needs >= 2 client counts for a curve")
+    for row in rows:
+        topo = HierTopology.build(int(row["clients"]), int(row["fan_out"]))
+        hb = comms.hier_round_bits(
+            m=m, leaf_widths=topo.leaf_sizes, fan_out=topo.fan_out
+        )
+        for key in ("tiers", "root_ingress_bits", "uplink_bits",
+                    "downlink_bits", "tier_uplink_bits"):
+            if row[key] != hb[key]:
+                raise ValueError(
+                    f"scaling row clients={row['clients']}: {key}="
+                    f"{row[key]} does not re-derive from fl/comms ({hb[key]})"
+                )
+        if row["flat_ingress_bits"] != int(row["clients"]) * m:
+            raise ValueError(
+                f"scaling row clients={row['clients']}: flat_ingress_bits="
+                f"{row['flat_ingress_bits']} != clients*m"
+            )
+    first, last = rows[0], rows[-1]
+    lin = last["clients"] / first["clients"]
+    if last["flat_ingress_bits"] / first["flat_ingress_bits"] != lin:
+        raise ValueError("flat ingress did not grow linearly in clients")
+    growth = last["root_ingress_bits"] / first["root_ingress_bits"]
+    if growth > max_root_growth:
+        raise ValueError(
+            f"tree root ingress grew {growth:.2f}x over a {lin:.0f}x client "
+            f"range — not the claimed O(log S) (bound {max_root_growth}x)"
+        )
+
+
 def robust_markdown(results: dict) -> str:
     """README-style digest: accuracy vs adversary fraction x defense, and
     accuracy vs epsilon."""

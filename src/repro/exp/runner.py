@@ -97,19 +97,32 @@ def build_engine(algo: str, cfg: ExpConfig, capacity: int, loss_fn, template,
     sharded = cfg.executor == "sharded"
     adversary = scenario.adversary if scenario is not None else None
     privacy = scenario.privacy if scenario is not None else None
+    topology = scenario.topology if scenario is not None else None
     if algo == "pfed1bs":
+        # the topology axis builds a HierTopology over the scenario's
+        # capacity; it implies the sharded popcount executor (counters are
+        # the popcount vote split at the leaf/root boundary, DESIGN.md §11)
+        topo = topology.build(capacity) if topology is not None else None
         return PFed1BS(
             PFed1BSConfig(
                 num_clients=cfg.num_clients, participate=capacity,
                 local_steps=cfg.local_steps, lr=cfg.lr, lam=cfg.lam,
                 mu=cfg.mu, gamma=cfg.gamma, m_ratio=cfg.m_ratio,
                 chunk=cfg.chunk, sketch_seed=cfg.seed,
-                sharded_round=sharded, fed_shards=cfg.fed_shards,
+                sharded_round=sharded or topo is not None,
+                fed_shards=cfg.fed_shards,
+                vote="popcount" if topo is not None else "exact",
+                topology=topo,
                 adversary=adversary, privacy=privacy,
                 defense=cfg.defense, trim_frac=cfg.trim_frac,
                 rep_beta=cfg.rep_beta,
             ),
             loss_fn, template,
+        )
+    if topology is not None:
+        raise ValueError(
+            f"the topology axis aggregates one-bit vote counters; baseline "
+            f"{algo!r} transmits float payloads with nothing to count"
         )
     if adversary is not None or privacy is not None:
         raise ValueError(
@@ -187,10 +200,27 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
     bits = comms.accumulate_round_bits(
         algo, n=n, m=m_dim, s_per_round=s_per_round, num_tensors=num_tensors
     )
+    topo_tag = None
+    if algo == "pfed1bs" and scenario.topology is not None:
+        # tree cells bill the interior tiers on top of the flat client
+        # uplink, and one consensus broadcast per tier instead of one total
+        # (fl/comms.hier_round_bits; the executor's own metrics agree)
+        topo = scenario.topology.build(capacity)
+        hb = comms.hier_round_bits(
+            m=m_dim, leaf_widths=topo.leaf_sizes, fan_out=topo.fan_out
+        )
+        up = bits["uplink_bits"] + sum(hb["tier_uplink_bits"]) * cfg.rounds
+        down = bits["downlink_bits"] + (hb["downlink_bits"] - m_dim) * cfg.rounds
+        bits = {
+            **bits, "uplink_bits": up, "downlink_bits": down,
+            "total_bits": up + down, "total_mb": (up + down) / 8e6,
+        }
+        topo_tag = f"tree-fan{topo.fan_out}"
     adv = scenario.adversary
     return {
         "algo": algo,
         "scenario": scenario.name,
+        "topology": topo_tag,
         "acc": acc,
         "acc_std": acc_std,
         # robustness axes of the cell (DESIGN.md §10; None/"none" = honest)

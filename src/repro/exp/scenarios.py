@@ -272,6 +272,26 @@ class RandomizedResponse:
         return rounds.rr_debias(self.epsilon)
 
 
+# --- topology axis (DESIGN.md §11) -------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TreeAggregation:
+    """Hierarchical tree-of-aggregators federation: leaves of width
+    <= fan_out emit partial popcount counters, interior tiers of arity
+    `fan_out` merge them, the root finishes the vote — bit-exact with the
+    flat popcount vote for every shape (launch/fedexec.py::hier_round).
+    `build(s)` materializes the balanced HierTopology for a cohort of S;
+    the lazy import keeps `exp` importable without the launch tier."""
+    fan_out: int = 4
+
+    def __post_init__(self):
+        assert self.fan_out >= 2, self.fan_out
+
+    def build(self, s: int):
+        from repro.launch.fedexec import HierTopology
+        return HierTopology.build(s, self.fan_out)
+
+
 # --- the composite -----------------------------------------------------------
 
 Partition = DirichletPartition | LabelSkewPartition | IIDPartition
@@ -297,6 +317,10 @@ class Scenario:
     #                                not modeled (sync-only scenario)
     adversary: object | None = None  # Adversary dataclass; None = all honest
     privacy: object | None = None    # RandomizedResponse; None = raw signs
+    topology: object | None = None   # TreeAggregation; None = flat (star)
+    #                                  server — set, the harness runs the
+    #                                  round through the counter tree
+    #                                  (fedexec.hier_round, DESIGN.md §11)
 
     def capacity(self, num_clients: int) -> int:
         return self.participation.capacity(num_clients)
@@ -380,6 +404,24 @@ def robust_matrix() -> dict[str, Scenario]:
         "rr-eps2": Scenario(
             "rr-eps2", **base, privacy=RandomizedResponse(2.0)
         ),
+    }
+
+
+def hier_matrix() -> dict[str, Scenario]:
+    """Topology-axis registry (benchmarks/hier_bench.py): one shared
+    data/participation base, fan-out sweeping the tree shape from binary
+    to wide. The flat cell is the parity anchor every tree cell must match
+    bit-exactly (the §11 contract)."""
+    base = dict(partition=DirichletPartition(0.3),
+                participation=FullParticipation())
+    return {
+        "flat": Scenario("flat", **base),
+        "tree-fan2": Scenario("tree-fan2", **base,
+                              topology=TreeAggregation(fan_out=2)),
+        "tree-fan4": Scenario("tree-fan4", **base,
+                              topology=TreeAggregation(fan_out=4)),
+        "tree-fan16": Scenario("tree-fan16", **base,
+                               topology=TreeAggregation(fan_out=16)),
     }
 
 

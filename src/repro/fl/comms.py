@@ -108,6 +108,66 @@ def accumulate_round_bits(algo: str, *, n: int, m: int, s_per_round,
             "total_mb": (up + down) / 8e6, "rounds": rounds}
 
 
+def counter_bits(width: int) -> int:
+    """Bits per sketch coordinate of a partial popcount counter covering
+    `width` clients: the count lies in [0, width], so the wire format is
+    ceil(log2(width + 1)) bit planes of m bits each (width = 1 degenerates
+    to the 1-bit sketch itself). ISSUE/DESIGN shorthand says
+    ceil(log2(width)); the +1 is the honest closed-interval count — a
+    width-4 counter must represent the value 4 and needs 3 bits, not 2.
+    DESIGN.md §11 documents the divergence; validators re-derive from HERE.
+    """
+    width = int(width)
+    assert width >= 1, f"counter width must be positive, got {width}"
+    return width.bit_length()   # == ceil(log2(width + 1)) for width >= 1
+
+
+def hier_round_bits(*, m: int, leaf_widths, fan_out: int) -> dict:
+    """Per-tier wire cost of one hierarchical pFed1BS round (DESIGN.md §11).
+
+    Clients upload their m-bit sketches to their leaf aggregator (same
+    S*m uplink as the flat server — tier 0 bills identically). Each
+    aggregation tier then ships one partial counter per node upward:
+    a node covering `width` clients sends counter_bits(width) * m bits.
+    Tiers are formed by merging `fan_out` consecutive nodes until one
+    node (the root) remains; the last pre-root tier's traffic is the
+    ROOT INGRESS — with bounded fan-out it is
+    fan_out * counter_bits(~S/fan_out) * m = O(m log S), versus the flat
+    server's S * m = O(S m) ingress. Downlink is one m-bit consensus
+    broadcast per tier level (root -> edges -> ... -> clients).
+
+    m: sketch rows; leaf_widths: client count per leaf aggregator
+    (sum = S); fan_out: merge arity of the interior tiers. Returns
+    {client_uplink_bits, tier_uplink_bits (list, leaf->root order),
+    uplink_bits, root_ingress_bits, downlink_bits, tiers, total_bits,
+    total_mb} — decimal MB, same convention as round_bits.
+    """
+    widths = [int(w) for w in leaf_widths]
+    assert widths and all(w >= 1 for w in widths), widths
+    assert fan_out >= 2, f"fan-out must be >= 2, got {fan_out}"
+    s = sum(widths)
+    client_up = s * m
+    tier_up = []
+    while len(widths) > 1:
+        tier_up.append(sum(counter_bits(w) * m for w in widths))
+        widths = [sum(widths[i : i + fan_out])
+                  for i in range(0, len(widths), fan_out)]
+    tiers = len(tier_up) + 1                      # +1: the client->leaf tier
+    root_ingress = tier_up[-1] if tier_up else client_up
+    up = client_up + sum(tier_up)
+    down = tiers * m                              # one broadcast per level
+    return {
+        "client_uplink_bits": client_up,
+        "tier_uplink_bits": tier_up,
+        "uplink_bits": up,
+        "root_ingress_bits": root_ingress,
+        "downlink_bits": down,
+        "tiers": tiers,
+        "total_bits": up + down,
+        "total_mb": (up + down) / 8e6,
+    }
+
+
 def reduction_vs_fedavg(algo: str, **kw) -> float:
     """Fraction of FedAvg's per-round traffic removed (1 - this/fedavg)."""
     base = round_bits("fedavg", **kw)["total_bits"]

@@ -20,6 +20,20 @@ Kernels:
                          of the XOR, no unpack) — the Hamming-distance
                          measure of the trimmed packed vote (DESIGN.md §10);
                          callers row-sum the word counts
+
+Hierarchical tree aggregation (DESIGN.md §11) splits the popcount vote at
+the leaf/root boundary so edge tiers can merge without finishing:
+  popcount_partial_pallas    : (Kl, W) uint32 -> (W, 32) int32 per-position
+                               set-bit counts — a leaf's partial counter.
+                               Counts ride the same bit-sliced ripple-carry
+                               planes as the fused vote, then expand the
+                               P = bitlength(Kl) planes (not the Kl rows)
+                               into integer lanes
+  merge_counters_pallas      : (T, W, 32) int32 -> (W, 32) int32 exact sum
+                               — an interior tier merging child counters
+  finish_vote_counts_pallas  : (W, 32) int32 counts, static total k ->
+                               (W,) uint32 packed majority (2*cnt >= k,
+                               tie -> +1) — the root finishing the vote
 """
 from __future__ import annotations
 
@@ -133,6 +147,110 @@ def vote_popcount_pallas(words, *, block_words: int = 512, interpret: bool = Fal
         out_shape=jax.ShapeDtypeStruct((1, nw), jnp.uint32),
         interpret=interpret,
     )(words)
+    return out[0]
+
+
+def _popcount_partial_kernel(w_ref, o_ref):
+    """Leaf-side partial popcount: packed rows -> per-position counts.
+
+    Same bit-sliced ripple-carry accumulation as the fused vote kernel
+    (P = bitlength(Kl) uint32 planes, ~Kl*P bitwise ops), but instead of
+    thresholding, the P *planes* are expanded into integer lanes: count of
+    bit position b in word w is sum_j (bit b of plane_j[w]) << j. That is
+    P plane-expansions instead of Kl row-unpacks — the leaf pays the same
+    VPU cost as voting, yet emits mergeable counts. Output layout inside
+    the kernel is position-major (32, W) so the lane axis stays the
+    128-aligned word axis; the wrapper transposes to the (W, 32) oracle
+    layout.
+    """
+    k, nw = w_ref.shape
+    p = max(k.bit_length(), 1)
+    x = w_ref[...]
+    zero = jnp.zeros((1, nw), jnp.uint32)
+    planes = [zero] * p
+    for i in range(k):                       # static unroll over clients
+        carry = x[i : i + 1]
+        for j in range(p):                   # half-adder ripple into planes
+            planes[j], carry = planes[j] ^ carry, planes[j] & carry
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (32, 1), 0)
+    cnt = jnp.zeros((32, nw), jnp.int32)
+    for j in range(p):                       # expand planes, not rows
+        plane = jnp.broadcast_to(planes[j], (32, nw))
+        bits = ((plane >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+        cnt = cnt + (bits << j)
+    o_ref[...] = cnt
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "interpret"))
+def popcount_partial_pallas(words, *, block_words: int = 512, interpret: bool = False):
+    """Partial counter of a leaf shard: (Kl, W) uint32 -> (W, 32) int32."""
+    k, nw = words.shape
+    block_words = min(block_words, nw)
+    assert nw % block_words == 0
+    out = pl.pallas_call(
+        _popcount_partial_kernel,
+        grid=(nw // block_words,),
+        in_specs=[pl.BlockSpec((k, block_words), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((32, block_words), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((32, nw), jnp.int32),
+        interpret=interpret,
+    )(words)
+    return out.T
+
+
+def _merge_counters_kernel(c_ref, o_ref):
+    o_ref[...] = jnp.sum(c_ref[...], axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
+def merge_counters_pallas(counters, *, block_cols: int = 512, interpret: bool = False):
+    """Exact interior-tier merge: (T, W, 32) int32 -> (W, 32) int32.
+
+    Integer lane adds over the flattened (W*32) count axis — associativity
+    of the tree merge is inherited from integer addition, nothing subtle.
+    """
+    t, nw, _ = counters.shape
+    cols = nw * 32
+    flat = counters.astype(jnp.int32).reshape(t, cols)
+    block_cols = min(block_cols, cols)
+    assert cols % block_cols == 0
+    out = pl.pallas_call(
+        _merge_counters_kernel,
+        grid=(cols // block_cols,),
+        in_specs=[pl.BlockSpec((t, block_cols), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, block_cols), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, cols), jnp.int32),
+        interpret=interpret,
+    )(flat)
+    return out.reshape(nw, 32)
+
+
+def _finish_vote_kernel(c_ref, o_ref, *, k):
+    """Root-side finish: majority bit = 2*cnt >= k (tie -> +1), repacked."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (32, 1), 0)
+    maj = jnp.where(2 * c_ref[...] >= k, jnp.uint32(1), jnp.uint32(0)) << shifts
+    o_ref[...] = jnp.sum(maj, axis=0, keepdims=True).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_words", "interpret"))
+def finish_vote_counts_pallas(counts, *, k: int, block_words: int = 512,
+                              interpret: bool = False):
+    """Finish the vote from merged counters: (W, 32) int32 -> (W,) uint32.
+
+    k (the total voter count) is static; callers with a traced k (the
+    trimmed revote's kept-count) use the ref finisher via kernels/ops.
+    """
+    nw = counts.shape[0]
+    block_words = min(block_words, nw)
+    assert nw % block_words == 0
+    out = pl.pallas_call(
+        functools.partial(_finish_vote_kernel, k=k),
+        grid=(nw // block_words,),
+        in_specs=[pl.BlockSpec((32, block_words), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, block_words), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, nw), jnp.uint32),
+        interpret=interpret,
+    )(counts.T)
     return out[0]
 
 

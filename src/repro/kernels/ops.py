@@ -15,7 +15,10 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.fht import fht_pallas
 from repro.kernels.onebit import (
+    finish_vote_counts_pallas,
+    merge_counters_pallas,
     pack_pallas,
+    popcount_partial_pallas,
     unpack_pallas,
     vote_pallas,
     vote_popcount_pallas,
@@ -368,3 +371,69 @@ def vote_popcount(words: jax.Array, impl: str = "auto") -> jax.Array:
     wp = jnp.pad(words, ((0, 0), (0, wpad)))
     bw = _block_words_for(nw + wpad, 512)
     return vote_popcount_pallas(wp, block_words=bw, interpret=not _on_tpu())[:nw]
+
+
+# ---------------------------------------------------------------------------
+# Partial popcount counters — hierarchical tree aggregation (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def popcount_partial(words: jax.Array, impl: str = "auto") -> jax.Array:
+    """A leaf tier's partial popcount counter over its packed sketches.
+
+    words: (Kl, W) uint32 -> (W, 32) int32 per-(word, bit-position) set-bit
+    counts in [0, Kl]. Counters are sum-decomposable: summing the counters
+    of any row partition equals counting the flat matrix — the exactness
+    property the tree vote rests on (unlike sign-then-sign, see
+    core/consensus.tree_vote_popcount). An empty leaf (Kl = 0) counts to
+    all zeros on both paths.
+    """
+    if words.shape[0] == 0:
+        return jnp.zeros((words.shape[-1], 32), jnp.int32)
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.popcount_partial_ref(words)
+    nw = words.shape[-1]
+    wpad = (-nw) % 128
+    wp = jnp.pad(words, ((0, 0), (0, wpad)))
+    bw = _block_words_for(nw + wpad, 512)
+    return popcount_partial_pallas(wp, block_words=bw, interpret=not _on_tpu())[:nw]
+
+
+def merge_counters(counters: jax.Array, impl: str = "auto") -> jax.Array:
+    """Merge a stack of partial counters at an interior tier.
+
+    counters: (T, W, 32) int32 -> (W, 32) int32 elementwise integer sum —
+    exact, associative, commutative, so the tree shape cannot change the
+    totals. T = 0 merges to zeros.
+    """
+    if counters.shape[0] == 0:
+        return jnp.zeros(counters.shape[1:], jnp.int32)
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.merge_counters_ref(counters)
+    t, nw, _ = counters.shape
+    wpad = (-nw) % 4  # lane axis is the flattened W*32 — pad to 128 lanes
+    cp = jnp.pad(counters, ((0, 0), (0, wpad), (0, 0)))
+    bc = _block_words_for((nw + wpad) * 32, 512)
+    return merge_counters_pallas(cp, block_cols=bc, interpret=not _on_tpu())[:nw]
+
+
+def finish_vote_counts(counts: jax.Array, k, impl: str = "auto") -> jax.Array:
+    """Finish the majority vote at the root from fully merged counters.
+
+    counts: (W, 32) int32; k: total voters. Consensus bit is 2*cnt >= k
+    (tie -> +1, vote_popcount semantics; k = 0 gives all +1, matching a
+    zero-weight packed vote). A traced k — the trimmed revote's kept-count
+    is data-dependent — always takes the ref finisher; the Pallas kernel
+    needs k static.
+    """
+    impl = resolve_impl(impl)
+    if impl == "ref" or isinstance(k, jax.Array):
+        return _ref.finish_vote_counts_ref(counts, k)
+    nw = counts.shape[0]
+    wpad = (-nw) % 128
+    cp = jnp.pad(counts, ((0, wpad), (0, 0)))
+    bw = _block_words_for(nw + wpad, 512)
+    return finish_vote_counts_pallas(
+        cp, k=int(k), block_words=bw, interpret=not _on_tpu()
+    )[:nw]

@@ -136,8 +136,54 @@ def vote_popcount_ref(words: jax.Array) -> jax.Array:
     words: (K, W) uint32 -> (W,) uint32.
     """
     k = words.shape[0]
+    maj = finish_vote_counts_ref(popcount_partial_ref(words), k)
+    return maj
+
+
+# ---------------------------------------------------------------------------
+# Partial popcount counters (hierarchical tree aggregation, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# A leaf aggregator that holds only SOME of the K clients cannot finish the
+# majority vote — but it can count. `popcount_partial_ref` turns a leaf's
+# packed words into per-bit-position set-bit counts; counts are integers, so
+# merging two leaves is an exact elementwise sum (associative, commutative,
+# invariant to how the rows were split — the properties tests/test_hier.py
+# pins with hypothesis), and `finish_vote_counts_ref` at the root reproduces
+# `vote_popcount_ref` on the flat matrix BIT-exactly. Taking the sign at the
+# leaf instead (majority-of-majorities) destroys the margins and is NOT
+# equivalent — the pinned counterexample in tests/test_hier.py.
+
+def popcount_partial_ref(words: jax.Array) -> jax.Array:
+    """Partial popcount counter of a leaf's packed sketches: per (word, bit
+    position), the number of rows with that bit set.
+
+    words: (Kl, W) uint32 -> (W, 32) int32 counts in [0, Kl]. The (W, 32)
+    layout matches the 32-per-word bit packing: counter[w, b] counts bit b
+    of word w, i.e. sketch coordinate 32*w + b.
+    """
     shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = (words[..., None] >> shifts) & jnp.uint32(1)   # (K, W, 32)
-    cnt = jnp.sum(bits.astype(jnp.int32), axis=0)         # (W, 32)
-    maj = (2 * cnt >= k).astype(jnp.uint32) << shifts
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)   # (Kl, W, 32)
+    return jnp.sum(bits.astype(jnp.int32), axis=0)        # (W, 32)
+
+
+def merge_counters_ref(counters: jax.Array) -> jax.Array:
+    """Sum a stack of partial counters: (T, W, 32) int32 -> (W, 32) int32.
+
+    Integer addition — exact, associative, commutative; merging in any tree
+    shape yields the same totals as counting the flat matrix once.
+    """
+    return jnp.sum(counters.astype(jnp.int32), axis=0)
+
+
+def finish_vote_counts_ref(counts: jax.Array, k) -> jax.Array:
+    """Finish the majority vote from merged counters: consensus bit b of
+    word w is set iff 2*counts[w, b] >= k (tie -> +1, vote_popcount_ref's
+    convention; k = 0 packs all-ones, matching a zero-weight packed vote).
+
+    counts: (W, 32) int32; k: total voters (python int or traced int32).
+    Returns (W,) uint32 packed consensus.
+    """
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    maj = (2 * counts >= k).astype(jnp.uint32) << shifts
     return jnp.sum(maj, axis=-1).astype(jnp.uint32)

@@ -39,28 +39,91 @@ one executor family.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import consensus, rounds
+from repro.fl import comms
 from repro.kernels import ops as kops
 
 
-def sharded_round(eng, state, batches, weights, key, participants=None):
-    """One shard_map federation round. Same contract as PFed1BS.round:
-    batches (K, R, B, ...) pytree, weights (K,) p_k, optional externally
-    drawn participants (idx, active) -> (state', metrics).
+@dataclasses.dataclass(frozen=True)
+class HierTopology:
+    """Tree-of-aggregators shape over the sampled cohort (DESIGN.md §11).
 
-    Requires cfg.participate % cfg.fed_shards == 0 (checked at engine
-    construction); each fed shard owns S/F clients for the round.
+    The S sampled clients are split CONTIGUOUSLY into leaf aggregators of
+    the given sizes; interior tiers merge `fan_out` consecutive nodes at a
+    time until one root remains. Frozen/hashable so it can ride inside
+    PFed1BSConfig (a static jit argument) like the adversary/privacy axes.
+
+    leaf_sizes: clients per leaf (each >= 1, sum == S);
+    fan_out: merge arity of the interior tiers (>= 2).
+    """
+
+    leaf_sizes: tuple
+    fan_out: int = 4
+
+    def __post_init__(self):
+        assert self.fan_out >= 2, f"fan_out must be >= 2, got {self.fan_out}"
+        assert self.leaf_sizes and all(int(s) >= 1 for s in self.leaf_sizes), (
+            f"leaf sizes must be positive, got {self.leaf_sizes}"
+        )
+
+    @classmethod
+    def build(cls, s: int, fan_out: int = 4) -> "HierTopology":
+        """Balanced topology for S clients: ceil(S/fan_out) leaves of width
+        <= fan_out (the last leaf ragged), merged fan_out at a time."""
+        assert s >= 1
+        n_leaves = -(-s // fan_out)
+        base, extra = divmod(s, n_leaves)
+        sizes = tuple(base + (1 if i < extra else 0) for i in range(n_leaves))
+        return cls(leaf_sizes=sizes, fan_out=fan_out)
+
+    @property
+    def num_clients(self) -> int:
+        return sum(int(s) for s in self.leaf_sizes)
+
+    @property
+    def depth(self) -> int:
+        """Counter-merge levels above the leaves (0 when a single leaf IS
+        the root)."""
+        return len(self.level_widths()) - 1
+
+    def level_widths(self) -> list:
+        """Per-level node widths (clients covered), leaves first, ending
+        with the single root: [[leaf widths], [edge widths], ..., [S]]."""
+        widths = [int(s) for s in self.leaf_sizes]
+        levels = [widths]
+        while len(widths) > 1:
+            widths = [sum(widths[i : i + self.fan_out])
+                      for i in range(0, len(widths), self.fan_out)]
+            levels.append(widths)
+        return levels
+
+    def round_bits(self, m: int) -> dict:
+        """Per-tier Table-2 accounting of one round at sketch size m
+        (fl/comms.hier_round_bits on this topology)."""
+        return comms.hier_round_bits(
+            m=m, leaf_widths=self.leaf_sizes, fan_out=self.fan_out
+        )
+
+
+def _client_wire(eng, state, batches, weights, key, participants):
+    """The collective-free client side shared by EVERY fed-mesh executor:
+    draw the cohort, shard it over the `fed` axis, run local steps + sketch
+    + (EF, corruption, RR flips) per shard, and emit the packed uplink.
+
+    Returns (idx, active, w_s, res) where res holds {"upd", "task_loss",
+    "packed"} (+"zs" under diagnostics, +"ef" under error feedback), each
+    with leading axis S. `res["packed"]` is the (S, ceil(m/32)) uint32 wire
+    uplink — the flat executor votes on it directly; the hierarchical
+    executor counts it at the leaves (hier_round).
     """
     cfg = eng.cfg
-    mesh = eng.fed_mesh
-    m = eng.m
-    pad = (-m) % 32
-    nw = (m + pad) // 32
 
     # partial participation: sample S of K without replacement (replicated —
     # every shard derives the same draw from the same key). Dropped-out rows
@@ -113,11 +176,30 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
         out_specs["ef"] = fed
     res = shard_map(
         client_shards,
-        mesh=mesh,
+        mesh=eng.fed_mesh,
         in_specs=(fed, fed, fed, P(), P(), fed),
         out_specs=out_specs,
         check_rep=False,
     )(clients_s, batches_s, idx, state.round, state.v, ef_s)
+    return idx, active, w_s, res
+
+
+def sharded_round(eng, state, batches, weights, key, participants=None):
+    """One shard_map federation round. Same contract as PFed1BS.round:
+    batches (K, R, B, ...) pytree, weights (K,) p_k, optional externally
+    drawn participants (idx, active) -> (state', metrics).
+
+    Requires cfg.participate % cfg.fed_shards == 0 (checked at engine
+    construction); each fed shard owns S/F clients for the round.
+    """
+    cfg = eng.cfg
+    m = eng.m
+    pad = (-m) % 32
+    nw = (m + pad) // 32
+
+    idx, active, w_s, res = _client_wire(
+        eng, state, batches, weights, key, participants
+    )
 
     # ---- the wire ----------------------------------------------------------
     # res["packed"] is the (S, nw) uint32 uplink; replicating it for the
@@ -184,6 +266,140 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
         )
     # FLState is a NamedTuple; _replace avoids importing core from launch
     # (core.pfed1bs lazily imports this module inside round()).
+    state = state._replace(
+        clients=clients, v=v_new, round=state.round + 1, ef=new_ef,
+        rep=new_rep,
+    )
+    return state, metrics
+
+
+def tree_counts(packed, topo):
+    """Aggregate packed uplink words through the topology's counter tree:
+    per-leaf partial popcount counters, merged `fan_out` consecutive nodes
+    at a time until the root holds the (W, 32) int32 global counts.
+
+    Merge order follows the topology level by level to mirror what a real
+    deployment ships — though by integer associativity ANY order yields the
+    same counts (core/consensus.tree_vote_popcount's contract).
+    """
+    counters, start = [], 0
+    for ls in topo.leaf_sizes:
+        counters.append(kops.popcount_partial(packed[start : start + int(ls)]))
+        start += int(ls)
+    while len(counters) > 1:
+        counters = [
+            kops.merge_counters(jnp.stack(counters[i : i + topo.fan_out]))
+            for i in range(0, len(counters), topo.fan_out)
+        ]
+    return counters[0]
+
+
+def hier_round(eng, state, batches, weights, key, participants=None):
+    """One hierarchical federation round (DESIGN.md §11): the client side is
+    the SAME collective-free shard_map as `sharded_round` (_client_wire),
+    but the uplink words are aggregated through cfg.topology's counter tree
+    — leaves emit partial popcount counters, interior tiers sum them, and
+    only the root finishes the vote. Bit-exact with the flat popcount
+    executor for every topology (tests/test_hier.py), because counting is
+    integer addition; the win is the wire shape: root ingress is
+    fan_out * ceil(log2(width+1)) * m bits instead of S * m
+    (fl/comms.hier_round_bits).
+
+    Defense="trim" runs the SAME two-pass rank-and-drop as
+    trimmed_vote_packed, with both votes finished from tree counts and the
+    Hamming distances computable leaf-locally against the broadcast
+    provisional consensus; the RANKING itself is root-side — it needs the
+    global order, which is exactly why the defended votes live at the root
+    (ISSUE 7 / PR 6 design). Bit-exact with the flat trimmed packed vote
+    since every weight is 0/1: the float vote sum 2*cnt - k is
+    integer-exact in fp32. RandomizedResponse debiasing is a uniform
+    positive weight scaling — provably a no-op on an unweighted sign vote —
+    so the popcount paths (flat and tree) coincide with the debiased vote
+    by construction.
+
+    Requires cfg.vote="popcount" and sum(topology.leaf_sizes) ==
+    cfg.participate (checked at engine construction).
+    """
+    cfg = eng.cfg
+    topo = cfg.topology
+    m = eng.m
+    pad = (-m) % 32
+    nw = (m + pad) // 32
+    s = cfg.participate
+
+    idx, active, w_s, res = _client_wire(
+        eng, state, batches, weights, key, participants
+    )
+    packed = res["packed"]                                   # (S, nw) uint32
+
+    new_rep = state.rep
+    if cfg.defense == "trim":
+        # Pass 1 — provisional consensus over the ACTIVE voters: inactive
+        # rows' words are zeroed (contributing nothing to any count) and the
+        # threshold is the active head-count, which reproduces
+        # vote_packed_trimmed's unweighted 0/1-weight float vote exactly.
+        aw = active > 0
+        voters = jnp.sum(aw.astype(jnp.int32))
+        vw0 = kops.finish_vote_counts(
+            tree_counts(jnp.where(aw[:, None], packed, jnp.uint32(0)), topo),
+            voters,
+        )
+        # Leaf-local disagreement vs the broadcast provisional consensus;
+        # ranking/trim happen at the root where the global order exists.
+        d = kops.hamming_packed(packed, vw0)
+        score = jnp.where(active > 0, d, -1)                 # non-voters last
+        t = jnp.minimum(jnp.asarray(eng.trim_count, jnp.int32),
+                        jnp.maximum(voters - 1, 0))
+        order = jnp.argsort(-score)                          # stable ties
+        ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+        kept = jnp.where(ranks < t, 0.0, active)
+        # Pass 2 — revote over the kept voters through the tree again.
+        kw = kept > 0
+        vw = kops.finish_vote_counts(
+            tree_counts(jnp.where(kw[:, None], packed, jnp.uint32(0)), topo),
+            jnp.sum(kw.astype(jnp.int32)),
+        )
+    else:
+        # undefended: count ALL S sampled rows, threshold at S — identical
+        # to majority_vote_popcount(packed) (the flat executor's object).
+        vw = kops.finish_vote_counts(tree_counts(packed, topo), s)
+    v_new = kops.unpack_signs(vw)[:m]
+
+    # ---- simulator state bookkeeping (not wire traffic) --------------------
+    clients = rounds.scatter_rows(state.clients, idx, res["upd"], active)
+    new_ef = state.ef
+    if cfg.error_feedback:
+        ef_rows = jnp.where(active[:, None] > 0, res["ef"], state.ef[idx])
+        new_ef = state.ef.at[idx].set(ef_rows)
+
+    # per-tier billing: client->leaf uplink is the realized sum(active)*m
+    # (a dropped-out client transmits nothing); the aggregator tiers always
+    # ship their counters — counter bits depend on tier WIDTH, not on how
+    # many of the covered clients showed up (a counter of a quiet subtree
+    # is a valid all-zero count). Static per topology, so python ints here.
+    hb = topo.round_bits(m)
+    tier_bits = sum(hb["tier_uplink_bits"])
+    w_norm = jnp.maximum(jnp.sum(w_s), 1e-9)
+    metrics = {
+        "task_loss": jnp.sum(res["task_loss"] * w_s) / w_norm,
+        "uplink_bits": jnp.sum(active) * m + tier_bits,
+        "downlink_bits": jnp.float32(hb["downlink_bits"]),
+        "packed_words": jnp.float32(nw),
+        "tier_uplink_bits": jnp.float32(tier_bits),
+        "root_ingress_bits": jnp.float32(hb["root_ingress_bits"]),
+        "tiers": jnp.float32(hb["tiers"]),
+        # same uniformity tripwire as the flat popcount executor
+        "vote_uniform_ok": jnp.all(w_s == w_s[0]).astype(jnp.float32),
+    }
+    if cfg.diagnostics:
+        zs = res["zs"]
+        corr = zs + state.ef[idx] if cfg.error_feedback else zs
+        metrics["potential"] = eng._potential_from_sketches(
+            res["upd"], zs, v_new, res["task_loss"], w_s
+        )
+        metrics["sign_agreement"] = jnp.mean(
+            (corr * v_new[None, :] > 0).astype(jnp.float32)
+        )
     state = state._replace(
         clients=clients, v=v_new, round=state.round + 1, ef=new_ef,
         rep=new_rep,

@@ -12,11 +12,18 @@ queue is bit-exact with the synchronous fused round
   client.py   per-client async state (download version, in-flight flag)
   server.py   buffered aggregator + the AsyncSimulator event loop
   metrics.py  wall-clock-vs-bits accounting on top of fl/comms
+  hier.py     tree-of-aggregators tier: per-tier latency + buffers over
+              partial popcount counters (DESIGN.md §11)
 """
 from repro.sim.clock import (  # noqa: F401
     ConstantLatency,
     ComputeNetworkLatency,
     EventQueue,
     StragglerTailLatency,
+)
+from repro.sim.hier import (  # noqa: F401
+    HierAsyncSimulator,
+    HierSimConfig,
+    TierSpec,
 )
 from repro.sim.server import AsyncConfig, AsyncSimulator  # noqa: F401

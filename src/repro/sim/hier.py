@@ -1,0 +1,389 @@
+"""Event-driven hierarchical aggregation tier (DESIGN.md §11).
+
+The async tier (sim/server.py) models WHEN uploads land at one flat
+server; this module models WHERE they land — a tree of edge aggregators
+(launch/fedexec.py::HierTopology) in which every message is a partial
+popcount counter, merged on arrival. Virtual time, same deterministic
+EventQueue as the flat simulator.
+
+Per consensus version:
+
+  * the cohort is dispatched; each active client's m-bit sketch upload
+    lands at its LEAF aggregator after a client latency draw. A client
+    upload IS a width-1 counter (counter_bits(1) = 1 bit/coordinate —
+    the one-bit sketch is the degenerate partial counter), so every hop
+    in the tree carries the same object: (counts, rows_counted);
+  * each aggregator node buffers incoming contributions. When its whole
+    expected subtree has landed it forwards the merged counter to its
+    parent after that tier's latency draw; a bounded `buffer_size` makes
+    it EAGER instead — every `buffer_size` arrivals it forwards a partial
+    counter and resets. Partial merges are exact (integer sums), so eager
+    forwarding changes WHEN bits move and how many counter messages are
+    paid, never the root's totals;
+  * the root finishes the vote (2*cnt >= k over the arrived rows) once
+    every expected row is counted, broadcasts one m-bit consensus per
+    tier level, scatters client params, and dispatches the next cohort.
+
+KEYSTONE INVARIANT (tests/test_hier.py): with zero latency everywhere,
+full participation and full fan-in buffers, the drained consensus
+sequence is BIT-EXACT with the synchronous hierarchical executor
+(fedexec.hier_round) — which is itself bit-exact with the flat popcount
+vote. Adversary / privacy axes ride the shared client-side program
+(cohort_update + privatize_uplink, keyed by the dispatch version), so
+injection is executor-invariant here too.
+
+Billing: every message is time-stamped with its tier level and the
+emitting node's client WIDTH; `HierSimReport.check_billing` re-derives
+each message's bits from fl/comms.counter_bits (tier 0: the m-bit
+sketch; tier L: counter_bits(width) * m) and each version's downlink as
+one m-bit broadcast per tier level — the hierarchical analogue of the
+flat tier's accumulate_round_bits re-invoice. With full fan-in buffers a
+version's total equals HierTopology.round_bits(m) exactly.
+
+Defended votes are OUT of this tier by design: trimming needs the global
+disagreement ranking, which only the root has — run defense through the
+synchronous hier_round (where the root holds it) or the flat async tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rounds
+from repro.fl import comms
+from repro.kernels import ops as kops
+from repro.sim.clock import ConstantLatency, EventQueue, LatencyModel
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One aggregator tier's behavior: the latency of forwarding a counter
+    one hop up, and how many buffered contributions trigger an eager
+    partial forward (None: full fan-in — forward once, when the node's
+    whole expected subtree has landed)."""
+    latency: LatencyModel = ConstantLatency(0.0)
+    buffer_size: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class HierSimConfig:
+    """Hierarchical-sim knobs. The all-defaults corner (zero latency, full
+    fan-in) is the hier_round parity configuration."""
+    topology: object                     # launch/fedexec.py::HierTopology
+    max_versions: int = 4
+    seed: int = 0
+    client_latency: LatencyModel = ConstantLatency(0.0)
+    tiers: tuple = ()                    # TierSpec per merge level, leaf->root;
+    #                                      missing levels default to TierSpec()
+
+    def tier_spec(self, level: int) -> TierSpec:
+        return self.tiers[level] if level < len(self.tiers) else TierSpec()
+
+
+@dataclasses.dataclass
+class HierMeter:
+    """Time-stamped per-tier billing. Uplink events: (t, tier_level,
+    node_width, bits) — tier 0 is the client->leaf sketch hop; downlink
+    events: (t, bits) consensus broadcasts."""
+    m: int
+    uplink_events: list = dataclasses.field(default_factory=list)
+    downlink_events: list = dataclasses.field(default_factory=list)
+
+    def bill_uplink(self, t: float, tier: int, width: int) -> None:
+        bits = self.m if tier == 0 else comms.counter_bits(width) * self.m
+        self.uplink_events.append((float(t), int(tier), int(width), bits))
+
+    def bill_downlink(self, t: float, levels: int) -> None:
+        for _ in range(levels):
+            self.downlink_events.append((float(t), self.m))
+
+    @property
+    def uplink_bits(self) -> int:
+        return sum(b for _, _, _, b in self.uplink_events)
+
+    @property
+    def downlink_bits(self) -> int:
+        return sum(b for _, b in self.downlink_events)
+
+    @property
+    def total_bits(self) -> int:
+        return self.uplink_bits + self.downlink_bits
+
+
+@dataclasses.dataclass
+class HierFlushRecord:
+    version: int          # consensus version this root finish PRODUCED
+    t: float              # virtual time of the root finish
+    arrivals: int         # client uploads counted into this version
+    counter_messages: int  # aggregator->parent messages this version paid
+    task_loss: float
+
+
+@dataclasses.dataclass
+class HierSimReport:
+    """One hierarchical run, fully re-derivable."""
+    m: int
+    topology: object
+    flushes: list = dataclasses.field(default_factory=list)
+    meter: HierMeter | None = None
+
+    @property
+    def versions(self) -> int:
+        return len(self.flushes)
+
+    @property
+    def final_t(self) -> float:
+        return self.flushes[-1].t if self.flushes else 0.0
+
+    def expected_bits(self) -> dict:
+        """Re-derive the invoice from fl/comms: every logged uplink message
+        re-bills from its (tier, width) — m bits for a client sketch,
+        counter_bits(width) * m for an aggregator counter — and every
+        version pays one m-bit broadcast per tier level."""
+        up = 0
+        for _, tier, width, _ in self.meter.uplink_events:
+            up += self.m if tier == 0 else comms.counter_bits(width) * self.m
+        levels = len(self.topology.level_widths())
+        return {"uplink_bits": up,
+                "downlink_bits": self.versions * levels * self.m}
+
+    def check_billing(self) -> None:
+        """Raise ValueError unless the meter re-derives exactly from
+        fl/comms over the recorded message log."""
+        expect = self.expected_bits()
+        got = {"uplink_bits": self.meter.uplink_bits,
+               "downlink_bits": self.meter.downlink_bits}
+        if got != expect:
+            raise ValueError(
+                f"hier billing mismatch: meter {got} != comms re-invoice "
+                f"{expect}"
+            )
+
+    def to_dict(self) -> dict:
+        return {
+            "m": self.m,
+            "versions": self.versions,
+            "final_t": self.final_t,
+            "arrivals_per_version": [f.arrivals for f in self.flushes],
+            "counter_messages_per_version": [
+                f.counter_messages for f in self.flushes
+            ],
+            "uplink_bits": self.meter.uplink_bits,
+            "downlink_bits": self.meter.downlink_bits,
+            "total_bits": self.meter.total_bits,
+            "task_loss_curve": [f.task_loss for f in self.flushes],
+        }
+
+
+class _Node:
+    """One aggregator's per-version accumulation state."""
+
+    def __init__(self, width: int, expected_rows: int, nw: int):
+        self.width = width                # clients covered (wire format size)
+        self.expected = expected_rows     # active rows expected this version
+        self.received = 0                 # rows merged so far (all forwards)
+        self.pending_counts = jnp.zeros((nw, 32), jnp.int32)
+        self.pending_rows = 0             # rows in the pending buffer
+        self.pending_msgs = 0             # contributions since last forward
+
+    def absorb(self, counts, nrows: int) -> None:
+        self.pending_counts = kops.merge_counters(
+            jnp.stack([self.pending_counts, counts])
+        )
+        self.pending_rows += nrows
+        self.pending_msgs += 1
+        self.received += nrows
+
+    def take_pending(self):
+        out = (self.pending_counts, self.pending_rows)
+        self.pending_counts = jnp.zeros_like(self.pending_counts)
+        self.pending_rows = 0
+        self.pending_msgs = 0
+        return out
+
+
+class HierAsyncSimulator:
+    """Event loop binding an engine to the tree of aggregators.
+
+    engine: a PFed1BS instance (defense="none"; any adversary/privacy).
+    weights: (K,) p_k — metrics weighting only; the tree vote is the
+      unweighted popcount object, like the flat popcount executor.
+    participants_fn(version) -> (idx (S,), active (S,)) and
+    batch_fn(version) -> (K, R, B, ...) pytree: the same two callables the
+      flat AsyncSimulator takes, shared with synchronous runs for exact
+      comparisons.
+    """
+
+    def __init__(self, engine, cfg: HierSimConfig, weights,
+                 participants_fn: Callable, batch_fn: Callable):
+        assert engine.cfg.defense == "none", (
+            "defended votes need the global ranking only the synchronous "
+            "root has — run them through fedexec.hier_round"
+        )
+        topo = cfg.topology
+        assert topo.num_clients == engine.cfg.participate, (
+            f"topology covers {topo.num_clients} clients, cohort is "
+            f"{engine.cfg.participate}"
+        )
+        self.eng = engine
+        self.cfg = cfg
+        self.topo = topo
+        self.weights = jnp.asarray(weights, jnp.float32)
+        self.participants_fn = participants_fn
+        self.batch_fn = batch_fn
+        self._cohort = jax.jit(self._cohort_client_side)
+        self._nw = (engine.m + (-engine.m) % 32) // 32
+        # leaf id of each cohort row (contiguous split, like hier_round)
+        self._leaf_of = np.repeat(
+            np.arange(len(topo.leaf_sizes)),
+            [int(s) for s in topo.leaf_sizes],
+        )
+
+    def _cohort_client_side(self, clients, batches, idx, v, ef, rnd):
+        """Same one-program client side as the flat async tier: cohort
+        update + (EF) sign-quantization + RR flips + bit-pack, keyed by the
+        dispatch version (see sim/server.py::_cohort_client_side for the
+        bit-exactness rationale)."""
+        upd, task_loss, zs = self.eng.cohort_update(clients, batches, idx, v, rnd)
+        if ef is None:
+            signs = jnp.sign(zs) + (zs == 0)
+            signs = self.eng.privatize_uplink(signs, idx, rnd)
+            return upd, task_loss, self.eng._pack_uplink(signs), None
+        _, signs, new_rows = self.eng._ef_quantize(zs, ef[idx])
+        signs = self.eng.privatize_uplink(signs, idx, rnd)
+        return upd, task_loss, self.eng._pack_uplink(signs), new_rows
+
+    def run(self, state, on_flush: Callable | None = None):
+        """Drain cfg.max_versions tree rounds starting from a synchronous
+        FLState. Returns (final FLState, HierSimReport)."""
+        eng, cfg, topo = self.eng, self.cfg, self.topo
+        levels = topo.level_widths()          # [[leaf widths], ..., [S]]
+        n_levels = len(levels)
+        queue = EventQueue()
+        meter = HierMeter(m=eng.m)
+        report = HierSimReport(m=eng.m, topology=topo, meter=meter)
+        version = 0
+        t = 0.0
+        nodes: dict = {}                      # (level, i) -> _Node
+        staged: dict = {}                     # per-version cohort outputs
+        counter_msgs = 0
+
+        def parent(level: int, i: int):
+            return (level + 1, i // topo.fan_out)
+
+        def dispatch_cohort(t_now: float, ver: int, st):
+            nonlocal counter_msgs
+            counter_msgs = 0
+            idx, active = self.participants_fn(ver)
+            batches = self.batch_fn(ver)
+            upd, task_loss, packed, ef_rows = self._cohort(
+                st.clients, batches, idx, st.v, st.ef, jnp.int32(ver)
+            )
+            act_np = np.asarray(active)
+            staged[ver] = {"idx": idx, "active": active, "upd": upd,
+                           "task_loss": task_loss, "packed": packed,
+                           "ef_rows": ef_rows}
+            # per-version node states sized by the ACTIVE rows under each
+            # subtree (a dropped-out client transmits nothing; its empty
+            # contribution is a valid zero count, never waited for)
+            exp = [int((act_np[self._leaf_of == li] > 0).sum())
+                   for li in range(len(levels[0]))]
+            for lvl, widths in enumerate(levels):
+                if lvl > 0:
+                    exp = [sum(exp[i : i + topo.fan_out])
+                           for i in range(0, len(exp), topo.fan_out)]
+                for i, w in enumerate(widths):
+                    nodes[(lvl, i)] = _Node(w, exp[i], self._nw)
+            for row in range(len(act_np)):
+                if act_np[row] <= 0:
+                    continue
+                c = int(np.asarray(idx)[row])
+                delay = cfg.client_latency.duration(cfg.seed, c, ver)
+                queue.push(t_now + delay, "arrival", c,
+                           payload=(ver, row, int(self._leaf_of[row])))
+
+        def forward(t_now: float, ver: int, level: int, i: int) -> None:
+            """Send a node's pending (counts, rows) one hop up."""
+            nonlocal counter_msgs
+            node = nodes[(level, i)]
+            counts, nrows = node.take_pending()
+            counter_msgs += 1
+            meter.bill_uplink(t_now, level + 1, node.width)
+            delay = cfg.tier_spec(level).latency.duration(
+                cfg.seed, i, ver
+            )
+            queue.push(t_now + delay, "merge", i,
+                       payload=(ver, level + 1, parent(level, i)[1],
+                                counts, nrows))
+
+        def node_absorb(t_now, ver, level, i, counts, nrows, st):
+            """Merge a contribution into node (level, i); forward on a full
+            subtree (or a full eager buffer); finish at the root."""
+            node = nodes[(level, i)]
+            node.absorb(counts, nrows)
+            if level == n_levels - 1:         # the root
+                if node.received >= node.expected:
+                    return finish(t_now, ver, st)
+                return st
+            spec = cfg.tier_spec(level)
+            if node.received >= node.expected:
+                forward(t_now, ver, level, i)
+            elif spec.buffer_size is not None and \
+                    node.pending_msgs >= spec.buffer_size:
+                forward(t_now, ver, level, i)  # eager partial counter
+            return st
+
+        def finish(t_now: float, ver: int, st):
+            nonlocal version
+            entry = staged.pop(ver)
+            root = nodes[(n_levels - 1, 0)]
+            counts, k = root.take_pending()
+            vw = kops.finish_vote_counts(counts, jnp.int32(k))
+            v_new = kops.unpack_signs(vw)[: eng.m]
+            idx, active = entry["idx"], entry["active"]
+            clients = rounds.scatter_rows(
+                st.clients, idx, entry["upd"], active
+            )
+            new_ef = st.ef
+            if st.ef is not None:
+                rows = jnp.where(active[:, None] > 0, entry["ef_rows"],
+                                 st.ef[idx])
+                new_ef = st.ef.at[idx].set(rows)
+            meter.bill_downlink(t_now, n_levels)
+            w_s = self.weights[idx] * active
+            task = float(jnp.sum(entry["task_loss"] * w_s)
+                         / jnp.maximum(jnp.sum(w_s), 1e-9))
+            version += 1
+            report.flushes.append(HierFlushRecord(
+                version=version, t=t_now,
+                arrivals=int(np.asarray(active).sum()),
+                counter_messages=counter_msgs, task_loss=task,
+            ))
+            st = st._replace(clients=clients, v=v_new,
+                             round=st.round + 1, ef=new_ef)
+            if on_flush is not None:
+                on_flush(t_now, version, st)
+            if version < cfg.max_versions:
+                dispatch_cohort(t_now, version, st)
+            return st
+
+        dispatch_cohort(0.0, 0, state)
+        while queue and version < cfg.max_versions:
+            ev = queue.pop()
+            t = ev.t
+            if ev.kind == "arrival":
+                ver, row, leaf = ev.payload
+                meter.bill_uplink(t, 0, 1)
+                counts = kops.popcount_partial(
+                    staged[ver]["packed"][row : row + 1]
+                )
+                state = node_absorb(t, ver, 0, leaf, counts, 1, state)
+            else:
+                ver, level, i, counts, nrows = ev.payload
+                state = node_absorb(t, ver, level, i, counts, nrows, state)
+        report.check_billing()
+        return state, report

@@ -54,6 +54,24 @@ def test_scenario_sweep_runs():
 
 
 @pytest.mark.slow
+def test_fl_llm_finetune_runs():
+    out = _run_example(
+        "fl_llm_finetune.py",
+        {
+            "FLLM_ROUNDS": 3, "FLLM_CLIENTS": 3, "FLLM_PARTICIPATE": 2,
+            "FLLM_LAYERS": 2, "FLLM_D_MODEL": 64, "FLLM_HEADS": 4,
+            "FLLM_KV_HEADS": 2, "FLLM_HEAD_DIM": 16, "FLLM_D_FF": 128,
+            "FLLM_VOCAB": 512, "FLLM_SEQ": 32, "FLLM_BATCH": 2,
+            "FLLM_CHUNK": 4096,
+        },
+    )
+    assert "params per client" in out
+    assert "sketch m=" in out
+    assert "final CE" in out
+    assert "checkpoints in experiments/runs/" in out
+
+
+@pytest.mark.slow
 def test_serve_personalized_runs():
     out = _run_example(
         "serve_personalized.py", {"SERVE_CLIENTS": 4, "SERVE_REQUESTS": 6}

@@ -1,0 +1,581 @@
+"""Hierarchical tree-of-aggregators federation (DESIGN.md §11).
+
+Contracts pinned here:
+  * The COUNTEREXAMPLE: majority-of-majorities (sign-then-sign per leaf)
+    is NOT the flat vote — an explicit 3-leaf instance flips a coordinate
+    — while the partial-popcount counter merge is bit-exact with the flat
+    popcount on the same words. This is the theorem the whole tier rests
+    on: counts are sum-decomposable, signs are not.
+  * Property sweep (hypothesis, when installed): counter merge is
+    associative, commutative, and invariant to HOW the client rows are
+    sharded into leaves; the tree vote is bit-identical to the flat
+    kernels/ops.vote_popcount (ref AND pallas dispatch) for fan-out 2-16,
+    depth 1-4, ragged leaves.
+  * Kernel parity: popcount_partial / merge_counters / finish_vote_counts
+    pallas(interpret) == ref on lane-aligned and ragged word counts;
+    K=0 and traced-k edges.
+  * Executor parity: launch/fedexec.hier_round == the flat popcount
+    sharded_round bit-for-bit (consensus, client params, EF) on a
+    1-device mesh, for balanced/ragged/single-leaf topologies, honest and
+    (slow tier) under adversary/defense/privacy axes.
+  * Async tier: the HierAsyncSimulator's zero-latency full-fan-in drain
+    reproduces the synchronous hier_round sequence bit-for-bit, and eager
+    partial forwards (buffer_size=1) + nonzero latency change message
+    counts and timing but never the per-version consensus.
+  * Billing: fl/comms.counter_bits / hier_round_bits invariants, executor
+    metrics re-derive from comms, and exp/report.validate_hier accepts
+    exactly the artifacts whose numbers re-derive.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.data import synthetic as ds
+from repro.fl import comms
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.launch.fedexec import HierTopology
+from repro.models import smallnets as sn
+
+from tests._hypothesis_shim import given, settings, hst
+
+
+# ---------------------------------------------------------------------------
+# the 3-leaf counterexample: sign-then-sign != flat vote; count-merge == flat
+# ---------------------------------------------------------------------------
+
+def test_sign_then_sign_counterexample_count_merge_exact():
+    """9 clients in 3 leaves of 3. Bit 0 tallies per leaf: 2-1, 2-1, 0-3.
+    Majority-of-majorities sees two +1 leaves and votes +1; the flat vote
+    sees 4-of-9 ones and votes -1. The counter tree reproduces the flat
+    vote bit-for-bit on the same words."""
+    rows = [1, 1, 0,  1, 1, 0,  0, 0, 0]          # bit 0 of each client word
+    words = jnp.asarray(np.array(rows, np.uint32)[:, None])   # (9, 1)
+    leaves = (3, 3, 3)
+
+    flat = kops.vote_popcount(words, impl="ref")             # the truth
+    assert int(np.asarray(flat)[0]) & 1 == 0                  # 4 < 9/2 -> -1
+
+    # sign-then-sign: each leaf votes, then the 3 one-row leaf votes vote
+    leaf_votes = jnp.stack([
+        kops.vote_popcount(words[i:i + 3], impl="ref") for i in (0, 3, 6)
+    ])
+    naive = kops.vote_popcount(leaf_votes, impl="ref")
+    assert int(np.asarray(naive)[0]) & 1 == 1                 # flipped to +1
+    assert not np.array_equal(np.asarray(naive), np.asarray(flat))
+
+    # the counter merge over the SAME leaves is bit-exact with flat
+    tree = consensus.tree_vote_popcount(words, leaves, impl="ref")
+    np.testing.assert_array_equal(np.asarray(tree), np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# property sweep: merge algebra + shard-split invariance (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _rand_words(seed: int, k: int, w: int) -> jnp.ndarray:
+    return jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2 ** 32, size=(k, w), dtype=np.uint32
+    ))
+
+
+def _partition(k: int, cuts: list[int]) -> tuple[int, ...]:
+    """Turn sorted cut points into leaf sizes covering k rows."""
+    edges = [0] + sorted(set(c % (k + 1) for c in cuts)) + [k]
+    sizes = [b - a for a, b in zip(edges, edges[1:]) if b > a]
+    return tuple(sizes) if sizes else (k,)
+
+
+@settings(max_examples=30, deadline=None)
+@given(hst.integers(0, 2 ** 31), hst.integers(1, 40), hst.integers(1, 12),
+       hst.lists(hst.integers(0, 40), max_size=6))
+def test_merge_associative_commutative_split_invariant(seed, k, w, cuts):
+    words = _rand_words(seed, k, w)
+    leaves = _partition(k, cuts)
+    # split-invariance: counting per leaf then merging == counting flat
+    parts = []
+    start = 0
+    for s in leaves:
+        parts.append(kref.popcount_partial_ref(words[start:start + s]))
+        start += s
+    merged = kref.merge_counters_ref(jnp.stack(parts))
+    flat_counts = kref.popcount_partial_ref(words)
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(flat_counts))
+    if len(parts) >= 2:
+        a, b, rest = parts[0], parts[1], parts[2:]
+        # commutative
+        ab = kref.merge_counters_ref(jnp.stack([a, b]))
+        ba = kref.merge_counters_ref(jnp.stack([b, a]))
+        np.testing.assert_array_equal(np.asarray(ab), np.asarray(ba))
+        # associative: ((a+b)+rest) == (a+(b+rest...)) == flat merge
+        left = kref.merge_counters_ref(jnp.stack([ab, *rest]))
+        np.testing.assert_array_equal(np.asarray(left), np.asarray(merged))
+
+
+@settings(max_examples=30, deadline=None)
+@given(hst.integers(0, 2 ** 31), hst.integers(1, 48), hst.integers(1, 8),
+       hst.integers(2, 16), hst.lists(hst.integers(0, 48), max_size=7))
+def test_tree_vote_bit_identical_to_flat_popcount(seed, k, w, fan, cuts):
+    """Ragged leaves, any fan-out in [2,16] (depth follows: up to
+    log_2(48) ~ 6 tiers at fan-out 2), vote == flat popcount, always."""
+    words = _rand_words(seed, k, w)
+    leaves = _partition(k, cuts)
+    tree = consensus.tree_vote_popcount(words, leaves, impl="ref")
+    flat = kops.vote_popcount(words, impl="ref")
+    np.testing.assert_array_equal(np.asarray(tree), np.asarray(flat))
+    # the executor's fan-out-at-a-time merge schedule over the same leaves
+    topo_sizes = leaves if sum(leaves) == k else (k,)
+    counters = []
+    start = 0
+    for s in topo_sizes:
+        counters.append(kref.popcount_partial_ref(words[start:start + s]))
+        start += s
+    while len(counters) > 1:
+        counters = [
+            kref.merge_counters_ref(jnp.stack(counters[i:i + fan]))
+            for i in range(0, len(counters), fan)
+        ]
+    got = kref.finish_vote_counts_ref(counters[0], k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(flat))
+
+
+@settings(max_examples=10, deadline=None)
+@given(hst.integers(0, 2 ** 31), hst.integers(1, 33), hst.integers(1, 5),
+       hst.lists(hst.integers(0, 33), max_size=4))
+def test_tree_vote_matches_vote_popcount_pallas(seed, k, w, cuts):
+    """The tree vote through the PALLAS dispatch (interpret off-TPU) is
+    bit-identical to the flat pallas popcount vote."""
+    words = _rand_words(seed, k, w)
+    leaves = _partition(k, cuts)
+    tree = consensus.tree_vote_popcount(words, leaves, impl="pallas")
+    flat = kops.vote_popcount(words, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(tree), np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# counter kernel parity + edges
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 7, 33])
+@pytest.mark.parametrize("w", [1, 130])
+def test_counter_kernels_pallas_match_ref(k, w):
+    words = _rand_words(k * 1000 + w, k, w)
+    c_ref = kops.popcount_partial(words, impl="ref")
+    c_pl = kops.popcount_partial(words, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(c_pl), np.asarray(c_ref))
+    stack = jnp.stack([c_ref, c_ref, 2 * c_ref])
+    np.testing.assert_array_equal(
+        np.asarray(kops.merge_counters(stack, impl="pallas")),
+        np.asarray(kops.merge_counters(stack, impl="ref")),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(kops.finish_vote_counts(c_ref, k, impl="pallas")),
+        np.asarray(kops.finish_vote_counts(c_ref, k, impl="ref")),
+    )
+    # finish over the flat counts IS the flat popcount vote
+    np.testing.assert_array_equal(
+        np.asarray(kops.finish_vote_counts(c_ref, k)),
+        np.asarray(kops.vote_popcount(words, impl="ref")),
+    )
+
+
+def test_counter_kernel_edges():
+    # K=0: zero counters; finishing k=0 counts gives all-ones (+1 ties)
+    empty = kops.popcount_partial(jnp.zeros((0, 3), jnp.uint32))
+    assert empty.shape == (3, 32)
+    assert int(jnp.sum(jnp.abs(empty))) == 0
+    vw = kops.finish_vote_counts(empty, 0)
+    assert np.all(np.asarray(vw) == 0xFFFFFFFF)
+    # traced k (the trim revote's data-dependent head count) routes to ref
+    words = _rand_words(5, 9, 4)
+    counts = kops.popcount_partial(words)
+
+    @jax.jit
+    def finish_traced(c, k):
+        return kops.finish_vote_counts(c, k)
+
+    np.testing.assert_array_equal(
+        np.asarray(finish_traced(counts, jnp.int32(9))),
+        np.asarray(kops.finish_vote_counts(counts, 9)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# HierTopology + billing
+# ---------------------------------------------------------------------------
+
+def test_hier_topology_build_shapes():
+    topo = HierTopology.build(10, fan_out=4)
+    assert sum(topo.leaf_sizes) == 10 and topo.num_clients == 10
+    assert max(topo.leaf_sizes) - min(topo.leaf_sizes) <= 1
+    levels = topo.level_widths()
+    assert [sum(w) for w in levels] == [10] * len(levels)
+    assert levels[-1] == [10]
+    with pytest.raises(AssertionError):
+        HierTopology(leaf_sizes=(), fan_out=2)
+    with pytest.raises(AssertionError):
+        HierTopology(leaf_sizes=(3,), fan_out=1)
+
+
+def test_counter_bits_closed_interval():
+    """A width-w counter must represent the count w itself: the wire
+    format is ceil(log2(w + 1)) bit planes (NOT the ceil(log2(w))
+    shorthand — a width-4 counter holds the value 4)."""
+    assert [comms.counter_bits(w) for w in (1, 2, 3, 4, 7, 8, 1000)] == \
+        [1, 2, 2, 3, 3, 4, 10]
+
+
+def test_hier_round_bits_invariants():
+    m = 64
+    hb = comms.hier_round_bits(m=m, leaf_widths=(3, 3, 2), fan_out=2)
+    assert hb["client_uplink_bits"] == 8 * m
+    # tier 1: three leaf counters (widths 3,3,2 -> 2,2,2 planes)
+    # tier 2: two counters (widths 6 -> 3 planes, 2 -> 2 planes)
+    assert hb["tier_uplink_bits"] == [6 * m, 5 * m]
+    assert hb["tiers"] == 3
+    assert hb["root_ingress_bits"] == 5 * m
+    assert hb["downlink_bits"] == 3 * m
+    assert hb["uplink_bits"] == (8 + 6 + 5) * m
+    assert hb["total_bits"] == hb["uplink_bits"] + hb["downlink_bits"]
+    # single leaf degenerates to the flat server: root ingests S*m
+    flat = comms.hier_round_bits(m=m, leaf_widths=(8,), fan_out=2)
+    assert flat["root_ingress_bits"] == 8 * m
+    assert flat["tier_uplink_bits"] == [] and flat["tiers"] == 1
+
+
+def test_validate_hier_accepts_rederivable_rejects_tampered():
+    from repro.exp.report import validate_hier
+
+    m = 128
+    rows = []
+    for s in (100, 10_000):
+        topo = HierTopology.build(s, fan_out=8)
+        hb = comms.hier_round_bits(m=m, leaf_widths=topo.leaf_sizes,
+                                   fan_out=8)
+        rows.append({
+            "clients": s, "fan_out": 8, "tiers": hb["tiers"],
+            "root_ingress_bits": hb["root_ingress_bits"],
+            "flat_ingress_bits": s * m, "uplink_bits": hb["uplink_bits"],
+            "downlink_bits": hb["downlink_bits"],
+            "tier_uplink_bits": hb["tier_uplink_bits"], "simulated": True,
+        })
+    art = {
+        "m": m, "fan_out": 8,
+        "counter_merge_parity": {
+            "bit_exact": True,
+            "engine_cells": [{"topology": "fan2", "bit_exact": True}],
+            "vote_cases": [],
+        },
+        "scaling": rows,
+    }
+    validate_hier(art)                                   # re-derives clean
+    bad = {**art, "scaling": [dict(rows[0]), dict(rows[1])]}
+    bad["scaling"][1]["root_ingress_bits"] += 1
+    with pytest.raises(ValueError, match="does not re-derive"):
+        validate_hier(bad)
+    with pytest.raises(ValueError, match="bit_exact"):
+        validate_hier({**art, "counter_merge_parity": {
+            "bit_exact": True,
+            "engine_cells": [{"topology": "x", "bit_exact": False}],
+            "vote_cases": [],
+        }})
+
+
+# ---------------------------------------------------------------------------
+# executor parity: hier_round vs the flat popcount sharded_round
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fed_setup():
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=6, train_per_client=48,
+        test_per_client=24, noise=0.8,
+    )
+
+    def loss_fn(params, batch):
+        return sn.softmax_xent(sn.apply_mlp(params, batch["x"]), batch["y"])
+
+    def init_fn(k):
+        return sn.init_mlp(k, input_dim=784, hidden=16)
+
+    return data, loss_fn, init_fn
+
+
+BASE = dict(num_clients=6, participate=6, local_steps=2, m_ratio=0.05,
+            chunk=2048, sharded_round=True, vote="popcount")
+
+
+def _run(cfg, data, loss_fn, init_fn, rounds=2):
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    eng = PFed1BS(cfg, loss_fn, template)
+    state = eng.init(init_fn, jax.random.key(2))
+    metrics = None
+    for r in range(rounds):
+        kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(11), r))
+        batches = ds.sample_round_batches(kb, data, cfg.local_steps, 16)
+        state, metrics = eng.round(state, batches, data.weights, kr)
+    return eng, state, metrics
+
+
+def _assert_states_equal(st_a, st_b):
+    np.testing.assert_array_equal(np.asarray(st_a.v), np.asarray(st_b.v))
+    for a, b in zip(jax.tree.leaves(st_a.clients),
+                    jax.tree.leaves(st_b.clients)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    if st_a.ef is not None:
+        np.testing.assert_array_equal(np.asarray(st_a.ef),
+                                      np.asarray(st_b.ef))
+
+
+@pytest.fixture(scope="module")
+def flat_popcount_run(fed_setup):
+    data, loss_fn, init_fn = fed_setup
+    return _run(PFed1BSConfig(**BASE), data, loss_fn, init_fn)
+
+
+TOPOLOGIES = {
+    "fan2-balanced": HierTopology.build(6, fan_out=2),
+    "ragged": HierTopology(leaf_sizes=(1, 2, 3), fan_out=2),
+    "single-leaf": HierTopology(leaf_sizes=(6,), fan_out=4),
+}
+
+
+@pytest.mark.parametrize("name", list(TOPOLOGIES))
+def test_hier_round_bit_exact_vs_flat_popcount(fed_setup, flat_popcount_run,
+                                               name):
+    data, loss_fn, init_fn = fed_setup
+    topo = TOPOLOGIES[name]
+    cfg = PFed1BSConfig(**BASE, topology=topo)
+    _, st_t, m_t = _run(cfg, data, loss_fn, init_fn)
+    _, st_f, m_f = flat_popcount_run
+    _assert_states_equal(st_t, st_f)
+    # per-tier billing re-derives from fl/comms
+    eng = PFed1BS(cfg, loss_fn,
+                  jax.eval_shape(init_fn, jax.random.key(1)))
+    hb = topo.round_bits(eng.m)
+    assert int(m_t["tiers"]) == hb["tiers"]
+    assert int(m_t["root_ingress_bits"]) == hb["root_ingress_bits"]
+    assert int(m_t["tier_uplink_bits"]) == sum(hb["tier_uplink_bits"])
+    assert int(m_t["downlink_bits"]) == hb["downlink_bits"]
+    assert int(m_t["uplink_bits"]) == 6 * eng.m + sum(hb["tier_uplink_bits"])
+
+
+def test_hier_round_ef_bit_exact(fed_setup):
+    data, loss_fn, init_fn = fed_setup
+    cfg_f = PFed1BSConfig(**BASE, error_feedback=True)
+    cfg_t = dataclasses.replace(cfg_f, topology=TOPOLOGIES["fan2-balanced"])
+    _, st_f, _ = _run(cfg_f, data, loss_fn, init_fn)
+    _, st_t, _ = _run(cfg_t, data, loss_fn, init_fn)
+    _assert_states_equal(st_t, st_f)
+
+
+def test_topology_config_guards(fed_setup):
+    data, loss_fn, init_fn = fed_setup
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    topo = TOPOLOGIES["fan2-balanced"]
+    with pytest.raises(AssertionError, match="popcount"):
+        PFed1BS(PFed1BSConfig(**{**BASE, "vote": "exact"}, topology=topo),
+                loss_fn, template)
+    with pytest.raises(AssertionError, match="sharded_round"):
+        PFed1BS(
+            PFed1BSConfig(**{**BASE, "sharded_round": False}, topology=topo),
+            loss_fn, template,
+        )
+    with pytest.raises(AssertionError, match="covers"):
+        PFed1BS(
+            PFed1BSConfig(**BASE,
+                          topology=HierTopology.build(5, fan_out=2)),
+            loss_fn, template,
+        )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("axes", [
+    ("trim", "signflip", None),
+    ("none", None, 2.0),
+    ("trim", "colluding", 1.5),
+])
+def test_hier_round_parity_under_axes(fed_setup, axes):
+    """Adversary corruption and RR privacy flips are keyed by (seed,
+    round, client) — executor-invariant — and the trimmed defense runs at
+    the ROOT on the merged counts, so the tree stays bit-exact with the
+    flat popcount server under every axis combination."""
+    from repro.exp import scenarios
+
+    defense, adv_name, eps = axes
+    adv = {
+        "signflip": scenarios.SignFlipAttack(fraction=0.34),
+        "colluding": scenarios.ColludingBloc(fraction=0.34),
+        None: None,
+    }[adv_name]
+    privacy = scenarios.RandomizedResponse(epsilon=eps) if eps else None
+    data, loss_fn, init_fn = fed_setup
+    cfg_f = PFed1BSConfig(**BASE, defense=defense, adversary=adv,
+                          privacy=privacy)
+    cfg_t = dataclasses.replace(cfg_f, topology=TOPOLOGIES["ragged"])
+    _, st_f, _ = _run(cfg_f, data, loss_fn, init_fn)
+    _, st_t, _ = _run(cfg_t, data, loss_fn, init_fn)
+    _assert_states_equal(st_t, st_f)
+
+
+@pytest.mark.slow
+def test_run_cell_topology_axis(fed_setup):
+    """The scenario-matrix topology axis threads into the engine and the
+    cell bills the tiers on top of the flat uplink."""
+    from repro.exp import runner, scenarios
+
+    sc = scenarios.Scenario(
+        "tree", scenarios.DirichletPartition(0.3),
+        scenarios.FullParticipation(),
+        topology=scenarios.TreeAggregation(fan_out=2),
+    )
+    cfg = runner.ExpConfig(num_clients=4, rounds=2, local_steps=1, batch=8,
+                           hidden=16, train_per_client=16, test_per_client=8,
+                           chunk=2048, m_ratio=0.05)
+    cell = runner.run_cell("pfed1bs", sc, cfg)
+    assert cell["topology"] == "tree-fan2"
+    topo = HierTopology.build(4, fan_out=2)
+    hb = comms.hier_round_bits(m=cell["m"], leaf_widths=topo.leaf_sizes,
+                               fan_out=2)
+    flat = comms.accumulate_round_bits(
+        "pfed1bs", n=cell["n"], m=cell["m"],
+        s_per_round=cell["s_per_round"], num_tensors=cell["num_tensors"],
+    )
+    assert cell["uplink_bits"] == \
+        flat["uplink_bits"] + sum(hb["tier_uplink_bits"]) * cfg.rounds
+    assert cell["downlink_bits"] == hb["downlink_bits"] * cfg.rounds
+    with pytest.raises(ValueError, match="topology axis"):
+        runner.run_cell("fedavg", sc, cfg)
+    assert "tree-fan4" in scenarios.hier_matrix()
+
+
+# ---------------------------------------------------------------------------
+# async tier: zero-latency drain == synchronous hier_round, bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _sim_inputs(data, s, versions):
+    def participants_fn(version):
+        return jnp.arange(s, dtype=jnp.int32), jnp.ones((s,), jnp.float32)
+
+    def batch_fn(version):
+        kb, _ = jax.random.split(
+            jax.random.fold_in(jax.random.key(11), version)
+        )
+        return ds.sample_round_batches(kb, data, 2, 16)
+
+    return participants_fn, batch_fn
+
+
+def _sync_hier_sequence(fed_setup, topo, versions):
+    data, loss_fn, init_fn = fed_setup
+    cfg = PFed1BSConfig(**BASE, topology=topo)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    eng = PFed1BS(cfg, loss_fn, template)
+    state = eng.init(init_fn, jax.random.key(2))
+    participants_fn, batch_fn = _sim_inputs(data, 6, versions)
+    seq = []
+    for v in range(versions):
+        _, kr = jax.random.split(jax.random.fold_in(jax.random.key(11), v))
+        state, _ = eng.round(state, batch_fn(v), data.weights, kr,
+                             participants=participants_fn(v))
+        seq.append(np.asarray(state.v).copy())
+    return eng, state, seq
+
+
+def _drain(fed_setup, topo, versions, tiers=()):
+    from repro.sim import HierAsyncSimulator, HierSimConfig
+
+    data, loss_fn, init_fn = fed_setup
+    cfg = PFed1BSConfig(**BASE, topology=topo)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    eng = PFed1BS(cfg, loss_fn, template)
+    state = eng.init(init_fn, jax.random.key(2))
+    participants_fn, batch_fn = _sim_inputs(data, 6, versions)
+    sim = HierAsyncSimulator(
+        eng,
+        HierSimConfig(topology=topo, max_versions=versions, seed=0,
+                      tiers=tiers),
+        data.weights, participants_fn, batch_fn,
+    )
+    seq = []
+    final, report = sim.run(
+        state, on_flush=lambda t, ver, st: seq.append(np.asarray(st.v).copy())
+    )
+    return final, report, seq
+
+
+def test_hier_sim_zero_latency_drain_bit_exact(fed_setup):
+    topo = TOPOLOGIES["fan2-balanced"]
+    versions = 2
+    _, st_sync, seq_sync = _sync_hier_sequence(fed_setup, topo, versions)
+    st_sim, report, seq_sim = _drain(fed_setup, topo, versions)
+    for a, b in zip(seq_sim, seq_sync):
+        np.testing.assert_array_equal(a, b)
+    _assert_states_equal(st_sim, st_sync)
+    # billing re-derives: sim meter == versions * the synchronous bill
+    eng_m = report.m
+    hb = topo.round_bits(eng_m)
+    assert report.meter.uplink_bits == versions * (
+        6 * eng_m + sum(hb["tier_uplink_bits"])
+    )
+    assert report.meter.downlink_bits == versions * hb["downlink_bits"]
+    report.check_billing()                    # internal re-derivation
+    d = report.to_dict()
+    assert d["versions"] == versions
+
+
+@pytest.mark.slow
+def test_hier_sim_eager_buffers_change_messages_not_votes(fed_setup):
+    """buffer_size=1 at the leaf tier forwards every arrival immediately:
+    more counter messages, nonzero virtual time under latency, and the
+    SAME consensus per version (integer counts merge to the same total in
+    any grouping)."""
+    from repro.sim import TierSpec
+    from repro.sim.clock import ConstantLatency
+
+    topo = TOPOLOGIES["fan2-balanced"]
+    versions = 2
+    _, _, seq_sync = _sync_hier_sequence(fed_setup, topo, versions)
+    _, rep_lazy, seq_lazy = _drain(fed_setup, topo, versions)
+    _, rep_eager, seq_eager = _drain(
+        fed_setup, topo, versions,
+        tiers=(TierSpec(latency=ConstantLatency(0.25), buffer_size=1),),
+    )
+    for a, b, c in zip(seq_lazy, seq_eager, seq_sync):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    assert rep_eager.flushes[-1].counter_messages > \
+        rep_lazy.flushes[-1].counter_messages
+    assert rep_eager.final_t > rep_lazy.final_t
+    # the VOTE is grouping-invariant (asserted above); the BILL is not:
+    # every extra partial forward pays its node's full counter width, so
+    # the lazy drain bills exactly the synchronous analytic figure and the
+    # eager drain strictly more — both re-derive event-by-event
+    hb = topo.round_bits(rep_lazy.m)
+    assert rep_lazy.meter.uplink_bits == versions * (
+        6 * rep_lazy.m + sum(hb["tier_uplink_bits"])
+    )
+    assert rep_eager.meter.uplink_bits > rep_lazy.meter.uplink_bits
+    assert rep_eager.meter.downlink_bits == rep_lazy.meter.downlink_bits
+    rep_eager.check_billing()
+
+
+def test_hier_sim_rejects_defended_votes(fed_setup):
+    from repro.sim import HierAsyncSimulator, HierSimConfig
+
+    data, loss_fn, init_fn = fed_setup
+    topo = TOPOLOGIES["fan2-balanced"]
+    cfg = PFed1BSConfig(**BASE, topology=topo, defense="trim")
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    eng = PFed1BS(cfg, loss_fn, template)
+    participants_fn, batch_fn = _sim_inputs(data, 6, 1)
+    with pytest.raises(AssertionError, match="global ranking"):
+        HierAsyncSimulator(
+            eng, HierSimConfig(topology=topo, max_versions=1),
+            data.weights, participants_fn, batch_fn,
+        )

@@ -353,3 +353,46 @@ def test_async_drain_bit_exact_under_attack(task, defense):
         np.testing.assert_allclose(
             np.asarray(rep.final_reputation), np.asarray(st_async.rep)
         )
+
+
+# ---------------------------------------------------------------------------
+# the documented residue (§10.2): a COHERENT colluding bloc defeats the
+# disagreement-ranked trimmed vote
+# ---------------------------------------------------------------------------
+
+@pytest.mark.xfail(
+    strict=True,
+    reason="§10.2 residue: a coherent colluding bloc votes as one unit, so "
+    "it drags the head-count provisional consensus toward its target and "
+    "then scores LOWER disagreement than the honest-but-heterogeneous "
+    "voters — the ranking trims honest clients even when the trim budget "
+    "equals the bloc size. Disagreement ranking cannot separate 'coherent "
+    "because colluding' from 'coherent because correct'; fixing this needs "
+    "a different statistic (e.g. inter-voter agreement clustering), not a "
+    "bigger budget.",
+)
+def test_trimmed_vote_defeats_coherent_colluding_bloc():
+    """What a sound defense would deliver — and this one, by construction,
+    cannot: with 4-of-10 coherent colluders and trim budget 4, the
+    defended vote should land near the honest-only majority."""
+    rng = np.random.default_rng(42)
+    m, k, bloc = 256, 10, 4
+    h = rng.choice([-1.0, 1.0], size=m).astype(np.float32)
+    # honest voters: h with 40% independent coordinate noise (the paper's
+    # heterogeneous-client regime — individually far from consensus)
+    honest = np.stack(
+        [np.where(rng.random(m) < 0.4, -h, h) for _ in range(k - bloc)]
+    )
+    # the bloc transmits ONE crafted sketch: the exact anti-consensus
+    zs = np.concatenate([honest, np.tile(-h, (bloc, 1))]).astype(np.float32)
+    p = np.full((k,), 1.0 / k, np.float32)
+
+    v, kept = cons.trimmed_vote(jnp.asarray(zs), jnp.asarray(p), trim=bloc)
+    v, kept = np.asarray(v), np.asarray(kept)
+    honest_majority = np.sign(honest.sum(axis=0))
+
+    # a sound defense keeps a majority of honest voters ...
+    assert int((kept[:k - bloc] > 0).sum()) > int((kept[k - bloc:] > 0).sum())
+    # ... and recovers the honest-only consensus (measured: ~0.19 — the
+    # trimmed vote returns the BLOC's target almost everywhere)
+    assert float(np.mean(v * honest_majority > 0)) > 0.8
