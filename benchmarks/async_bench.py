@@ -141,7 +141,8 @@ def run_sync(sc, data, eng, init_fn, participants_fn, batch_fn, evaluate,
 
 def run_async(data, eng, init_fn, participants_fn, batch_fn, evaluate,
               latency, buffer_size: int, max_versions: int,
-              staleness_exponent: float = 0.5, seed: int = 0) -> dict:
+              staleness_exponent: float = 0.5, seed: int = 0,
+              tracer=None) -> dict:
     from repro.sim import metrics as simmetrics
     from repro.sim.server import AsyncConfig, AsyncSimulator
 
@@ -149,7 +150,8 @@ def run_async(data, eng, init_fn, participants_fn, batch_fn, evaluate,
         buffer_size=buffer_size, staleness_exponent=staleness_exponent,
         max_versions=max_versions, seed=seed, latency=latency,
     )
-    sim = AsyncSimulator(eng, cfg, data.weights, participants_fn, batch_fn)
+    sim = AsyncSimulator(eng, cfg, data.weights, participants_fn, batch_fn,
+                         tracer=tracer)
     curve = []
     st, rep = sim.run(
         eng.init(init_fn, jax.random.key(2)),
@@ -269,7 +271,14 @@ def cost_model_at_scale(m_ratio: float = 0.1) -> dict:
     }
 
 
-def bench_async_vs_sync(fast: bool = False) -> dict:
+def bench_async_vs_sync(fast: bool = False, trace: bool = False) -> dict:
+    """trace=True records the async run's event loop on a virtual-clock
+    obs.Tracer (dispatch/arrive/flush/broadcast instants + cumulative bit
+    counters on the simulator's own clock) and dumps
+    TRACE_async[.fast].json, validated by obs.validate_trace against the
+    run's "async" billing spec. Seed-identical runs export byte-identical
+    trace files — virtual time carries no wall jitter."""
+    from repro import obs
     from repro.sim import metrics as simmetrics
 
     sc, data, eng, init_fn, participants_fn, batch_fn, evaluate, knobs = (
@@ -281,10 +290,23 @@ def bench_async_vs_sync(fast: bool = False) -> dict:
     # same number of client uploads as the sync run -> equal billed uplink
     max_versions = rounds * s_cap // buffer_size
 
+    tracer = obs.Tracer(clock="virtual") if trace else None
     sync = run_sync(sc, data, eng, init_fn, participants_fn, batch_fn,
                     evaluate, rounds)
     asyn = run_async(data, eng, init_fn, participants_fn, batch_fn, evaluate,
-                     sc.latency, buffer_size, max_versions)
+                     sc.latency, buffer_size, max_versions, tracer=tracer)
+    if tracer is not None:
+        trace_path = "TRACE_async.fast.json" if fast else "TRACE_async.json"
+        obs.dump_trace(
+            trace_path, tracer,
+            billing=[{
+                "kind": "async", "m": eng.m,
+                "arrivals_per_flush": asyn["arrivals_per_flush"],
+                "residual_arrivals": asyn["residual_arrivals"],
+            }],
+            meta={"bench": "async", "fast": fast},
+        )
+        obs.validate_trace(json.load(open(trace_path)))
 
     target = 0.95 * min(sync["final_acc"], asyn["final_acc"])
     sync["time_to_target_s"] = simmetrics.time_to_target(
@@ -325,6 +347,8 @@ def bench_async_vs_sync(fast: bool = False) -> dict:
         "sync_parity": check_sync_parity(fast),
         "cost_model_at_scale": cost_model_at_scale(),
     }
+    if tracer is not None:
+        out["trace_path"] = trace_path
     simmetrics.validate_async_artifact(out)
     return out
 
@@ -348,9 +372,11 @@ def write_artifacts(results: dict, out_path: str | None = None) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="also dump + validate TRACE_async[.fast].json")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    results = bench_async_vs_sync(fast=args.fast)
+    results = bench_async_vs_sync(fast=args.fast, trace=args.trace)
     path = write_artifacts(results, args.out)
     s, a = results["sync"], results["async"]
     print(f"target acc {results['target_acc']:.4f}")

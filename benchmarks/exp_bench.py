@@ -30,7 +30,14 @@ import os
 FAST_SCENARIOS = ("iid", "dir0.1", "straggler")
 
 
-def bench_matrix(fast: bool = False, progress=None) -> dict:
+def bench_matrix(fast: bool = False, progress=None,
+                 trace: bool = False) -> dict:
+    """trace=True additionally records a wall-clock obs.Tracer through the
+    whole sweep (per-cell spans, per-round engine spans, cumulative bit
+    counters) and dumps TRACE_exp[.fast].json — validated on the spot by
+    obs.validate_trace, which re-derives the counter totals from the
+    cells' billing specs via fl/comms."""
+    from repro import obs
     from repro.exp import report, runner, scenarios
 
     matrix = scenarios.paper_matrix()
@@ -48,9 +55,21 @@ def bench_matrix(fast: bool = False, progress=None) -> dict:
             #                                 separates the algorithms
         )
         use = matrix
-    results = runner.sweep(runner.ALGOS, use, cfg, progress=progress)
+    tracer = obs.Tracer(clock="wall") if trace else None
+    results = runner.sweep(
+        runner.ALGOS, use, cfg, progress=progress, tracer=tracer
+    )
     results["fast"] = fast
     report.validate_matrix(results)
+    if tracer is not None:
+        trace_path = "TRACE_exp.fast.json" if fast else "TRACE_exp.json"
+        obs.dump_trace(
+            trace_path, tracer,
+            billing=[c["billing"] for c in results["cells"]],
+            meta={"bench": "exp", "fast": fast},
+        )
+        obs.validate_trace(json.load(open(trace_path)))
+        results["trace_path"] = trace_path
     return results
 
 
@@ -77,11 +96,13 @@ def write_artifacts(results: dict, out_path: str | None = None) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="also dump + validate TRACE_exp[.fast].json")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     results = bench_matrix(
-        fast=args.fast,
+        fast=args.fast, trace=args.trace,
         progress=lambda c: print(
             f"{c['algo']:9s} x {c['scenario']:11s} acc={c['acc']:.4f} "
             f"bits={c['total_bits']:>12,} s/round={c['s_per_round']}",

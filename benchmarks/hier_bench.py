@@ -150,7 +150,79 @@ def _engine_parity(fast: bool, progress=None) -> dict:
     }
 
 
-def bench_hier(fast: bool = False, progress=None) -> dict:
+def _traced_async_run(fast: bool) -> dict:
+    """A small REAL HierAsyncSimulator run recorded on a virtual-clock
+    obs.Tracer: dispatch/arrive instants, per-tier forward instants,
+    per-version root spans and cumulative bit counters, all on the
+    simulator's own virtual clock — dumped as TRACE_hier[.fast].json with
+    a "hier" billing spec re-derived by obs.validate_trace. Virtual time
+    means seed-identical runs export byte-identical files."""
+    import jax
+
+    from repro import obs
+    from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+    from repro.core import rounds as rounds_mod
+    from repro.data import synthetic as ds
+    from repro.launch.fedexec import HierTopology
+    from repro.models import smallnets as sn
+    from repro.sim.clock import ComputeNetworkLatency
+    from repro.sim.hier import HierAsyncSimulator, HierSimConfig, TierSpec
+
+    k = s = 8
+    versions = 2 if fast else 3
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=k, train_per_client=32,
+        test_per_client=16, noise=0.8,
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda kk: sn.init_mlp(kk, input_dim=784, hidden=16)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    topo = HierTopology.build(s, fan_out=2)
+    eng = PFed1BS(
+        PFed1BSConfig(num_clients=k, participate=s, local_steps=2,
+                      m_ratio=0.05, chunk=2048, sharded_round=True,
+                      vote="popcount", topology=topo),
+        loss_fn, template,
+    )
+    pf = lambda v: rounds_mod.draw_participants(
+        jax.random.fold_in(jax.random.key(7), v), k, s, None
+    )
+    bf = lambda v: ds.sample_round_batches(
+        jax.random.fold_in(jax.random.key(9), v), data, 2, 16
+    )
+    tracer = obs.Tracer(clock="virtual")
+    sim = HierAsyncSimulator(
+        eng,
+        HierSimConfig(topology=topo, max_versions=versions,
+                      client_latency=ComputeNetworkLatency(),
+                      tiers=(TierSpec(latency=ComputeNetworkLatency()),)),
+        data.weights, pf, bf, tracer=tracer,
+    )
+    _, report = sim.run(eng.init(init_fn, jax.random.key(2)))
+
+    trace_path = "TRACE_hier.fast.json" if fast else "TRACE_hier.json"
+    billing = {
+        "kind": "hier", "m": eng.m,
+        "uplink_events": [
+            [tier, width]
+            for _, tier, width, _ in report.meter.uplink_events
+        ],
+        "versions": report.versions,
+        "levels": len(topo.level_widths()),
+    }
+    obs.dump_trace(trace_path, tracer, billing=[billing],
+                   meta={"bench": "hier", "fast": fast})
+    obs.validate_trace(json.load(open(trace_path)))
+    return {
+        "trace_path": trace_path,
+        "versions": report.versions,
+        "events": len(tracer.events),
+        "uplink_bits": report.meter.uplink_bits,
+        "downlink_bits": report.meter.downlink_bits,
+    }
+
+
+def bench_hier(fast: bool = False, progress=None, trace: bool = False) -> dict:
     from repro.fl import comms
     from repro.launch.fedexec import HierTopology
 
@@ -182,12 +254,15 @@ def bench_hier(fast: bool = False, progress=None) -> dict:
         if progress is not None:
             progress(f"scale:{s}", row)
 
+    traced = _traced_async_run(fast) if trace else None
+
     first, last = scaling[0], scaling[-1]
     return {
         "fast": fast,
         "m": m,
         "fan_out": fan_out,
         "counter_merge_parity": parity,
+        **({"trace": traced} if traced is not None else {}),
         "scaling": scaling,
         "root_ingress_growth": (
             last["root_ingress_bits"] / first["root_ingress_bits"]
@@ -243,10 +318,12 @@ def write_artifacts(results: dict, out_path: str | None = None) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="also dump + validate TRACE_hier[.fast].json")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     results = bench_hier(
-        fast=args.fast,
+        fast=args.fast, trace=args.trace,
         progress=lambda tag, c: print(f"{tag:16s} {json.dumps(c)[:110]}",
                                       flush=True),
     )

@@ -122,6 +122,71 @@ def validate_bench_artifacts(fast: bool, root: str = ".") -> list[str]:
     return problems
 
 
+def numeric_leaves(obj, prefix: str = "") -> dict:
+    """Flatten a JSON object to {dotted.path: float} over its numeric
+    scalar leaves (bools excluded; list items indexed as path[i])."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(numeric_leaves(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(numeric_leaves(v, f"{prefix}[{i}]"))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+    return out
+
+
+def compare_artifacts(old: dict, new: dict, tolerance: float,
+                      max_rows: int = 25) -> list[str]:
+    """Per-metric relative deltas between two bench artifacts; returns the
+    list of violations (metrics whose |relative delta| exceeds
+    `tolerance`). Prints a markdown table of the largest movers plus every
+    violation; metrics present in only one file are reported but never
+    violations (schema drift is --validate's job)."""
+    a, b = numeric_leaves(old), numeric_leaves(new)
+    shared = sorted(set(a) & set(b))
+    deltas = {}
+    for key in shared:
+        base = abs(a[key])
+        deltas[key] = (b[key] - a[key]) / base if base > 0 else (
+            0.0 if b[key] == a[key] else float("inf")
+        )
+    violations = [k for k in shared if abs(deltas[k]) > tolerance]
+    show = sorted(shared, key=lambda k: -abs(deltas[k]))
+    show = list(dict.fromkeys(violations + show[:max_rows]))
+    print(f"| metric | old | new | delta | over {tolerance:.0%}? |")
+    print("|---|---|---|---|---|")
+    for key in show:
+        d = deltas[key]
+        print(f"| {key} | {a[key]:.6g} | {b[key]:.6g} | {d:+.2%} "
+              f"| {'YES' if key in violations else ''} |")
+    only_old, only_new = set(a) - set(b), set(b) - set(a)
+    print(f"\n{len(shared)} shared metrics, {len(violations)} over "
+          f"tolerance; {len(only_old)} only in old, {len(only_new)} only "
+          f"in new.")
+    return violations
+
+
+def kernel_table_markdown(table: list) -> str:
+    """Render KernelProbe.table() rows (bench `kernels` saves them as
+    `probe_table` in experiments/bench/kernels.json)."""
+    lines = [
+        "| kernel | steady calls | us/call | est GB/s | compile calls "
+        "| compile (s) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in table:
+        us = f"{r['us_per_call']:.1f}" if r["us_per_call"] is not None else "—"
+        gb = (f"{r['est_gb_per_s']:.2f}"
+              if r["est_gb_per_s"] is not None else "—")
+        lines.append(
+            f"| {r['kernel']} | {r['calls']} | {us} | {gb} "
+            f"| {r['compile_calls']} | {r['compile_s']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
 def fmt_s(x):
     if x == 0:
         return "0"
@@ -146,7 +211,31 @@ def main():
                     help="check BENCH_* artifact schemas; exit 1 on any miss")
     ap.add_argument("--fast", action="store_true",
                     help="with --validate: check the *.fast.json smoke tier")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"),
+                    help="per-metric relative deltas between two bench "
+                         "artifacts; exit 1 if any exceeds --tolerance")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative delta allowed by --compare (default 0.25)")
+    ap.add_argument("--kernels", nargs="?", const="experiments/bench/kernels.json",
+                    metavar="PATH", default=None,
+                    help="render the per-kernel probe table from the "
+                         "kernels bench artifact")
     args = ap.parse_args()
+    if args.compare:
+        old, new = (json.load(open(p)) for p in args.compare)
+        violations = compare_artifacts(old, new, args.tolerance)
+        if violations:
+            sys.exit(1)
+        return
+    if args.kernels:
+        obj = json.load(open(args.kernels))
+        table = obj.get("probe_table")
+        if not table:
+            print(f"{args.kernels}: no probe_table "
+                  "(re-run `python -m benchmarks.run kernels`)")
+            sys.exit(1)
+        print(kernel_table_markdown(table))
+        return
     if args.validate:
         problems = validate_bench_artifacts(fast=args.fast)
         tier = "fast" if args.fast else "canonical"

@@ -243,6 +243,28 @@ def bench_kernels(fast=False):
         us = (time.time() - t0) / reps * 1e6
         out[name] = us
         emit(f"kernels/{name}", us, f"n={n}")
+
+    # eager pass under an active KernelProbe (obs/probe.py): the jitted
+    # cases above bypass the probe (tracer args pass through untimed), so
+    # this drives the instrumented kernels/ops entry points eagerly for
+    # the per-kernel steady/compile/bytes-moved table that
+    # benchmarks/report.py --kernels renders
+    from repro import obs
+    from repro.kernels import ops as kops2
+
+    probe = obs.KernelProbe()
+    with obs.probing(probe):
+        for _ in range(3):
+            sk.sketch_forward(spec, x)
+            sk.sketch_adjoint(spec, v)
+            kops2.pack_signs(z)
+            kops2.vote_packed(packed, p)
+            kops2.vote_popcount(packed)
+    out["probe_table"] = probe.table()
+    for row in out["probe_table"]:
+        emit(f"kernels/probe/{row['kernel']}", row["us_per_call"] or 0.0,
+             f"calls={row['calls']} compile_s={row['compile_s']:.3f} "
+             f"gb_s={row['est_gb_per_s'] or 0.0:.2f}")
     _save("kernels", out)
     return out
 
@@ -351,13 +373,14 @@ def bench_serve(fast=False):
     return results
 
 
-def bench_exp(fast=False):
+def bench_exp(fast=False, trace=False):
     """Scenario-matrix sweep — emits BENCH_exp.json (fast:
-    BENCH_exp.fast.json; see benchmarks/exp_bench.py)."""
+    BENCH_exp.fast.json; see benchmarks/exp_bench.py). --trace also dumps
+    the Perfetto timeline TRACE_exp[.fast].json."""
     from benchmarks import exp_bench
 
     results = exp_bench.bench_matrix(
-        fast=fast,
+        fast=fast, trace=trace,
         progress=lambda c: emit(
             f"exp/{c['scenario']}/{c['algo']}", c["us_per_round"],
             f"acc={c['acc']:.4f} total_bits={c['total_bits']} "
@@ -389,13 +412,14 @@ def bench_robust(fast=False):
     return results
 
 
-def bench_hier(fast=False):
+def bench_hier(fast=False, trace=False):
     """Tree-of-aggregators parity + root-ingress scaling — emits
     BENCH_hier.json (fast: BENCH_hier.fast.json; see
-    benchmarks/hier_bench.py)."""
+    benchmarks/hier_bench.py). --trace also runs a small real
+    HierAsyncSimulator and dumps TRACE_hier[.fast].json."""
     from benchmarks import hier_bench
 
-    results = hier_bench.bench_hier(fast=fast)
+    results = hier_bench.bench_hier(fast=fast, trace=trace)
     par = results["counter_merge_parity"]
     emit("hier/parity", 0.0,
          f"bit_exact={'OK' if par['bit_exact'] else 'FAIL'} "
@@ -409,12 +433,13 @@ def bench_hier(fast=False):
     return results
 
 
-def bench_async(fast=False):
+def bench_async(fast=False, trace=False):
     """Async-vs-sync time-to-target — emits BENCH_async.json (fast:
-    BENCH_async.fast.json; see benchmarks/async_bench.py)."""
+    BENCH_async.fast.json; see benchmarks/async_bench.py). --trace also
+    dumps the virtual-time timeline TRACE_async[.fast].json."""
     from benchmarks import async_bench
 
-    results = async_bench.bench_async_vs_sync(fast=fast)
+    results = async_bench.bench_async_vs_sync(fast=fast, trace=trace)
     s, a = results["sync"], results["async"]
     emit("async/sync", (s["time_to_target_s"] or 0.0) * 1e6,
          f"final_acc={s['final_acc']:.4f} bits={s['total_bits']}")
@@ -426,6 +451,32 @@ def bench_async(fast=False):
          f"parity={'OK' if results['sync_parity']['bit_exact'] else 'FAIL'}")
     async_bench.write_artifacts(results)
     return results
+
+
+# benches that can also record an obs timeline (--trace)
+TRACEABLE = ("exp", "async", "hier")
+
+# repo-root artifact stems each bench owns; on a FAILED run the matching
+# {stem}[.fast].json files are deleted so a stale artifact from an earlier
+# green run can never satisfy `report.py --validate` for a now-broken bench
+ARTIFACTS = {
+    "sketch": ("BENCH_sketch",),
+    "round_sharded": ("BENCH_round_sharded",),
+    "serve": ("BENCH_serve",),
+    "exp": ("BENCH_exp", "TRACE_exp"),
+    "async": ("BENCH_async", "TRACE_async"),
+    "robust": ("BENCH_robust",),
+    "hier": ("BENCH_hier", "TRACE_hier"),
+}
+
+
+def _remove_stale_artifacts(name: str, fast: bool) -> None:
+    suffix = ".fast.json" if fast else ".json"
+    for stem in ARTIFACTS.get(name, ()):
+        path = f"{stem}{suffix}"
+        if os.path.exists(path):
+            os.remove(path)
+            print(f"# removed stale {path} (bench {name} failed)", flush=True)
 
 
 BENCHES = {
@@ -454,19 +505,27 @@ def main() -> None:
                     help="benchmark to run (same as --only)")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="benches that support it also dump a Perfetto "
+                         "timeline TRACE_<target>[.fast].json "
+                         f"(supported: {', '.join(TRACEABLE)})")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     only = args.bench or args.only
     todo = [only] if only else list(BENCHES)
     failures = []
     for name in todo:
+        kw = {"fast": args.fast}
+        if args.trace and name in TRACEABLE:
+            kw["trace"] = True
         try:
-            BENCHES[name](fast=args.fast)
+            BENCHES[name](**kw)
         except Exception:
             import traceback
 
             traceback.print_exc()
             failures.append(name)
+            _remove_stale_artifacts(name, args.fast)
     if failures:
         print(f"# FAILED: {', '.join(failures)}", flush=True)
         raise SystemExit(1)

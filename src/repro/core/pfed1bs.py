@@ -48,6 +48,7 @@ from repro.core import consensus, flatten, regularizer, rounds
 from repro.core import sketch as sk
 from repro.core import treesketch as ts
 from repro.kernels import ops as kops
+from repro.obs import trace as obstrace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,7 +158,7 @@ class PFed1BS:
     """
 
     def __init__(self, cfg: PFed1BSConfig, loss_fn: Callable, params_template,
-                 mesh=None):
+                 mesh=None, tracer=None):
         assert cfg.layout in ("flat", "leaf"), cfg.layout
         assert cfg.vote in ("exact", "popcount"), cfg.vote
         assert cfg.defense in ("none", "trim", "reputation"), cfg.defense
@@ -174,6 +175,11 @@ class PFed1BS:
                 f"round samples {cfg.participate}"
             )
         self.cfg = cfg
+        # Observability (DESIGN.md §12). The tracer is deliberately NOT part
+        # of the jit cache key: `_round_jit` takes `self` as a static arg
+        # hashed by identity, and swapping `self.tracer` mutates the same
+        # engine — enabling tracing never recompiles a round.
+        self.tracer = obstrace.NOOP if tracer is None else tracer
         self.loss_fn = loss_fn     # loss_fn(params, batch) -> scalar
         self.n = flatten.tree_size(params_template)
         if cfg.layout == "leaf":
@@ -405,12 +411,37 @@ class PFed1BS:
         w_full = jnp.zeros((k,), jnp.float32).at[idx].set(w_s)
         return consensus.majority_vote(signs_full, w_full)
 
-    @functools.partial(jax.jit, static_argnums=0)
     def round(self, state: FLState, batches, weights, key, participants=None):
         """One round of Algorithm 1: batches (K, R, B, ...) pytree, weights
         (K,) p_k, optional externally drawn participants (idx, active).
         Returns (state', metrics). Executor dispatch order: sharded_round
-        (shard_map, DESIGN.md §6) > fused_round (§4) > staged seed round."""
+        (shard_map, DESIGN.md §6) > fused_round (§4) > staged seed round.
+
+        Thin wrapper over the jitted `_round_jit`: with the tracer disabled
+        (the default) it is a tail call — no sync, no span, the dispatch is
+        one attribute check. With a wall-clock tracer bound, the round is
+        wrapped in a "round" span and blocked to completion so the span
+        measures execution, not dispatch (same convention as us_per_round).
+        """
+        tr = self.tracer
+        if not tr.enabled or tr.clock != "wall":
+            return self._round_jit(state, batches, weights, key, participants)
+        cfg = self.cfg
+        executor = (
+            ("hier" if cfg.topology is not None else "sharded")
+            if cfg.sharded_round
+            else ("fused" if cfg.fused_round else "staged")
+        )
+        with tr.span("round", track="engine", executor=executor,
+                     layout=cfg.layout, m=self.m):
+            out = self._round_jit(state, batches, weights, key, participants)
+            jax.block_until_ready(out)
+        return out
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _round_jit(self, state: FLState, batches, weights, key,
+                   participants=None):
+        """The jitted round body behind `round` (executor dispatch)."""
         if self.cfg.sharded_round:
             from repro.launch import fedexec  # trace-time import; no cycle
 
@@ -456,8 +487,8 @@ class PFed1BS:
             new_ef = state.ef.at[idx].set(ef_rows)
         else:
             signs = jnp.sign(zs) + (zs == 0)                   # {-1,+1}
-        signs = self.privatize_uplink(signs, idx, state.round)
-        packed = self._pack_uplink(signs)
+        wire = self.privatize_uplink(signs, idx, state.round)
+        packed = self._pack_uplink(wire)
 
         # server: weighted majority vote over the sampled clients (Lemma 1),
         # accumulated in natural client order and routed through the
@@ -465,7 +496,7 @@ class PFed1BS:
         # defense="none" and privacy=None — identical program). Dropped-out
         # rows (active=0) cast no vote.
         w_s = weights[idx] * active
-        v_new, new_rep = self.vote_defended(signs, idx, w_s, state.rep)
+        v_new, new_rep = self.vote_defended(wire, idx, w_s, state.rep)
 
         potential = self._potential_from_sketches(
             upd, zs_phi, v_new, task_loss, w_s
@@ -479,6 +510,16 @@ class PFed1BS:
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),
         }
+        if cfg.privacy is not None:
+            # sign bits the RR privatizer actually flipped on transmitting
+            # (active) rows — the obs registry's rr_flips counter
+            metrics["rr_flips"] = jnp.sum(
+                (wire != signs).astype(jnp.float32) * active[:, None]
+            )
+        if cfg.error_feedback:
+            metrics["ef_residual_norm"] = jnp.sqrt(
+                jnp.sum(jnp.square(new_ef))
+            )
         if cfg.defense == "reputation":
             metrics["rep_min"] = jnp.min(new_rep)
             metrics["rep_mean"] = jnp.mean(new_rep)
@@ -542,14 +583,14 @@ class PFed1BS:
             new_ef = jnp.where(mask[:, None] > 0, updated, state.ef)
             zs = jnp.where(mask[:, None] > 0, corrected, zs)
         signs = jnp.sign(zs) + (zs == 0)                       # {-1,+1}
-        signs = self.privatize_uplink(signs, all_ids, state.round)
-        packed = self._pack_uplink(signs)
+        wire = self.privatize_uplink(signs, all_ids, state.round)
+        packed = self._pack_uplink(wire)
 
         pw = weights * mask
         if cfg.defense == "none" and cfg.privacy is None:
-            v_new, new_rep = consensus.majority_vote(signs, pw), state.rep
+            v_new, new_rep = consensus.majority_vote(wire, pw), state.rep
         else:
-            v_new, new_rep = self.vote_defended(signs, all_ids, pw, state.rep)
+            v_new, new_rep = self.vote_defended(wire, all_ids, pw, state.rep)
 
         potential = self._potential(clients, v_new, task_loss, weights)
         metrics = {
@@ -560,6 +601,14 @@ class PFed1BS:
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),
         }
+        if cfg.privacy is not None:
+            metrics["rr_flips"] = jnp.sum(
+                (wire != signs).astype(jnp.float32) * mask[:, None]
+            )
+        if cfg.error_feedback:
+            metrics["ef_residual_norm"] = jnp.sqrt(
+                jnp.sum(jnp.square(new_ef))
+            )
         return (
             FLState(clients=clients, v=v_new, round=state.round + 1,
                     ef=new_ef, rep=new_rep),

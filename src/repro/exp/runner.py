@@ -38,6 +38,8 @@ from repro.data import synthetic as ds
 from repro.exp.scenarios import Scenario
 from repro.fl import comms
 from repro.models import smallnets as sn
+from repro.obs import registry as obsreg
+from repro.obs import trace as obstrace
 
 ALGOS = ("fedavg", "obda", "obcsaa", "zsignfed", "eden", "fedbat", "pfed1bs")
 
@@ -89,7 +91,7 @@ def make_task(cfg: ExpConfig):
 
 
 def build_engine(algo: str, cfg: ExpConfig, capacity: int, loss_fn, template,
-                 scenario: Scenario | None = None):
+                 scenario: Scenario | None = None, tracer=None):
     """One engine per cell, capacity = the scenario's static S. The
     scenario's adversary/privacy axes thread into the pfed1bs engine; the
     global-model baselines transmit float payloads with no vote to defend,
@@ -117,7 +119,7 @@ def build_engine(algo: str, cfg: ExpConfig, capacity: int, loss_fn, template,
                 defense=cfg.defense, trim_frac=cfg.trim_frac,
                 rep_beta=cfg.rep_beta,
             ),
-            loss_fn, template,
+            loss_fn, template, tracer=tracer,
         )
     if topology is not None:
         raise ValueError(
@@ -142,12 +144,20 @@ def build_engine(algo: str, cfg: ExpConfig, capacity: int, loss_fn, template,
     )
 
 
-def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
+def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig,
+             tracer=None) -> dict:
     """One (algorithm, scenario) cell: per-round loss + realized
     participation + Table-2 bit accounting + final (and optional periodic)
     per-client accuracy. Personalized algorithms are scored on each
     client's own model, global ones on the shared model — both against the
-    client's own test shard."""
+    client's own test shard.
+
+    With a wall-clock tracer the cell emits one "cell" span, per-round
+    uplink/downlink/vote counters (re-derivable against the returned
+    "billing" spec via obs.validate_trace), and threads the tracer into
+    the pfed1bs engine for per-round executor spans."""
+    tr = obstrace.NOOP if tracer is None else tracer
+    registry = obsreg.MetricsRegistry(tracer=tr)
     base = jax.random.key(cfg.seed)
     kd, kp, ke = jax.random.split(jax.random.fold_in(base, 17), 3)
     if cfg.noise_scale != 1.0:   # harder task = more template noise
@@ -165,9 +175,24 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
     num_tensors = len(jax.tree.leaves(template))
 
     capacity = scenario.capacity(cfg.num_clients)
-    eng = build_engine(algo, cfg, capacity, loss_fn, template, scenario)
+    eng = build_engine(
+        algo, cfg, capacity, loss_fn, template, scenario,
+        tracer=tracer if algo == "pfed1bs" else None,
+    )
     m_dim = eng.m if algo == "pfed1bs" else eng.spec.m
     state = eng.init(init_fn, jax.random.fold_in(base, 23))
+
+    # per-round tier surcharge for tree cells: the flat fl/comms.round_bits
+    # invoice plus the interior counter uplink and the per-tier broadcast
+    # (one m-bit consensus per level instead of one total)
+    extra_up = extra_down = 0
+    if algo == "pfed1bs" and scenario.topology is not None:
+        topo0 = scenario.topology.build(capacity)
+        hb0 = comms.hier_round_bits(
+            m=m_dim, leaf_widths=topo0.leaf_sizes, fan_out=topo0.fan_out
+        )
+        extra_up = sum(hb0["tier_uplink_bits"])
+        extra_down = hb0["downlink_bits"] - m_dim
 
     def evaluate(st):
         if hasattr(st, "clients"):       # personalized: own model, own shard
@@ -179,24 +204,54 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
         return float(accs.mean()), float(accs.std())
 
     losses, s_per_round, acc_curve, round_s = [], [], [], []
-    for r in range(cfg.rounds):
-        participants = scenario.draw_participants(kp, r, cfg.num_clients)
-        kb, kr = jax.random.split(jax.random.fold_in(ke, r))
-        batches = ds.sample_round_batches(kb, data, cfg.local_steps, cfg.batch)
-        t0 = time.time()
-        state, metrics = eng.round(
-            state, batches, data.weights, kr, participants
-        )
-        loss = float(metrics["task_loss"])   # blocks on the round's result
-        round_s.append(time.time() - t0)
-        losses.append(loss)
-        s_per_round.append(int(round(float(np.sum(np.asarray(participants[1]))))))
-        if cfg.eval_every and (r + 1) % cfg.eval_every == 0:
-            acc_curve.append({"round": r + 1, "acc": evaluate(state)[0]})
+    with tr.span("cell", track="exp", algo=algo, scenario=scenario.name,
+                 rounds=cfg.rounds):
+        for r in range(cfg.rounds):
+            participants = scenario.draw_participants(kp, r, cfg.num_clients)
+            kb, kr = jax.random.split(jax.random.fold_in(ke, r))
+            batches = ds.sample_round_batches(
+                kb, data, cfg.local_steps, cfg.batch
+            )
+            t0 = time.time()
+            state, metrics = eng.round(
+                state, batches, data.weights, kr, participants
+            )
+            loss = float(metrics["task_loss"])  # blocks on the round's result
+            round_s.append(time.time() - t0)
+            losses.append(loss)
+            s_r = int(round(float(np.sum(np.asarray(participants[1])))))
+            s_per_round.append(s_r)
+            if tr.enabled:
+                # per-round counter emission sums EXACTLY to the cell's
+                # "rounds" billing spec: accumulate_round_bits is a literal
+                # sum of round_bits over s_per_round, plus the constant
+                # per-round tier surcharge for topology cells
+                rb = comms.round_bits(
+                    algo, n=n, m=m_dim, s=s_r, num_tensors=num_tensors
+                )
+                registry.add("uplink_bits", rb["uplink_bits"] + extra_up)
+                registry.add("downlink_bits", rb["downlink_bits"] + extra_down)
+                if algo == "pfed1bs":
+                    registry.add("votes_cast", s_r)
+                    if cfg.defense == "trim":
+                        registry.add(
+                            "trimmed_voters",
+                            min(eng.trim_count, max(s_r - 1, 0)),
+                        )
+                    if "rr_flips" in metrics:
+                        registry.add(
+                            "rr_flips", int(round(float(metrics["rr_flips"])))
+                        )
+                    if "ef_residual_norm" in metrics:
+                        registry.observe(
+                            "ef_residual_norm",
+                            float(metrics["ef_residual_norm"]),
+                        )
+            if cfg.eval_every and (r + 1) % cfg.eval_every == 0:
+                acc_curve.append({"round": r + 1, "acc": evaluate(state)[0]})
+        acc, acc_std = evaluate(state)
     # steady state: round 0 pays jit trace+compile; eval is outside the timer
     steady = round_s[1:] or round_s
-
-    acc, acc_std = evaluate(state)
     bits = comms.accumulate_round_bits(
         algo, n=n, m=m_dim, s_per_round=s_per_round, num_tensors=num_tensors
     )
@@ -204,18 +259,15 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
     if algo == "pfed1bs" and scenario.topology is not None:
         # tree cells bill the interior tiers on top of the flat client
         # uplink, and one consensus broadcast per tier instead of one total
-        # (fl/comms.hier_round_bits; the executor's own metrics agree)
-        topo = scenario.topology.build(capacity)
-        hb = comms.hier_round_bits(
-            m=m_dim, leaf_widths=topo.leaf_sizes, fan_out=topo.fan_out
-        )
-        up = bits["uplink_bits"] + sum(hb["tier_uplink_bits"]) * cfg.rounds
-        down = bits["downlink_bits"] + (hb["downlink_bits"] - m_dim) * cfg.rounds
+        # (fl/comms.hier_round_bits; the executor's own metrics agree) —
+        # the per-round surcharge extra_up/extra_down was computed above
+        up = bits["uplink_bits"] + extra_up * cfg.rounds
+        down = bits["downlink_bits"] + extra_down * cfg.rounds
         bits = {
             **bits, "uplink_bits": up, "downlink_bits": down,
             "total_bits": up + down, "total_mb": (up + down) / 8e6,
         }
-        topo_tag = f"tree-fan{topo.fan_out}"
+        topo_tag = f"tree-fan{topo0.fan_out}"
     adv = scenario.adversary
     return {
         "algo": algo,
@@ -242,17 +294,27 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig) -> dict:
         "total_bits": bits["total_bits"],
         "total_mb": bits["total_mb"],
         "us_per_round": float(np.mean(steady)) * 1e6,
+        # re-derivation spec for obs.validate_trace: the cell's counter
+        # emissions sum to exactly what this spec re-computes from fl/comms
+        "billing": {
+            "kind": "rounds", "algo": algo, "n": n, "m": m_dim,
+            "s_per_round": s_per_round, "num_tensors": num_tensors,
+            "extra_uplink_bits": extra_up * cfg.rounds,
+            "extra_downlink_bits": extra_down * cfg.rounds,
+        },
     }
 
 
-def sweep(algos, scenarios, cfg: ExpConfig, progress=None) -> dict:
+def sweep(algos, scenarios, cfg: ExpConfig, progress=None,
+          tracer=None) -> dict:
     """The full matrix: cells + enough config to re-derive every number.
     `scenarios`: dict name -> Scenario (e.g. exp.scenarios.paper_matrix());
-    `progress`: optional callable(cell_dict) fired after each cell."""
+    `progress`: optional callable(cell_dict) fired after each cell;
+    `tracer`: optional wall-clock obs.Tracer threaded into every cell."""
     cells = []
     for sname, scenario in scenarios.items():
         for algo in algos:
-            cell = run_cell(algo, scenario, cfg)
+            cell = run_cell(algo, scenario, cfg, tracer=tracer)
             cells.append(cell)
             if progress is not None:
                 progress(cell)

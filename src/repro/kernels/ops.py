@@ -4,6 +4,14 @@ On TPU the Pallas kernels run compiled; on CPU hosts (this container) the
 default execution path is the pure-jnp reference (Pallas interpret mode is
 correct but slow — it is exercised in the test suite, not in production
 paths). `impl` can force either path.
+
+Every primitive dispatcher here is wrapped by `obs.probe.instrument` (see
+the rebinding loop at the bottom of the file): inside a
+`obs.probe.probing(...)` scope, eager calls are timed with compile
+separated out and bytes-moved estimated — the per-kernel table in
+benchmarks/report.py. Outside a probing scope the wrapper is a single
+module-global check; calls under an active jax trace pass through
+untimed, so jitted programs are never perturbed (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -437,3 +445,34 @@ def finish_vote_counts(counts: jax.Array, k, impl: str = "auto") -> jax.Array:
     return finish_vote_counts_pallas(
         cp, k=int(k), block_words=bw, interpret=not _on_tpu()
     )[:nw]
+
+
+# ---------------------------------------------------------------------------
+# Kernel probe instrumentation (obs/probe.py)
+# ---------------------------------------------------------------------------
+
+from repro.obs import probe as _probe  # noqa: E402  (after the dispatchers)
+
+# The PRIMITIVE dispatchers. vote_packed_ragged / vote_packed_trimmed are
+# deliberately NOT probed: they are thin compositions of probed primitives,
+# and wrapping both layers would double-count every inner call's time and
+# bytes in the per-kernel table.
+_PROBED = (
+    "fht",
+    "srht_forward_2d",
+    "srht_forward_packed_2d",
+    "srht_adjoint_2d",
+    "srht_adjoint_batched_2d",
+    "dfht",
+    "pack_signs",
+    "unpack_signs",
+    "vote_packed",
+    "hamming_packed",
+    "vote_popcount",
+    "popcount_partial",
+    "merge_counters",
+    "finish_vote_counts",
+)
+for _name in _PROBED:
+    globals()[_name] = _probe.instrument(_name, globals()[_name])
+del _name

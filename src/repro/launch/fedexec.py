@@ -49,6 +49,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import consensus, rounds
 from repro.fl import comms
 from repro.kernels import ops as kops
+from repro.obs import trace as obstrace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,13 +175,15 @@ def _client_wire(eng, state, batches, weights, key, participants):
         out_specs["zs"] = fed
     if cfg.error_feedback:
         out_specs["ef"] = fed
-    res = shard_map(
-        client_shards,
-        mesh=eng.fed_mesh,
-        in_specs=(fed, fed, fed, P(), P(), fed),
-        out_specs=out_specs,
-        check_rep=False,
-    )(clients_s, batches_s, idx, state.round, state.v, ef_s)
+    with eng.tracer.span("client_wire", track="sharded",
+                         shards=cfg.fed_shards, wire_only=wire_only):
+        res = shard_map(
+            client_shards,
+            mesh=eng.fed_mesh,
+            in_specs=(fed, fed, fed, P(), P(), fed),
+            out_specs=out_specs,
+            check_rep=False,
+        )(clients_s, batches_s, idx, state.round, state.v, ef_s)
     return idx, active, w_s, res
 
 
@@ -208,31 +211,35 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
     # diagnostics, see module docstring).
     packed = res["packed"]
 
-    if cfg.vote == "popcount":
-        # word-level integer majority — the uniform-p_k specialization of
-        # Lemma 1; `weights` does NOT enter the vote. The vote_uniform_ok
-        # metric (below) flags rounds where the sampled weights were not
-        # actually uniform and the consensus therefore differs from the
-        # weighted Lemma 1 object.
-        new_rep = state.rep
-        if cfg.defense == "trim":
-            # trimmed vote stays on the wire words: XOR-popcount Hamming
-            # ranking against a provisional packed consensus
-            # (kernels/ops.py::vote_packed_trimmed; ties -> +1 like every
-            # packed path). `active` doubles as the uniform weight vector so
-            # dropped-out rows neither vote nor get trimmed.
-            vw = consensus.trimmed_vote_packed(packed, active, eng.trim_count)
+    with eng.tracer.span("vote", track="sharded", kind=cfg.vote,
+                         defense=cfg.defense):
+        if cfg.vote == "popcount":
+            # word-level integer majority — the uniform-p_k specialization of
+            # Lemma 1; `weights` does NOT enter the vote. The vote_uniform_ok
+            # metric (below) flags rounds where the sampled weights were not
+            # actually uniform and the consensus therefore differs from the
+            # weighted Lemma 1 object.
+            new_rep = state.rep
+            if cfg.defense == "trim":
+                # trimmed vote stays on the wire words: XOR-popcount Hamming
+                # ranking against a provisional packed consensus
+                # (kernels/ops.py::vote_packed_trimmed; ties -> +1 like every
+                # packed path). `active` doubles as the uniform weight vector
+                # so dropped-out rows neither vote nor get trimmed.
+                vw = consensus.trimmed_vote_packed(
+                    packed, active, eng.trim_count
+                )
+            else:
+                vw = consensus.majority_vote_popcount(packed)
+            v_new = kops.unpack_signs(vw)[:m]
         else:
-            vw = consensus.majority_vote_popcount(packed)
-        v_new = kops.unpack_signs(vw)[:m]
-    else:
-        # Lemma 1 exactly: unpack server-side, vote in natural client order
-        # with zero weights on non-sampled rows, routed through the
-        # configured defense (eng.vote_defended — the same float
-        # accumulation as the fused round, see §4 note on vote ordering),
-        # hence bit-exact with it on a 1-device mesh.
-        pm = kops.unpack_signs(packed)[:, :m]
-        v_new, new_rep = eng.vote_defended(pm, idx, w_s, state.rep)
+            # Lemma 1 exactly: unpack server-side, vote in natural client
+            # order with zero weights on non-sampled rows, routed through the
+            # configured defense (eng.vote_defended — the same float
+            # accumulation as the fused round, see §4 note on vote ordering),
+            # hence bit-exact with it on a 1-device mesh.
+            pm = kops.unpack_signs(packed)[:, :m]
+            v_new, new_rep = eng.vote_defended(pm, idx, w_s, state.rep)
 
     # ---- simulator state bookkeeping (not wire traffic) --------------------
     clients = rounds.scatter_rows(state.clients, idx, res["upd"], active)
@@ -273,7 +280,7 @@ def sharded_round(eng, state, batches, weights, key, participants=None):
     return state, metrics
 
 
-def tree_counts(packed, topo):
+def tree_counts(packed, topo, tracer=None):
     """Aggregate packed uplink words through the topology's counter tree:
     per-leaf partial popcount counters, merged `fan_out` consecutive nodes
     at a time until the root holds the (W, 32) int32 global counts.
@@ -281,16 +288,30 @@ def tree_counts(packed, topo):
     Merge order follows the topology level by level to mirror what a real
     deployment ships — though by integer associativity ANY order yields the
     same counts (core/consensus.tree_vote_popcount's contract).
+
+    The optional tracer records one span per merge tier. This runs inside
+    the jitted round, so the spans land on the "jit-trace" track at trace
+    time — they show the tree's structure (tier count, node widths), not
+    steady-state runtime (DESIGN.md §12).
     """
+    tr = obstrace.NOOP if tracer is None else tracer
     counters, start = [], 0
-    for ls in topo.leaf_sizes:
-        counters.append(kops.popcount_partial(packed[start : start + int(ls)]))
-        start += int(ls)
+    with tr.span("tree_counts:leaves", track="hier",
+                 leaves=len(topo.leaf_sizes)):
+        for ls in topo.leaf_sizes:
+            counters.append(
+                kops.popcount_partial(packed[start : start + int(ls)])
+            )
+            start += int(ls)
+    level = 0
     while len(counters) > 1:
-        counters = [
-            kops.merge_counters(jnp.stack(counters[i : i + topo.fan_out]))
-            for i in range(0, len(counters), topo.fan_out)
-        ]
+        level += 1
+        with tr.span(f"tree_counts:merge_tier{level}", track="hier",
+                     nodes_in=len(counters), fan_out=topo.fan_out):
+            counters = [
+                kops.merge_counters(jnp.stack(counters[i : i + topo.fan_out]))
+                for i in range(0, len(counters), topo.fan_out)
+            ]
     return counters[0]
 
 
@@ -341,7 +362,8 @@ def hier_round(eng, state, batches, weights, key, participants=None):
         aw = active > 0
         voters = jnp.sum(aw.astype(jnp.int32))
         vw0 = kops.finish_vote_counts(
-            tree_counts(jnp.where(aw[:, None], packed, jnp.uint32(0)), topo),
+            tree_counts(jnp.where(aw[:, None], packed, jnp.uint32(0)), topo,
+                        tracer=eng.tracer),
             voters,
         )
         # Leaf-local disagreement vs the broadcast provisional consensus;
@@ -356,13 +378,16 @@ def hier_round(eng, state, batches, weights, key, participants=None):
         # Pass 2 — revote over the kept voters through the tree again.
         kw = kept > 0
         vw = kops.finish_vote_counts(
-            tree_counts(jnp.where(kw[:, None], packed, jnp.uint32(0)), topo),
+            tree_counts(jnp.where(kw[:, None], packed, jnp.uint32(0)), topo,
+                        tracer=eng.tracer),
             jnp.sum(kw.astype(jnp.int32)),
         )
     else:
         # undefended: count ALL S sampled rows, threshold at S — identical
         # to majority_vote_popcount(packed) (the flat executor's object).
-        vw = kops.finish_vote_counts(tree_counts(packed, topo), s)
+        vw = kops.finish_vote_counts(
+            tree_counts(packed, topo, tracer=eng.tracer), s
+        )
     v_new = kops.unpack_signs(vw)[:m]
 
     # ---- simulator state bookkeeping (not wire traffic) --------------------

@@ -1,0 +1,33 @@
+"""Unified observability layer: deterministic tracing, one metrics
+registry, kernel probing, and Perfetto-compatible export.
+
+See DESIGN.md §12 for the tracer model and clock domains; the usual
+entry points are re-exported here.
+"""
+from repro.obs.export import dump_trace, dumps_trace, to_chrome
+from repro.obs.probe import KernelProbe, probing
+from repro.obs.registry import (
+    COUNTERS,
+    MetricsRegistry,
+    assert_billing,
+    expected_async_bits,
+    expected_hier_bits,
+)
+from repro.obs.trace import NOOP, Tracer
+from repro.obs.validate_trace import validate_trace
+
+__all__ = [
+    "COUNTERS",
+    "KernelProbe",
+    "MetricsRegistry",
+    "NOOP",
+    "Tracer",
+    "assert_billing",
+    "dump_trace",
+    "dumps_trace",
+    "expected_async_bits",
+    "expected_hier_bits",
+    "probing",
+    "to_chrome",
+    "validate_trace",
+]

@@ -1,0 +1,72 @@
+"""Chrome trace-event JSON export — Perfetto-loadable, byte-stable.
+
+`to_chrome` assembles the serializable trace object: thread-name
+metadata for every named track (so Perfetto shows "server", "jit-trace",
+... instead of bare tids), then the recorded events in insertion order,
+plus the tracer's clock domain and the billing specs that
+`obs.validate_trace` re-derives against.
+
+`dumps_trace` is THE serialization: sorted keys, no whitespace. Combined
+with the virtual tracer's explicit-timestamp rule this is what makes two
+same-seed simulator runs produce byte-identical trace files — the
+determinism test pins `dumps_trace(to_chrome(...))` output, not some
+parsed-then-compared view.
+
+Open a dumped file at https://ui.perfetto.dev (or chrome://tracing):
+both accept the {"traceEvents": [...]} JSON object form with extra
+top-level keys.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.obs.trace import Tracer
+
+#: Reserved tid for counter events; real tracks start at 1.
+_COUNTER_TID = 0
+
+
+def to_chrome(tracer: Tracer, billing: list | None = None,
+              meta: dict | None = None) -> dict:
+    """Build the trace-event JSON object for `tracer`.
+
+    billing: list of billing-spec dicts (see obs.validate_trace for the
+    per-kind schemas) that let the validator re-derive expected bit
+    totals from fl/comms. meta: extra top-level keys (benchmark name,
+    fast flag, ...) — merged last, so they can't clobber traceEvents.
+    """
+    events: list = []
+    names = {_COUNTER_TID: "counters", **{tid: trk for trk, tid in tracer.tracks.items()}}
+    for tid in sorted(names):
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
+            "args": {"name": names[tid]},
+        })
+    events.extend(tracer.events)
+    obj = {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "clock": tracer.clock,
+        "counterTotals": dict(tracer.counter_totals),
+        "billing": list(billing or ()),
+    }
+    if meta:
+        for k, v in meta.items():
+            obj.setdefault(k, v)
+    return obj
+
+
+def dumps_trace(obj: dict) -> str:
+    """Canonical serialization — sorted keys, minimal separators. Every
+    trace file in the repo goes through here so byte-level comparison is
+    meaningful."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def dump_trace(path, tracer: Tracer, billing: list | None = None,
+               meta: dict | None = None) -> dict:
+    """Export `tracer` to `path`; returns the trace object."""
+    obj = to_chrome(tracer, billing=billing, meta=meta)
+    with open(path, "w") as fh:
+        fh.write(dumps_trace(obj))
+    return obj

@@ -1,0 +1,142 @@
+"""Kernel-level timing probe for the dispatch layer (`kernels/ops.py`).
+
+Every public dispatcher in kernels/ops.py is wrapped with `instrument`.
+With no probe active (the default, and all of training/serving unless a
+benchmark opts in) the wrapper is a single module-global `is None` check
+— the probe cannot slow down un-probed runs.
+
+Inside a `probing(KernelProbe())` block, each eager call is timed with
+`jax.block_until_ready` around the wrapped fn. Two conventions mirror
+`us_per_round` elsewhere in the repo:
+
+  * compile excluded by first-call separation: the first call for each
+    (kernel, signature) pair is recorded as compile time, subsequent
+    calls as steady-state — same convention as dropping round 0 from
+    the round microbenchmark.
+  * calls made while a jax trace is being built (the kernel is being
+    inlined into a larger jitted program) are passed through untimed:
+    timing a tracer-argument call would measure trace construction, not
+    the kernel, and perturbing an active trace is exactly what the obs
+    layer promises never to do.
+
+Bytes moved are ESTIMATED from argument/output array shapes (sum of
+nbytes both directions) — a lower bound on actual traffic that is good
+enough to rank kernels for the roofline section; benchmarks/report.py
+renders the per-kernel table from `KernelProbe.table()`.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+#: The active probe, or None. Module-global on purpose: the disabled
+#: fast path must be one load+compare, not a context lookup.
+_ACTIVE = None
+
+
+def _leaves(tree):
+    import jax
+
+    return jax.tree_util.tree_leaves(tree)
+
+
+def _nbytes(leaves) -> int:
+    total = 0
+    for leaf in leaves:
+        nb = getattr(leaf, "nbytes", None)
+        if nb is not None:
+            total += int(nb)
+    return total
+
+
+def _sig_key(leaves) -> tuple:
+    return tuple(
+        (getattr(x, "shape", None), str(getattr(x, "dtype", type(x).__name__)))
+        for x in leaves
+    )
+
+
+class KernelProbe:
+    """Accumulates per-kernel timing/byte records; one per `probing` scope."""
+
+    def __init__(self):
+        self.records: list = []
+        self._seen: set = set()
+
+    def record(self, name: str, seconds: float, arg_bytes: int,
+               out_bytes: int, sig: tuple) -> None:
+        key = (name, sig)
+        compile_call = key not in self._seen
+        self._seen.add(key)
+        self.records.append({
+            "kernel": name, "seconds": seconds, "compile": compile_call,
+            "arg_bytes": arg_bytes, "out_bytes": out_bytes,
+        })
+
+    def table(self) -> list:
+        """Aggregate to one row per kernel: steady-state calls/us, compile
+        time, and an effective-bandwidth estimate. Sorted by total
+        steady-state time, heaviest first."""
+        agg: dict = {}
+        for r in self.records:
+            row = agg.setdefault(r["kernel"], {
+                "kernel": r["kernel"], "calls": 0, "steady_s": 0.0,
+                "compile_calls": 0, "compile_s": 0.0, "bytes_moved": 0,
+            })
+            if r["compile"]:
+                row["compile_calls"] += 1
+                row["compile_s"] += r["seconds"]
+            else:
+                row["calls"] += 1
+                row["steady_s"] += r["seconds"]
+                row["bytes_moved"] += r["arg_bytes"] + r["out_bytes"]
+        out = []
+        for row in sorted(agg.values(), key=lambda r: -r["steady_s"]):
+            calls = row["calls"]
+            row["us_per_call"] = (row["steady_s"] / calls) * 1e6 if calls else None
+            row["est_gb_per_s"] = (
+                row["bytes_moved"] / row["steady_s"] / 1e9
+                if row["steady_s"] > 0 else None
+            )
+            out.append(row)
+        return out
+
+
+@contextmanager
+def probing(probe: KernelProbe):
+    """Activate `probe` for the dynamic extent of the block. Nesting
+    replaces (inner wins), restoring the outer probe on exit."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = probe
+    try:
+        yield probe
+    finally:
+        _ACTIVE = prev
+
+
+def instrument(name: str, fn):
+    """Wrap a kernel dispatcher for probing. Returns a function with the
+    same signature; see module docstring for the timing conventions."""
+
+    def probed(*args, **kwargs):
+        probe = _ACTIVE
+        if probe is None:
+            return fn(*args, **kwargs)
+        import jax
+
+        arg_leaves = _leaves((args, kwargs))
+        if any(isinstance(x, jax.core.Tracer) for x in arg_leaves):
+            return fn(*args, **kwargs)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args, **kwargs))
+        dt = time.perf_counter() - t0
+        probe.record(name, dt, _nbytes(arg_leaves), _nbytes(_leaves(out)),
+                     _sig_key(arg_leaves))
+        return out
+
+    probed.__name__ = name
+    probed.__qualname__ = name
+    probed.__doc__ = fn.__doc__
+    probed.__wrapped__ = fn
+    return probed

@@ -1,0 +1,122 @@
+"""One metrics registry for every tier, plus the shared billing checkers.
+
+Before this module each tier owned a private meter (`AsyncMeter`,
+`SimReport.check_billing`, `HierSimReport.check_billing`,
+`StreamReport`) and a private copy of the "re-derive expected bits from
+fl/comms and compare" walk. The meters survive as thin adapters over a
+`MetricsRegistry`; the re-derivation lives here, once, as
+`expected_async_bits` / `expected_hier_bits` / `assert_billing`, and the
+same functions back `obs.validate_trace`'s CI gate.
+
+A registry is a set of named cumulative counters plus a few observed
+series (values that aren't additive, e.g. flush sizes). Every `add`
+mirrors into the bound tracer as a Chrome counter event, so the exported
+timeline carries the same numbers the invariants are checked against —
+there is no second bookkeeping path to drift.
+"""
+from __future__ import annotations
+
+from repro.fl import comms
+from repro.obs.trace import NOOP, Tracer
+
+#: Counter catalog: every name a registry may `add` to, with meaning and
+#: unit. Tiers use the subset that applies to them; validate_trace and
+#: DESIGN.md §12 reference this table.
+COUNTERS = {
+    "uplink_bits": "client→server payload bits on the wire (Table-2 accounting)",
+    "downlink_bits": "server→client broadcast bits on the wire",
+    "votes_cast": "client sign-vectors entering a majority vote",
+    "rr_flips": "sign bits flipped by randomized-response privacy on the uplink",
+    "trimmed_voters": "voters discarded by the trimmed defense",
+    "ef_residual_norm": "series: ||error-feedback residual|| per round/flush",
+    "lru_hits": "serving LRU cache hits (decoded params reused)",
+    "lru_misses": "serving LRU cache misses (sketch materialized)",
+    "flush_sizes": "series: arrivals aggregated per async flush",
+    "tier_merges": "counter-tree partial-merge messages forwarded upward",
+}
+
+#: Names that record a series of observations rather than a running sum.
+SERIES = frozenset({"ef_residual_norm", "flush_sizes"})
+
+
+class MetricsRegistry:
+    """Named cumulative counters + observed series, mirrored to a tracer.
+
+    `add` is the additive path (bits, votes, flips, merges); `observe`
+    appends to a series. Unknown names are rejected so the catalog stays
+    the single source of truth.
+    """
+
+    def __init__(self, tracer: Tracer = NOOP):
+        self.tracer = tracer
+        self._counts: dict = {}
+        self._series: dict = {}
+
+    def add(self, name: str, delta, t: float | None = None) -> None:
+        if name not in COUNTERS or name in SERIES:
+            raise KeyError(f"unknown counter {name!r}; add it to obs.registry.COUNTERS")
+        self._counts[name] = self._counts.get(name, 0) + delta
+        self.tracer.count(name, delta, t=t)
+
+    def observe(self, name: str, value, t: float | None = None) -> None:
+        if name not in SERIES:
+            raise KeyError(f"{name!r} is not a series; see obs.registry.SERIES")
+        self._series.setdefault(name, []).append(value)
+        self.tracer.count(name, value, t=t)
+
+    def get(self, name: str, default=0):
+        return self._counts.get(name, default)
+
+    def series(self, name: str) -> list:
+        return list(self._series.get(name, ()))
+
+    @property
+    def totals(self) -> dict:
+        return dict(self._counts)
+
+    def to_dict(self) -> dict:
+        return {"counters": dict(self._counts),
+                "series": {k: list(v) for k, v in self._series.items()}}
+
+
+# -- shared billing re-derivation (satellite: dedupe check_billing) -----------
+
+def expected_async_bits(m: int, arrivals_per_flush, residual_arrivals: int = 0) -> dict:
+    """Expected wire bits for an async buffered run: each completed flush
+    bills like one pfed1bs round with s = arrivals (uplink s*m, downlink
+    m); arrivals still in flight at drain billed their uplink but saw no
+    broadcast. Returns {"uplink_bits", "downlink_bits"}."""
+    arrivals_per_flush = list(arrivals_per_flush)
+    acc = comms.accumulate_round_bits(
+        "pfed1bs", n=0, m=m, s_per_round=arrivals_per_flush
+    )
+    return {
+        "uplink_bits": acc["uplink_bits"] + residual_arrivals * m,
+        "downlink_bits": acc["downlink_bits"],
+    }
+
+
+def expected_hier_bits(m: int, uplink_events, versions: int, levels: int) -> dict:
+    """Expected wire bits for a hierarchical run. `uplink_events` is an
+    iterable of (tier, width): tier 0 = leaf clients sending m sign bits;
+    tier > 0 = an aggregator forwarding m packed counters of
+    `counter_bits(width)` bits each. Each finished version broadcasts m
+    bits down every level."""
+    up = 0
+    for tier, width in uplink_events:
+        up += m if tier == 0 else comms.counter_bits(width) * m
+    return {"uplink_bits": up, "downlink_bits": versions * levels * m}
+
+
+def assert_billing(label: str, got: dict, expect: dict) -> None:
+    """Exact-equality billing invariant shared by every tier's
+    check_billing. Bit counts are integers derived from the same fl/comms
+    formulas on both sides — any mismatch is a bookkeeping bug, so no
+    tolerance."""
+    for key in ("uplink_bits", "downlink_bits"):
+        g, e = int(got[key]), int(expect[key])
+        if g != e:
+            raise ValueError(
+                f"{label}: billing mismatch — {key}={g} does not re-derive "
+                f"from fl/comms (expected {e}, diff {g - e})"
+            )

@@ -1,0 +1,207 @@
+"""Deterministic span/event tracer — the timeline half of the obs layer.
+
+One `Tracer` records a flat list of Chrome trace-event dicts
+(obs/export.py serializes them into a Perfetto-loadable JSON file) plus a
+set of cumulative named counters. Two clock domains, fixed at
+construction:
+
+  clock="wall"     spans/instants are stamped from time.perf_counter()
+                   relative to the tracer's construction. This is the
+                   domain of everything that runs on real hardware: the
+                   engine round wrappers (core/pfed1bs.py), the serving
+                   tier (serve/engine.py), the scenario runner
+                   (exp/runner.py).
+  clock="virtual"  every event must carry an explicit virtual-time `t`
+                   (seconds on the simulator's EventQueue clock); reading
+                   the wall clock is a hard error by construction — which
+                   is exactly what makes two same-seed simulator runs
+                   produce BYTE-identical exported traces
+                   (tests/test_obs.py). This is the domain of sim/.
+
+Disabled tracers are free: `NOOP` (the module-level singleton) and any
+`Tracer(enabled=False)` early-return from every method, `span()` hands
+back one shared no-op context manager, and nothing is ever allocated —
+the instrumented hot paths pay one attribute check.
+
+JIT SAFETY: tracer calls are host-side Python only — they never create
+jax ops, so the jaxpr of an instrumented jitted function is IDENTICAL
+with the tracer enabled or disabled (pinned by tests/test_obs.py). A
+wall-clock `span()` opened while a jax trace is active (e.g. the per-tier
+merge spans inside launch/fedexec.py's jitted round body) is recorded on
+the dedicated "jit-trace" track: it fires once, at trace time, and shows
+the traced program's structure — it is NOT a runtime measurement, and a
+jit cache hit records nothing.
+
+Counter events (`count`) keep a cumulative total per name and emit one
+Chrome "C" sample per call; obs/export.py's `validate_trace` re-derives
+the final uplink/downlink totals from fl/comms and requires exact
+equality — the registry (obs/registry.py) is the layer that actually
+emits them.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _in_jax_trace() -> bool:
+    """True while a jax trace (jit/vmap/grad tracing) is being built.
+    Import is deferred so a disabled tracer never touches jax."""
+    try:
+        import jax
+
+        return not jax.core.trace_state_clean()
+    except Exception:
+        return False
+
+
+class _NullSpan:
+    """Shared no-op context manager for disabled/virtual-clock span()."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """One open wall-clock span; records a Chrome 'X' event on exit."""
+
+    __slots__ = ("tr", "name", "track", "args", "t0")
+
+    def __init__(self, tr, name, track, args):
+        self.tr = tr
+        self.name = name
+        self.track = track
+        self.args = args
+
+    def __enter__(self):
+        self.t0 = self.tr._now_us()
+        return self
+
+    def __exit__(self, *exc):
+        tr = self.tr
+        t1 = tr._now_us()
+        tr.events.append({
+            "name": self.name, "ph": "X", "ts": self.t0,
+            "dur": t1 - self.t0, "pid": 1, "tid": tr._tid(self.track),
+            "args": self.args,
+        })
+        return False
+
+
+class Tracer:
+    """Ordered event recorder with named tracks and cumulative counters.
+
+    events: Chrome trace-event dicts, insertion order (deterministic —
+    no sorting ever happens, so a deterministic caller yields a
+    deterministic list). Tracks are named lanes ("server", "jit-trace",
+    ...) mapped to integer tids in first-use order; obs/export.py emits
+    the thread_name metadata so Perfetto shows the names.
+    """
+
+    def __init__(self, clock: str = "wall", enabled: bool = True):
+        assert clock in ("wall", "virtual"), clock
+        self.clock = clock
+        self.enabled = enabled
+        self.events: list = []
+        self._totals: dict = {}
+        self._tids: dict = {}
+        self._t0 = time.perf_counter()
+
+    # -- time/track plumbing --------------------------------------------------
+
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def _ts(self, t) -> float:
+        """Resolve an event timestamp (microseconds). Virtual tracers
+        REQUIRE an explicit t — falling back to the wall clock would
+        silently break byte-identical replay."""
+        if t is not None:
+            return float(t) * 1e6
+        if self.clock == "virtual":
+            raise ValueError(
+                "virtual-clock tracer events need an explicit t= (seconds "
+                "of simulator time); wall-clock fallback is forbidden"
+            )
+        return self._now_us()
+
+    def _tid(self, track: str) -> int:
+        tid = self._tids.get(track)
+        if tid is None:
+            tid = len(self._tids) + 1
+            self._tids[track] = tid
+        return tid
+
+    @property
+    def tracks(self) -> dict:
+        """track name -> tid, first-use order."""
+        return dict(self._tids)
+
+    # -- recording ------------------------------------------------------------
+
+    def span(self, name: str, track: str = "main", **args):
+        """Wall-clock duration span (context manager). No-op when the
+        tracer is disabled OR on a virtual clock (virtual durations are
+        recorded with `complete`, which takes explicit times). Inside an
+        active jax trace the span lands on the "jit-trace" track — see
+        module docstring."""
+        if not self.enabled or self.clock == "virtual":
+            return _NULL_SPAN
+        if _in_jax_trace():
+            track = "jit-trace"
+        return _Span(self, name, track, args)
+
+    def complete(self, name: str, t0: float, t1: float,
+                 track: str = "main", **args) -> None:
+        """A finished span with explicit [t0, t1] timestamps in seconds —
+        the virtual-clock analogue of span()."""
+        if not self.enabled:
+            return
+        self.events.append({
+            "name": name, "ph": "X", "ts": float(t0) * 1e6,
+            "dur": (float(t1) - float(t0)) * 1e6, "pid": 1,
+            "tid": self._tid(track), "args": args,
+        })
+
+    def instant(self, name: str, t: float | None = None,
+                track: str = "main", **args) -> None:
+        """A point event (Chrome ph 'i', thread scope)."""
+        if not self.enabled:
+            return
+        self.events.append({
+            "name": name, "ph": "i", "s": "t", "ts": self._ts(t), "pid": 1,
+            "tid": self._tid(track), "args": args,
+        })
+
+    def count(self, name: str, delta, t: float | None = None) -> None:
+        """Add `delta` to counter `name` and emit one cumulative Chrome
+        counter sample. Integer deltas stay integers end to end (exact
+        re-derivation against fl/comms needs no float tolerance)."""
+        if not self.enabled:
+            return
+        total = self._totals.get(name, 0) + delta
+        self._totals[name] = total
+        self.events.append({
+            "name": name, "ph": "C", "ts": self._ts(t), "pid": 1, "tid": 0,
+            "args": {"value": total},
+        })
+
+    def counter_total(self, name: str, default=0):
+        """Current cumulative value of counter `name`."""
+        return self._totals.get(name, default)
+
+    @property
+    def counter_totals(self) -> dict:
+        return dict(self._totals)
+
+
+#: The shared disabled tracer — instrumented code defaults to this, so the
+#: un-traced hot path costs one `enabled` attribute check.
+NOOP = Tracer(enabled=False)

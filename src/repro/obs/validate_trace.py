@@ -1,0 +1,150 @@
+"""Schema + billing gate for exported trace files (`TRACE_*.json`).
+
+`validate_trace` checks three things, raising ValueError on the first
+violation:
+
+  1. Shape: Chrome trace-event structure Perfetto will accept — every
+     event has name/ph/pid/tid, ph is one of M/X/i/C, timestamps are
+     numeric and non-negative, spans have non-negative durations.
+  2. Counter sanity: the cumulative uplink_bits / downlink_bits counter
+     samples are monotone non-decreasing (bits on the wire never come
+     back), and the last sample equals the recorded counterTotals.
+  3. Billing: the trace must carry a non-empty `billing` list of specs,
+     and the summed expected uplink/downlink bits re-derived from
+     fl/comms over those specs must EXACTLY equal the counter totals.
+     This is the acceptance-criteria gate: the timeline's counters and
+     the paper's Table-2 accounting are the same numbers or the build
+     fails.
+
+Billing spec kinds (each a dict with "kind"):
+  "rounds":  {algo, n, m, s_per_round: [s...], num_tensors=1,
+              extra_uplink_bits=0, extra_downlink_bits=0}
+             → comms.accumulate_round_bits + the extras (topology cells
+               add per-tier counter traffic computed by hier_round_bits).
+  "async":   {m, arrivals_per_flush: [b...], residual_arrivals=0}
+             → registry.expected_async_bits.
+  "hier":    {m, uplink_events: [[tier, width]...], versions, levels}
+             → registry.expected_hier_bits.
+
+Runnable as a module for CI:
+    PYTHONPATH=src python -m repro.obs.validate_trace TRACE_exp.fast.json
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+
+from repro.fl import comms
+from repro.obs import registry as reg
+
+_PHASES = frozenset({"M", "X", "i", "C"})
+_MONOTONE = ("uplink_bits", "downlink_bits")
+
+
+def _num(v) -> bool:
+    return isinstance(v, numbers.Real) and not isinstance(v, bool)
+
+
+def _expected_for(spec: dict) -> dict:
+    kind = spec.get("kind")
+    if kind == "rounds":
+        acc = comms.accumulate_round_bits(
+            spec["algo"], n=spec["n"], m=spec["m"],
+            s_per_round=spec["s_per_round"],
+            num_tensors=spec.get("num_tensors", 1),
+        )
+        return {
+            "uplink_bits": acc["uplink_bits"] + spec.get("extra_uplink_bits", 0),
+            "downlink_bits": acc["downlink_bits"] + spec.get("extra_downlink_bits", 0),
+        }
+    if kind == "async":
+        return reg.expected_async_bits(
+            spec["m"], spec["arrivals_per_flush"],
+            residual_arrivals=spec.get("residual_arrivals", 0),
+        )
+    if kind == "hier":
+        return reg.expected_hier_bits(
+            spec["m"], spec["uplink_events"], spec["versions"], spec["levels"]
+        )
+    raise ValueError(f"billing spec has unknown kind {spec.get('kind')!r}")
+
+
+def validate_trace(obj: dict) -> dict:
+    """Validate a loaded trace object; returns {"events", "expected"} on
+    success, raises ValueError otherwise."""
+    if not isinstance(obj, dict):
+        raise ValueError("trace must be a JSON object")
+    events = obj.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        raise ValueError("traceEvents must be a non-empty list")
+    if obj.get("clock") not in ("wall", "virtual"):
+        raise ValueError(f"clock must be 'wall' or 'virtual', got {obj.get('clock')!r}")
+
+    last: dict = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"traceEvents[{i}] is not an object")
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in ev:
+                raise ValueError(f"traceEvents[{i}] missing {key!r}")
+        ph = ev["ph"]
+        if ph not in _PHASES:
+            raise ValueError(f"traceEvents[{i}] has unsupported ph {ph!r}")
+        if ph == "M":
+            continue
+        if not _num(ev.get("ts")) or ev["ts"] < 0:
+            raise ValueError(f"traceEvents[{i}] needs numeric ts >= 0")
+        if ph == "X" and (not _num(ev.get("dur")) or ev["dur"] < 0):
+            raise ValueError(f"traceEvents[{i}] span needs numeric dur >= 0")
+        if ph == "C":
+            value = ev.get("args", {}).get("value")
+            if not _num(value):
+                raise ValueError(f"traceEvents[{i}] counter needs numeric args.value")
+            name = ev["name"]
+            if name in _MONOTONE and value < last.get(name, 0):
+                raise ValueError(
+                    f"counter {name!r} decreases at traceEvents[{i}]: "
+                    f"{last[name]} -> {value}"
+                )
+            last[name] = value
+
+    totals = obj.get("counterTotals", {})
+    for name in _MONOTONE:
+        if name in last and last[name] != totals.get(name):
+            raise ValueError(
+                f"counterTotals[{name!r}]={totals.get(name)} disagrees with "
+                f"final counter sample {last[name]}"
+            )
+
+    billing = obj.get("billing")
+    if not isinstance(billing, list) or not billing:
+        raise ValueError("trace must carry a non-empty billing list")
+    expected = {"uplink_bits": 0, "downlink_bits": 0}
+    for spec in billing:
+        exp = _expected_for(spec)
+        expected["uplink_bits"] += exp["uplink_bits"]
+        expected["downlink_bits"] += exp["downlink_bits"]
+    got = {k: int(totals.get(k, 0)) for k in expected}
+    reg.assert_billing("trace", got, expected)
+    return {"events": len(events), "expected": expected}
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: python -m repro.obs.validate_trace TRACE.json [...]",
+              file=sys.stderr)
+        return 2
+    for path in argv:
+        with open(path) as fh:
+            obj = json.load(fh)
+        info = validate_trace(obj)
+        print(f"{path}: OK ({info['events']} events, "
+              f"uplink={info['expected']['uplink_bits']} "
+              f"downlink={info['expected']['downlink_bits']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,6 +25,8 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ArchConfig
+from repro.obs import registry as obsreg
+from repro.obs import trace as obstrace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,10 +80,15 @@ class ServeEngine:
     own model and KV cache.
     """
 
-    def __init__(self, arch: ArchConfig, store, cfg: EngineConfig):
+    def __init__(self, arch: ArchConfig, store, cfg: EngineConfig,
+                 tracer=None):
         self.arch = arch
         self.store = store
         self.cfg = cfg
+        # request→materialize→decode spans on the wall clock + LRU counters
+        # (DESIGN.md §12); NOOP tracer by default — zero overhead unprobed
+        self.tracer = obstrace.NOOP if tracer is None else tracer
+        self.registry = obsreg.MetricsRegistry(tracer=self.tracer)
         self.lru = ModelLRU(cfg.hot_models)
         self._pending = []
         self.mat_seconds = []       # per materialize-call wall time
@@ -137,13 +144,21 @@ class ServeEngine:
         cached = {c: self.lru.get(c) for c in dict.fromkeys(cids)}
         misses = [c for c, p in cached.items() if p is None]
         miss_set = set(misses)      # a request misses iff its model was not
-        self.req_misses += sum(c in miss_set for c in cids)   # resident when
-        self.req_hits += sum(c not in miss_set for c in cids)  # it arrived
+        n_miss = sum(c in miss_set for c in cids)             # resident when
+        n_hit = sum(c not in miss_set for c in cids)          # it arrived
+        self.req_misses += n_miss
+        self.req_hits += n_hit
+        if n_hit:
+            self.registry.add("lru_hits", n_hit)
+        if n_miss:
+            self.registry.add("lru_misses", n_miss)
         if misses:
             padded = misses + [misses[0]] * (self.cfg.max_batch - len(misses))
             t0 = time.perf_counter()
-            stacked = self.store.materialize(padded)
-            jax.block_until_ready(stacked)
+            with self.tracer.span("materialize", track="serve",
+                                  misses=len(misses)):
+                stacked = self.store.materialize(padded)
+                jax.block_until_ready(stacked)
             self.mat_seconds.append(time.perf_counter() - t0)
             self.mat_batches.append(len(misses))
             for i, c in enumerate(misses):
@@ -158,32 +173,41 @@ class ServeEngine:
         """prompts: (B, prompt_len) int32 -> greedy (B, gen_len)."""
         cfg = self.cfg
         b = prompts.shape[0]
-        params = jax.tree.map(
-            lambda *xs: jnp.stack(xs), *self._params_for(cids)
-        )
-        cache1 = lm.init_cache(self.arch, 1, cfg.prompt_len + cfg.gen_len)
-        cache = jax.tree.map(
-            lambda a: jnp.broadcast_to(a[None], (b,) + a.shape), cache1
-        )
-        prompts = jnp.asarray(prompts, jnp.int32)
-
-        t0 = time.perf_counter()
-        logits = None
-        for t in range(cfg.prompt_len):       # prefill by stepping
-            tok = prompts[:, t].reshape(b, 1, 1)
-            logits, cache = self._decode(params, tok, cache, jnp.int32(t))
-        toks = []
-        cur = jnp.argmax(logits[:, : self.arch.vocab], axis=-1).astype(jnp.int32)
-        for t in range(cfg.gen_len):
-            toks.append(cur)
-            tok = cur.reshape(b, 1, 1)
-            logits, cache = self._decode(
-                params, tok, cache, jnp.int32(cfg.prompt_len + t)
+        with self.tracer.span("request", track="serve", batch=b):
+            params = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *self._params_for(cids)
             )
-            cur = jnp.argmax(logits[:, : self.arch.vocab], axis=-1).astype(jnp.int32)
-        tokens = np.stack([np.asarray(t) for t in toks], axis=1)
-        self.decode_seconds += time.perf_counter() - t0
-        self.tokens_generated += b * cfg.gen_len
+            cache1 = lm.init_cache(self.arch, 1, cfg.prompt_len + cfg.gen_len)
+            cache = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (b,) + a.shape), cache1
+            )
+            prompts = jnp.asarray(prompts, jnp.int32)
+
+            t0 = time.perf_counter()
+            with self.tracer.span("decode", track="serve", batch=b,
+                                  gen_len=cfg.gen_len):
+                logits = None
+                for t in range(cfg.prompt_len):       # prefill by stepping
+                    tok = prompts[:, t].reshape(b, 1, 1)
+                    logits, cache = self._decode(
+                        params, tok, cache, jnp.int32(t)
+                    )
+                toks = []
+                cur = jnp.argmax(
+                    logits[:, : self.arch.vocab], axis=-1
+                ).astype(jnp.int32)
+                for t in range(cfg.gen_len):
+                    toks.append(cur)
+                    tok = cur.reshape(b, 1, 1)
+                    logits, cache = self._decode(
+                        params, tok, cache, jnp.int32(cfg.prompt_len + t)
+                    )
+                    cur = jnp.argmax(
+                        logits[:, : self.arch.vocab], axis=-1
+                    ).astype(jnp.int32)
+                tokens = np.stack([np.asarray(t) for t in toks], axis=1)
+            self.decode_seconds += time.perf_counter() - t0
+            self.tokens_generated += b * cfg.gen_len
         return BatchResult(client_ids=list(cids), tokens=tokens)
 
     # -- stats -----------------------------------------------------------------
@@ -193,6 +217,8 @@ class ServeEngine:
         return {
             "requests_hit": self.req_hits,
             "requests_miss": self.req_misses,
+            "lru_hits": self.lru.hits,
+            "lru_misses": self.lru.misses,
             "hit_rate": self.req_hits / max(self.req_hits + self.req_misses, 1),
             "materialize_calls": len(self.mat_seconds),
             "materialize_p50_ms": float(np.percentile(mat, 50) * 1e3),
@@ -210,3 +236,4 @@ class ServeEngine:
         self.mat_seconds, self.mat_batches = [], []
         self.decode_seconds = 0.0
         self.tokens_generated = 0
+        self.registry = obsreg.MetricsRegistry(tracer=self.tracer)

@@ -59,6 +59,8 @@ class StreamReport:
     materialize_p99_ms: float
     materialize_total_s: float
     tokens_generated: int
+    lru_hits: int = 0               # unique-id LRU counters (obs registry
+    lru_misses: int = 0             # mirrors these as lru_hits/lru_misses)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -110,4 +112,6 @@ def run_stream(
         materialize_p99_ms=s["materialize_p99_ms"],
         materialize_total_s=s["materialize_total_s"],
         tokens_generated=s["tokens_generated"],
+        lru_hits=s["lru_hits"],
+        lru_misses=s["lru_misses"],
     )

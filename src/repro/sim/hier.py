@@ -56,6 +56,8 @@ import numpy as np
 from repro.core import rounds
 from repro.fl import comms
 from repro.kernels import ops as kops
+from repro.obs import registry as obsreg
+from repro.obs import trace as obstrace
 from repro.sim.clock import ConstantLatency, EventQueue, LatencyModel
 
 
@@ -88,18 +90,25 @@ class HierSimConfig:
 class HierMeter:
     """Time-stamped per-tier billing. Uplink events: (t, tier_level,
     node_width, bits) — tier 0 is the client->leaf sketch hop; downlink
-    events: (t, bits) consensus broadcasts."""
+    events: (t, bits) consensus broadcasts. Like the flat AsyncMeter,
+    a thin adapter over obs.registry.MetricsRegistry — billing mirrors
+    onto the bound tracer's counter track."""
     m: int
     uplink_events: list = dataclasses.field(default_factory=list)
     downlink_events: list = dataclasses.field(default_factory=list)
+    registry: obsreg.MetricsRegistry = dataclasses.field(
+        default_factory=obsreg.MetricsRegistry
+    )
 
     def bill_uplink(self, t: float, tier: int, width: int) -> None:
         bits = self.m if tier == 0 else comms.counter_bits(width) * self.m
         self.uplink_events.append((float(t), int(tier), int(width), bits))
+        self.registry.add("uplink_bits", bits, t=t)
 
     def bill_downlink(self, t: float, levels: int) -> None:
         for _ in range(levels):
             self.downlink_events.append((float(t), self.m))
+        self.registry.add("downlink_bits", levels * self.m, t=t)
 
     @property
     def uplink_bits(self) -> int:
@@ -143,25 +152,22 @@ class HierSimReport:
         """Re-derive the invoice from fl/comms: every logged uplink message
         re-bills from its (tier, width) — m bits for a client sketch,
         counter_bits(width) * m for an aggregator counter — and every
-        version pays one m-bit broadcast per tier level."""
-        up = 0
-        for _, tier, width, _ in self.meter.uplink_events:
-            up += self.m if tier == 0 else comms.counter_bits(width) * self.m
-        levels = len(self.topology.level_widths())
-        return {"uplink_bits": up,
-                "downlink_bits": self.versions * levels * self.m}
+        version pays one m-bit broadcast per tier level. Delegates to the
+        shared checker in obs/registry.py (same walk as the flat async
+        tier's and the TRACE_* gate)."""
+        return obsreg.expected_hier_bits(
+            self.m,
+            [(tier, width) for _, tier, width, _ in self.meter.uplink_events],
+            self.versions,
+            len(self.topology.level_widths()),
+        )
 
     def check_billing(self) -> None:
         """Raise ValueError unless the meter re-derives exactly from
         fl/comms over the recorded message log."""
-        expect = self.expected_bits()
         got = {"uplink_bits": self.meter.uplink_bits,
                "downlink_bits": self.meter.downlink_bits}
-        if got != expect:
-            raise ValueError(
-                f"hier billing mismatch: meter {got} != comms re-invoice "
-                f"{expect}"
-            )
+        obsreg.assert_billing("hier meter", got, self.expected_bits())
 
     def to_dict(self) -> dict:
         return {
@@ -219,11 +225,16 @@ class HierAsyncSimulator:
     """
 
     def __init__(self, engine, cfg: HierSimConfig, weights,
-                 participants_fn: Callable, batch_fn: Callable):
+                 participants_fn: Callable, batch_fn: Callable, tracer=None):
         assert engine.cfg.defense == "none", (
             "defended votes need the global ranking only the synchronous "
             "root has — run them through fedexec.hier_round"
         )
+        if tracer is not None:
+            assert tracer.clock == "virtual" or not tracer.enabled, (
+                "HierAsyncSimulator needs a virtual-clock tracer"
+            )
+        self.tracer = obstrace.NOOP if tracer is None else tracer
         topo = cfg.topology
         assert topo.num_clients == engine.cfg.participate, (
             f"topology covers {topo.num_clients} clients, cohort is "
@@ -251,23 +262,30 @@ class HierAsyncSimulator:
         upd, task_loss, zs = self.eng.cohort_update(clients, batches, idx, v, rnd)
         if ef is None:
             signs = jnp.sign(zs) + (zs == 0)
-            signs = self.eng.privatize_uplink(signs, idx, rnd)
-            return upd, task_loss, self.eng._pack_uplink(signs), None
-        _, signs, new_rows = self.eng._ef_quantize(zs, ef[idx])
-        signs = self.eng.privatize_uplink(signs, idx, rnd)
-        return upd, task_loss, self.eng._pack_uplink(signs), new_rows
+            new_rows = None
+        else:
+            _, signs, new_rows = self.eng._ef_quantize(zs, ef[idx])
+        wire = self.eng.privatize_uplink(signs, idx, rnd)
+        flips = (
+            jnp.sum((wire != signs).astype(jnp.int32), axis=1)
+            if self.eng.cfg.privacy is not None else None
+        )
+        return upd, task_loss, self.eng._pack_uplink(wire), new_rows, flips
 
     def run(self, state, on_flush: Callable | None = None):
         """Drain cfg.max_versions tree rounds starting from a synchronous
         FLState. Returns (final FLState, HierSimReport)."""
         eng, cfg, topo = self.eng, self.cfg, self.topo
+        tr = self.tracer
         levels = topo.level_widths()          # [[leaf widths], ..., [S]]
         n_levels = len(levels)
         queue = EventQueue()
-        meter = HierMeter(m=eng.m)
+        registry = obsreg.MetricsRegistry(tracer=tr)
+        meter = HierMeter(m=eng.m, registry=registry)
         report = HierSimReport(m=eng.m, topology=topo, meter=meter)
         version = 0
         t = 0.0
+        last_finish_t = 0.0
         nodes: dict = {}                      # (level, i) -> _Node
         staged: dict = {}                     # per-version cohort outputs
         counter_msgs = 0
@@ -280,13 +298,15 @@ class HierAsyncSimulator:
             counter_msgs = 0
             idx, active = self.participants_fn(ver)
             batches = self.batch_fn(ver)
-            upd, task_loss, packed, ef_rows = self._cohort(
+            upd, task_loss, packed, ef_rows, flips = self._cohort(
                 st.clients, batches, idx, st.v, st.ef, jnp.int32(ver)
             )
             act_np = np.asarray(active)
             staged[ver] = {"idx": idx, "active": active, "upd": upd,
                            "task_loss": task_loss, "packed": packed,
-                           "ef_rows": ef_rows}
+                           "ef_rows": ef_rows, "flips": flips}
+            tr.instant("dispatch", t=t_now, track="server", version=ver,
+                       clients=int((act_np > 0).sum()))
             # per-version node states sized by the ACTIVE rows under each
             # subtree (a dropped-out client transmits nothing; its empty
             # contribution is a valid zero count, never waited for)
@@ -313,6 +333,9 @@ class HierAsyncSimulator:
             counts, nrows = node.take_pending()
             counter_msgs += 1
             meter.bill_uplink(t_now, level + 1, node.width)
+            registry.add("tier_merges", 1, t=t_now)
+            tr.instant("forward", t=t_now, track=f"tier{level + 1}",
+                       node=i, rows=nrows, width=node.width)
             delay = cfg.tier_spec(level).latency.duration(
                 cfg.seed, i, ver
             )
@@ -338,7 +361,7 @@ class HierAsyncSimulator:
             return st
 
         def finish(t_now: float, ver: int, st):
-            nonlocal version
+            nonlocal version, last_finish_t
             entry = staged.pop(ver)
             root = nodes[(n_levels - 1, 0)]
             counts, k = root.take_pending()
@@ -358,9 +381,17 @@ class HierAsyncSimulator:
             task = float(jnp.sum(entry["task_loss"] * w_s)
                          / jnp.maximum(jnp.sum(w_s), 1e-9))
             version += 1
+            arrivals = int(np.asarray(active).sum())
+            tr.complete("version", t0=last_finish_t, t1=t_now, track="server",
+                        version=version, arrivals=arrivals,
+                        counter_messages=counter_msgs)
+            last_finish_t = t_now
+            tr.instant("broadcast", t=t_now, track="server", version=version,
+                       levels=n_levels)
+            registry.add("votes_cast", arrivals, t=t_now)
             report.flushes.append(HierFlushRecord(
                 version=version, t=t_now,
-                arrivals=int(np.asarray(active).sum()),
+                arrivals=arrivals,
                 counter_messages=counter_msgs, task_loss=task,
             ))
             st = st._replace(clients=clients, v=v_new,
@@ -378,6 +409,12 @@ class HierAsyncSimulator:
             if ev.kind == "arrival":
                 ver, row, leaf = ev.payload
                 meter.bill_uplink(t, 0, 1)
+                tr.instant("arrive", t=t, track="server", client=ev.client,
+                           version=ver, leaf=leaf)
+                if tr.enabled and staged[ver]["flips"] is not None:
+                    registry.add(
+                        "rr_flips", int(staged[ver]["flips"][row]), t=t
+                    )
                 counts = kops.popcount_partial(
                     staged[ver]["packed"][row : row + 1]
                 )

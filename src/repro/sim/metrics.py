@@ -23,20 +23,32 @@ import dataclasses
 import numpy as np
 
 from repro.fl import comms
+from repro.obs import registry as obsreg
 
 
 @dataclasses.dataclass
 class AsyncMeter:
-    """Time-stamped bit billing: (t, bits) event lists per direction."""
+    """Time-stamped bit billing: (t, bits) event lists per direction.
+
+    Thin adapter over `obs.registry.MetricsRegistry` — every billing
+    event mirrors into the registry (and through it onto the bound
+    tracer's virtual-time counter track), while the local event lists
+    keep the per-timestamp view (`bits_by_second`) the capacity-planner
+    summaries need."""
     m: int
     uplink_events: list = dataclasses.field(default_factory=list)
     downlink_events: list = dataclasses.field(default_factory=list)
+    registry: obsreg.MetricsRegistry = dataclasses.field(
+        default_factory=obsreg.MetricsRegistry
+    )
 
     def bill_uplink(self, t: float) -> None:
         self.uplink_events.append((float(t), self.m))
+        self.registry.add("uplink_bits", self.m, t=t)
 
     def bill_downlink(self, t: float) -> None:
         self.downlink_events.append((float(t), self.m))
+        self.registry.add("downlink_bits", self.m, t=t)
 
     @property
     def uplink_bits(self) -> int:
@@ -114,28 +126,22 @@ class SimReport:
         """The fl/comms re-invoice of this run: each flush is billed like a
         sync round with s = its arrival count (m bits per upload + ONE
         m-bit broadcast), plus m uplink bits per still-buffered residual
-        arrival (transmitted, never flushed before the stop)."""
-        bits = comms.accumulate_round_bits(
-            "pfed1bs", n=0, m=self.m, s_per_round=self.arrivals_per_flush
+        arrival (transmitted, never flushed before the stop). Delegates to
+        the shared checker in obs/registry.py — the same walk gates the
+        hier tier and the exported TRACE_* artifacts."""
+        return obsreg.expected_async_bits(
+            self.m, self.arrivals_per_flush,
+            residual_arrivals=self.residual_arrivals,
         )
-        return {
-            "uplink_bits": bits["uplink_bits"] + self.residual_arrivals * self.m,
-            "downlink_bits": bits["downlink_bits"],
-        }
 
     def check_billing(self) -> None:
         """Raise ValueError unless the time-stamped meter re-derives
         exactly from fl/comms over the recorded flush log."""
-        expect = self.expected_bits()
         got = {
             "uplink_bits": self.meter.uplink_bits,
             "downlink_bits": self.meter.downlink_bits,
         }
-        if got != expect:
-            raise ValueError(
-                f"async billing mismatch: meter {got} != comms re-invoice "
-                f"{expect}"
-            )
+        obsreg.assert_billing("async meter", got, self.expected_bits())
 
     def to_dict(self) -> dict:
         extra = (
@@ -180,16 +186,14 @@ def validate_async_artifact(obj: dict) -> None:
     if not isinstance(parity, dict) or parity.get("bit_exact") is not True:
         raise ValueError("sync_parity cell missing or not bit_exact")
     a = obj["async"]
-    bits = comms.accumulate_round_bits(
-        "pfed1bs", n=0, m=obj["m"], s_per_round=a["arrivals_per_flush"]
+    obsreg.assert_billing(
+        "BENCH_async async block",
+        {"uplink_bits": a["uplink_bits"], "downlink_bits": a["downlink_bits"]},
+        obsreg.expected_async_bits(
+            obj["m"], a["arrivals_per_flush"],
+            residual_arrivals=a.get("residual_arrivals", 0),
+        ),
     )
-    expect_up = bits["uplink_bits"] + a.get("residual_arrivals", 0) * obj["m"]
-    if a["uplink_bits"] != expect_up or a["downlink_bits"] != bits["downlink_bits"]:
-        raise ValueError(
-            f"async bits do not re-derive from fl/comms: recorded "
-            f"({a['uplink_bits']}, {a['downlink_bits']}) != expected "
-            f"({expect_up}, {bits['downlink_bits']})"
-        )
     s = obj["sync"]
     sbits = comms.accumulate_round_bits(
         "pfed1bs", n=0, m=obj["m"], s_per_round=s["s_per_round"]

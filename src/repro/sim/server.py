@@ -59,6 +59,8 @@ import numpy as np
 
 from repro.core import consensus, rounds
 from repro.kernels import ops as kops
+from repro.obs import registry as obsreg
+from repro.obs import trace as obstrace
 from repro.sim import metrics as simmetrics
 from repro.sim.client import Roster
 from repro.sim.clock import ConstantLatency, EventQueue, LatencyModel
@@ -102,7 +104,7 @@ class AsyncSimulator:
     """
 
     def __init__(self, engine, cfg: AsyncConfig, weights,
-                 participants_fn: Callable, batch_fn: Callable):
+                 participants_fn: Callable, batch_fn: Callable, tracer=None):
         assert cfg.vote in ("exact", "packed"), cfg.vote
         assert cfg.buffer_size >= 1
         # defended votes (trim / reputation) exist only in float sign space;
@@ -110,6 +112,13 @@ class AsyncSimulator:
         assert engine.cfg.defense == "none" or cfg.vote == "exact", (
             "defense requires vote='exact' in the async tier"
         )
+        # Observability: events are stamped on the VIRTUAL clock so two
+        # same-seed runs export byte-identical traces (DESIGN.md §12).
+        if tracer is not None:
+            assert tracer.clock == "virtual" or not tracer.enabled, (
+                "AsyncSimulator needs a virtual-clock tracer"
+            )
+        self.tracer = obstrace.NOOP if tracer is None else tracer
         self.eng = engine
         self.cfg = cfg
         self.weights = jnp.asarray(weights, jnp.float32)
@@ -142,11 +151,18 @@ class AsyncSimulator:
         )
         if ef is None:
             signs = jnp.sign(zs) + (zs == 0)                   # {-1,+1}
-            signs = self.eng.privatize_uplink(signs, idx, rnd)
-            return upd, task_loss, zs, signs, None
-        _, signs, new_rows = self.eng._ef_quantize(zs, ef[idx])
-        signs = self.eng.privatize_uplink(signs, idx, rnd)
-        return upd, task_loss, zs, signs, new_rows
+            new_rows = None
+        else:
+            _, signs, new_rows = self.eng._ef_quantize(zs, ef[idx])
+        wire = self.eng.privatize_uplink(signs, idx, rnd)
+        # per-row RR flip counts for the obs registry — computed inside the
+        # same program unconditionally (tracer-independent, so enabling the
+        # tracer never changes this jaxpr), None when privacy is off
+        flips = (
+            jnp.sum((wire != signs).astype(jnp.int32), axis=1)
+            if self.eng.cfg.privacy is not None else None
+        )
+        return upd, task_loss, zs, wire, new_rows, flips
 
     # -- jitted flush bodies (cached per ragged buffer size) -----------------
 
@@ -198,15 +214,18 @@ class AsyncSimulator:
         on_flush(t, version, state) fires after every consensus bump (eval
         hooks; its cost is outside virtual time)."""
         eng, cfg = self.eng, self.cfg
+        tr = self.tracer
         k = eng.cfg.num_clients
         queue = EventQueue()
         roster = Roster(k)
-        meter = simmetrics.AsyncMeter(m=eng.m)
+        registry = obsreg.MetricsRegistry(tracer=tr)
+        meter = simmetrics.AsyncMeter(m=eng.m, registry=registry)
         report = simmetrics.SimReport(m=eng.m, meter=meter)
         staged: dict[int, dict] = {}
         buffer: list[_Buffered] = []
         version = 0
         t = 0.0
+        last_flush_t = 0.0
 
         def dispatch_cohort(t_now: float, ver: int, st):
             """Draw participants for `ver` over idle clients, run the
@@ -223,14 +242,16 @@ class AsyncSimulator:
             if not dispatchable:
                 return   # nobody to run — skip the cohort program entirely
             batches = self.batch_fn(ver)
-            upd, task_loss, _zs, signs, ef_rows = self._cohort(
+            upd, task_loss, _zs, signs, ef_rows, flips = self._cohort(
                 st.clients, batches, idx, st.v, st.ef, jnp.int32(ver)
             )
             # the pre-EF sketches are not staged: no flush reads them, and
             # a straggler cohort can stay staged for many versions
             entry = {"upd": upd, "task_loss": task_loss,
-                     "signs": signs, "ef_rows": ef_rows,
+                     "signs": signs, "ef_rows": ef_rows, "flips": flips,
                      "refs": len(dispatchable)}
+            tr.instant("dispatch", t=t_now, track="server", version=ver,
+                       clients=len(dispatchable))
             for row, c in dispatchable:
                 roster.dispatch(c, ver)
                 delay = cfg.latency.duration(cfg.seed, c, ver)
@@ -238,7 +259,7 @@ class AsyncSimulator:
             staged[ver] = entry
 
         def flush(t_now: float, st):
-            nonlocal version, buffer
+            nonlocal version, buffer, last_flush_t
             b = len(buffer)
             has_ef = st.ef is not None
             ids = jnp.asarray([e.client for e in buffer], jnp.int32)
@@ -276,13 +297,34 @@ class AsyncSimulator:
                 taus=[int(version - e.download_version) for e in buffer],
                 task_loss=task,
             ))
+            tr.complete("flush", t0=last_flush_t, t1=t_now, track="server",
+                        version=version + 1, arrivals=b)
+            last_flush_t = t_now
+            registry.add("votes_cast", b, t=t_now)
+            if eng.cfg.defense == "trim":
+                # trimmed_vote clamps the static trim count to voters-1 at
+                # trace time; mirror that clamp in the billed counter
+                registry.add(
+                    "trimmed_voters", min(eng.trim_count, max(b - 1, 0)),
+                    t=t_now,
+                )
+            if tr.enabled:
+                registry.observe("flush_sizes", b, t=t_now)
             buffer = []
             version += 1
             meter.bill_downlink(t_now)
+            tr.instant("broadcast", t=t_now, track="server", version=version)
             st = st._replace(
                 clients=clients, v=v_new, round=st.round + 1, ef=ef,
                 rep=rep_new,
             )
+            if tr.enabled and ef is not None:
+                # ||EF residual|| series — costs one device sync, so traced
+                # runs only
+                registry.observe(
+                    "ef_residual_norm",
+                    float(jnp.sqrt(jnp.sum(jnp.square(ef)))), t=t_now,
+                )
             if eng.cfg.defense == "reputation":
                 roster.set_reputation(np.asarray(rep_new))
             if on_flush is not None:
@@ -303,6 +345,10 @@ class AsyncSimulator:
             roster.arrive(ev.client, t)
             meter.bill_uplink(t)
             sv, row = ev.payload
+            tr.instant("arrive", t=t, track="server", client=ev.client,
+                       version=sv)
+            if tr.enabled and staged[sv]["flips"] is not None:
+                registry.add("rr_flips", int(staged[sv]["flips"][row]), t=t)
             buffer.append(_Buffered(
                 client=ev.client,
                 download_version=sv,

@@ -1,0 +1,388 @@
+"""Observability layer (src/repro/obs, DESIGN.md §12).
+
+Contracts pinned here:
+  * Disabled tracers are invisible: zero events, zero counters, and the
+    engine's round output is BIT-identical with tracing on or off — the
+    tracer lives entirely outside the jitted program (same jaxpr either
+    way).
+  * Virtual-clock determinism: a virtual tracer refuses wall-clock
+    fallback (explicit t= or ValueError), and two same-seed simulator
+    runs export BYTE-identical trace JSON — for both the flat async tier
+    and the hierarchical tree tier.
+  * One counter catalog: the registry rejects unknown names, mirrors
+    every add into the tracer, and the shared billing checkers
+    (expected_async_bits / expected_hier_bits / assert_billing) re-derive
+    the meters' totals exactly.
+  * validate_trace is a real gate: malformed events, non-monotone bit
+    counters, missing billing, and billing that doesn't re-derive all
+    raise.
+  * The kernel probe times eager calls only (first call per signature is
+    compile), and stays out of jit traces entirely.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import rounds
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.data import synthetic as ds
+from repro.fl import comms
+from repro.kernels import ops as kops
+from repro.models import smallnets as sn
+from repro.obs import probe as obsprobe
+from repro.obs import registry as obsreg
+from repro.sim.clock import ComputeNetworkLatency
+from repro.sim.hier import HierAsyncSimulator, HierSimConfig
+from repro.sim.server import AsyncConfig, AsyncSimulator
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_records_nothing():
+    tr = obs.Tracer(enabled=False)
+    with tr.span("round", track="engine", executor="fused"):
+        pass
+    tr.instant("dispatch", t=1.0)
+    tr.complete("flush", t0=0.0, t1=1.0)
+    tr.count("uplink_bits", 128, t=1.0)
+    assert tr.events == []
+    assert tr.counter_totals == {}
+    assert obs.NOOP.events == []
+
+
+def test_virtual_tracer_requires_explicit_t():
+    tr = obs.Tracer(clock="virtual")
+    with pytest.raises(ValueError, match="explicit t="):
+        tr.instant("dispatch")
+    with pytest.raises(ValueError, match="explicit t="):
+        tr.count("uplink_bits", 1)
+    # span() is a no-op on virtual clocks: durations go through complete()
+    with tr.span("never-recorded"):
+        pass
+    tr.instant("dispatch", t=0.5)
+    assert [e["name"] for e in tr.events] == ["dispatch"]
+
+
+def test_counters_cumulative_and_integer():
+    tr = obs.Tracer(clock="virtual")
+    tr.count("uplink_bits", 100, t=0.0)
+    tr.count("uplink_bits", 28, t=1.0)
+    assert tr.counter_total("uplink_bits") == 128
+    values = [e["args"]["value"] for e in tr.events]
+    assert values == [100, 128]            # cumulative samples
+    assert all(isinstance(v, int) for v in values)
+    assert all(e["tid"] == 0 for e in tr.events)   # counters share tid 0
+
+
+def test_wall_span_records_duration_and_named_track():
+    tr = obs.Tracer(clock="wall")
+    with tr.span("round", track="engine", executor="fused"):
+        pass
+    (ev,) = tr.events
+    assert ev["ph"] == "X" and ev["dur"] >= 0 and ev["ts"] >= 0
+    assert ev["args"] == {"executor": "fused"}
+    assert tr.tracks == {"engine": 1}
+    assert ev["tid"] == 1                  # named tracks start after tid 0
+
+
+def _toy_trace():
+    """A tiny valid virtual trace + its matching async billing spec."""
+    tr = obs.Tracer(clock="virtual")
+    reg = obsreg.MetricsRegistry(tracer=tr)
+    tr.instant("dispatch", t=0.0, track="server", version=0)
+    reg.add("uplink_bits", 2 * 64, t=0.5)
+    tr.complete("flush", t0=0.0, t1=1.0, track="server", version=1)
+    reg.add("downlink_bits", 64, t=1.0)
+    billing = [{"kind": "async", "m": 64, "arrivals_per_flush": [2]}]
+    return obs.to_chrome(tr, billing=billing)
+
+
+def test_chrome_export_shape_and_validation():
+    obj = _toy_trace()
+    # Perfetto-loadable: traceEvents + thread_name metadata for every lane
+    names = {e["args"]["name"] for e in obj["traceEvents"] if e["ph"] == "M"}
+    assert "counters" in names and "server" in names
+    info = obs.validate_trace(json.loads(obs.dumps_trace(obj)))
+    assert info["expected"] == {"uplink_bits": 128, "downlink_bits": 64}
+
+
+def test_export_byte_identical_replay():
+    a = obs.dumps_trace(_toy_trace())
+    b = obs.dumps_trace(_toy_trace())
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# registry + shared billing checkers
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_unknown_and_series_misuse():
+    reg = obsreg.MetricsRegistry()
+    with pytest.raises(KeyError):
+        reg.add("made_up_counter", 1)
+    with pytest.raises(KeyError):
+        reg.add("flush_sizes", 1)          # series: observe(), not add()
+    with pytest.raises(KeyError):
+        reg.observe("uplink_bits", 1.0)    # counter: add(), not observe()
+
+
+def test_registry_mirrors_into_tracer():
+    tr = obs.Tracer(clock="virtual")
+    reg = obsreg.MetricsRegistry(tracer=tr)
+    reg.add("uplink_bits", 96, t=0.0)
+    reg.add("votes_cast", 3, t=0.0)
+    reg.observe("flush_sizes", 3, t=0.0)
+    assert reg.get("uplink_bits") == 96
+    assert reg.series("flush_sizes") == [3]
+    assert tr.counter_total("uplink_bits") == 96
+    assert tr.counter_total("votes_cast") == 3
+
+
+def test_expected_async_bits_matches_comms():
+    m = 64
+    exp = obsreg.expected_async_bits(m, [3, 2], residual_arrivals=1)
+    acc = comms.accumulate_round_bits("pfed1bs", n=0, m=m, s_per_round=[3, 2])
+    assert exp == {"uplink_bits": acc["uplink_bits"] + m,
+                   "downlink_bits": acc["downlink_bits"]}
+
+
+def test_expected_hier_bits_matches_counter_bits():
+    m = 32
+    events = [(0, 1), (0, 1), (1, 4), (2, 8)]
+    exp = obsreg.expected_hier_bits(m, events, versions=2, levels=3)
+    up = 2 * m + comms.counter_bits(4) * m + comms.counter_bits(8) * m
+    assert exp == {"uplink_bits": up, "downlink_bits": 2 * 3 * m}
+
+
+def test_assert_billing_exact_or_raises():
+    obsreg.assert_billing("x", {"uplink_bits": 5, "downlink_bits": 0},
+                          {"uplink_bits": 5, "downlink_bits": 0})
+    with pytest.raises(ValueError, match="diff 1"):
+        obsreg.assert_billing("x", {"uplink_bits": 6, "downlink_bits": 0},
+                              {"uplink_bits": 5, "downlink_bits": 0})
+
+
+# ---------------------------------------------------------------------------
+# validate_trace rejections
+# ---------------------------------------------------------------------------
+
+def test_validate_trace_rejects_missing_billing():
+    obj = _toy_trace()
+    obj["billing"] = []
+    with pytest.raises(ValueError, match="billing"):
+        obs.validate_trace(obj)
+
+
+def test_validate_trace_rejects_billing_mismatch():
+    obj = _toy_trace()
+    obj["billing"][0]["m"] = 32            # half the actual wire traffic
+    with pytest.raises(ValueError, match="does not re-derive"):
+        obs.validate_trace(obj)
+
+
+def test_validate_trace_rejects_nonmonotone_bit_counter():
+    obj = _toy_trace()
+    (sample,) = [e for e in obj["traceEvents"]
+                 if e["ph"] == "C" and e["name"] == "uplink_bits"]
+    tampered = {**sample, "ts": sample["ts"] + 1,
+                "args": {"value": sample["args"]["value"] - 1}}
+    obj["traceEvents"].append(tampered)
+    with pytest.raises(ValueError, match="decreases"):
+        obs.validate_trace(obj)
+
+
+def test_validate_trace_rejects_bad_phase():
+    obj = _toy_trace()
+    obj["traceEvents"].append({"name": "x", "ph": "B", "pid": 1, "tid": 1,
+                               "ts": 0})
+    with pytest.raises(ValueError, match="unsupported ph"):
+        obs.validate_trace(obj)
+
+
+# ---------------------------------------------------------------------------
+# kernel probe
+# ---------------------------------------------------------------------------
+
+def test_probe_first_call_is_compile_then_steady():
+    z = jnp.sign(jax.random.normal(jax.random.key(0), (4, 64)))
+    probe = obs.KernelProbe()
+    with obs.probing(probe):
+        kops.pack_signs(z)
+        kops.pack_signs(z)
+        kops.pack_signs(z)
+    recs = [r for r in probe.records if r["kernel"] == "pack_signs"]
+    assert [r["compile"] for r in recs] == [True, False, False]
+    assert all(r["arg_bytes"] > 0 and r["out_bytes"] > 0 for r in recs)
+    (row,) = [r for r in probe.table() if r["kernel"] == "pack_signs"]
+    assert row["calls"] == 2 and row["compile_calls"] == 1
+    assert row["us_per_call"] is not None and row["est_gb_per_s"] is not None
+
+
+def test_probe_ignores_traced_calls_and_restores_on_exit():
+    z = jnp.sign(jax.random.normal(jax.random.key(0), (4, 64)))
+    probe = obs.KernelProbe()
+    with obs.probing(probe):
+        jitted = jax.jit(lambda a: kops.pack_signs(a))
+        jitted(z).block_until_ready()      # tracer args: pass through untimed
+        jitted(z).block_until_ready()
+    assert probe.records == []
+    assert obsprobe._ACTIVE is None        # deactivated after the block
+    kops.pack_signs(z)                     # and recording stays off
+    assert probe.records == []
+
+
+# ---------------------------------------------------------------------------
+# engine integration: tracer outside the jitted program
+# ---------------------------------------------------------------------------
+
+def _tiny_engine(tracer=None):
+    k = s = 4
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=k, train_per_client=32,
+        test_per_client=16,
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda kk: sn.init_mlp(kk, input_dim=784, hidden=8)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    eng = PFed1BS(
+        PFed1BSConfig(num_clients=k, participate=s, local_steps=2,
+                      m_ratio=0.05, chunk=2048),
+        loss_fn, template, tracer=tracer,
+    )
+    pf = lambda v: rounds.draw_participants(
+        jax.random.fold_in(jax.random.key(7), v), k, s, None
+    )
+    bf = lambda v: ds.sample_round_batches(
+        jax.random.fold_in(jax.random.key(9), v), data, 2, 16
+    )
+    return eng, data, init_fn, pf, bf
+
+
+def test_engine_round_bit_exact_with_and_without_tracer():
+    tr = obs.Tracer(clock="wall")
+    states = {}
+    for label, tracer in (("off", None), ("on", tr)):
+        eng, data, init_fn, pf, bf = _tiny_engine(tracer)
+        st = eng.init(init_fn, jax.random.key(2))
+        for r in range(2):
+            st, _ = eng.round(st, bf(r), data.weights, jax.random.key(0),
+                              pf(r))
+        states[label] = st
+    for a, b in zip(jax.tree.leaves(states["off"]),
+                    jax.tree.leaves(states["on"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    round_spans = [e for e in tr.events
+                   if e["name"] == "round" and e["ph"] == "X"]
+    assert len(round_spans) == 2
+    assert round_spans[0]["args"]["executor"] == "fused"
+
+
+def test_jaxpr_identical_with_and_without_tracer():
+    # the SAME engine with its tracer swapped must build a character-
+    # identical jaxpr: the tracer is not part of the jitted program, and
+    # since `_round_jit` hashes `self` by identity, the swap also never
+    # invalidates the jit cache (two separate engines would differ by
+    # closure repr addresses, which is why this mutates one engine)
+    eng, data, init_fn, pf, bf = _tiny_engine(None)
+    st = eng.init(init_fn, jax.random.key(2))
+    args = (st, bf(0), data.weights, jax.random.key(0), pf(0))
+    assert eng.tracer is obs.NOOP
+    jx_off = jax.make_jaxpr(eng._round_jit)(*args)
+    eng.tracer = obs.Tracer(clock="wall")
+    jx_on = jax.make_jaxpr(eng._round_jit)(*args)
+    assert str(jx_off) == str(jx_on)
+    assert eng.tracer.events == []         # tracing jaxprs records nothing
+
+
+# ---------------------------------------------------------------------------
+# simulator traces: byte-identical replay + billing parity
+# ---------------------------------------------------------------------------
+
+def _async_trace_bytes():
+    eng, data, init_fn, pf, bf = _tiny_engine()
+    tr = obs.Tracer(clock="virtual")
+    sim = AsyncSimulator(
+        eng,
+        AsyncConfig(buffer_size=2, staleness_exponent=0.5, max_versions=2,
+                    latency=ComputeNetworkLatency()),
+        data.weights, pf, bf, tracer=tr,
+    )
+    _, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+    d = rep.to_dict()
+    billing = [{"kind": "async", "m": eng.m,
+                "arrivals_per_flush": d["arrivals_per_flush"],
+                "residual_arrivals": d["residual_arrivals"]}]
+    obj = obs.to_chrome(tr, billing=billing)
+    return obs.dumps_trace(obj), tr, d
+
+
+def test_async_sim_trace_byte_identical_and_counters_match_meter():
+    blob1, tr, d = _async_trace_bytes()
+    blob2, *_ = _async_trace_bytes()
+    assert blob1 == blob2
+    info = obs.validate_trace(json.loads(blob1))
+    assert info["expected"]["uplink_bits"] == d["uplink_bits"]
+    assert tr.counter_total("uplink_bits") == d["uplink_bits"]
+    assert tr.counter_total("downlink_bits") == d["downlink_bits"]
+    names = {e["name"] for e in tr.events}
+    assert {"dispatch", "arrive", "flush", "broadcast"} <= names
+
+
+def _hier_trace_bytes():
+    from repro.launch.fedexec import HierTopology
+
+    k = s = 4
+    data = ds.make_federated_classification(
+        jax.random.key(0), num_clients=k, train_per_client=32,
+        test_per_client=16,
+    )
+    loss_fn = lambda p, b: sn.softmax_xent(sn.apply_mlp(p, b["x"]), b["y"])
+    init_fn = lambda kk: sn.init_mlp(kk, input_dim=784, hidden=8)
+    template = jax.eval_shape(init_fn, jax.random.key(1))
+    topo = HierTopology.build(s, fan_out=2)
+    eng = PFed1BS(
+        PFed1BSConfig(num_clients=k, participate=s, local_steps=2,
+                      m_ratio=0.05, chunk=2048, sharded_round=True,
+                      vote="popcount", topology=topo),
+        loss_fn, template,
+    )
+    pf = lambda v: rounds.draw_participants(
+        jax.random.fold_in(jax.random.key(7), v), k, s, None
+    )
+    bf = lambda v: ds.sample_round_batches(
+        jax.random.fold_in(jax.random.key(9), v), data, 2, 16
+    )
+    tr = obs.Tracer(clock="virtual")
+    sim = HierAsyncSimulator(
+        eng,
+        HierSimConfig(topology=topo, max_versions=2,
+                      client_latency=ComputeNetworkLatency()),
+        data.weights, pf, bf, tracer=tr,
+    )
+    _, rep = sim.run(eng.init(init_fn, jax.random.key(2)))
+    billing = [{
+        "kind": "hier", "m": eng.m,
+        "uplink_events": [[tier, width] for _, tier, width, _
+                          in rep.meter.uplink_events],
+        "versions": rep.versions,
+        "levels": len(topo.level_widths()),
+    }]
+    return obs.dumps_trace(obs.to_chrome(tr, billing=billing)), tr, rep
+
+
+def test_hier_sim_trace_byte_identical_and_counters_match_meter():
+    blob1, tr, rep = _hier_trace_bytes()
+    blob2, *_ = _hier_trace_bytes()
+    assert blob1 == blob2
+    obs.validate_trace(json.loads(blob1))
+    assert tr.counter_total("uplink_bits") == rep.meter.uplink_bits
+    assert tr.counter_total("downlink_bits") == rep.meter.downlink_bits
+    assert tr.counter_total("tier_merges") > 0
+    names = {e["name"] for e in tr.events}
+    assert {"dispatch", "arrive", "forward", "version", "broadcast"} <= names
