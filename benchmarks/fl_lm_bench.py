@@ -1,0 +1,315 @@
+"""fed_lm bench: pFed1BS over real models/lm.py architectures — emits
+BENCH_fl_lm.json (DESIGN.md §13).
+
+Four result blocks, in the order the numbers should be read:
+
+  parity    the CALIBRATION cell, on a tiny real config: the streamed
+            per-leaf encode (core/stream.stream_sketch, fed one leaf at a
+            time from a checkpoint/ckpt.py npz via
+            models/io.checkpoint_leaf_reader — the model is never
+            resident) must be BIT-exact with the engine's materialized
+            leaf-layout sketch flat_view(tree_sketch_forward(...)). If
+            this drifts, every memory row below describes a different
+            operator than the one the round votes on.
+  memory    per lm_matrix cell (reduced arch): the MemMeter peak of the
+            streamed encode vs the 4n bytes a materialized flat vector
+            would hold. The measured peak must EQUAL the closed-form
+            core/stream.stream_peak_bound — O(max-layer + m) — which
+            exp/report.validate_fl_lm re-derives per row.
+  rounds    real PFed1BS.round wall time over each cell's reduced arch on
+            a (fed, model) = (1, 1) mesh (full params AND the LoRA-style
+            attention subset), with the Table-2 bit bill through
+            fl/comms.subset_round_bits at the trainable count.
+  at_scale  the same geometry over the FULL (unreduced) configs — purely
+            analytic via jax.eval_shape (no allocation): n, m, streaming
+            peak bound, flat-vector bytes, subset bits. This is the
+            headline: federating an 8B model one-bit-sketched at
+            m_ratio=0.05 holds O(max-layer + m) host bytes per client,
+            not 4n.
+
+Run: PYTHONPATH=src python -m benchmarks.run fl_lm [--fast]
+     (or this module directly: python -m benchmarks.fl_lm_bench [--fast])
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+
+def _template(arch):
+    import jax
+
+    from repro.models import lm
+
+    return jax.eval_shape(
+        functools.partial(lm.init_params, arch), jax.random.PRNGKey(0)
+    )
+
+
+def _cell_tspec(cell, reduced: bool):
+    """(arch, template, tspec) for a cell — the SAME derivation
+    exp/report.validate_fl_lm re-runs against every artifact row."""
+    from repro.core import subset
+    from repro.core import treesketch as ts
+
+    arch = cell.arch_config(reduced=reduced)
+    template = _template(arch)
+    paths = (
+        subset.match_paths(template, cell.trainable) if cell.trainable else None
+    )
+    tspec = ts.make_tree_sketch_spec(
+        template, cell.m_ratio, chunk=cell.chunk, paths=paths
+    )
+    return arch, template, tspec
+
+
+def _parity_cell(progress=None) -> dict:
+    """Streamed-vs-materialized bit-exactness on a tiny real config, with
+    the streamed side reading one leaf at a time from an npz checkpoint."""
+    import jax
+
+    from repro.checkpoint import ckpt
+    from repro.core import stream
+    from repro.core import treesketch as ts
+    from repro.exp import scenarios
+    from repro.launch import fedexec
+    from repro.models import io as mio
+    from repro.models import lm
+
+    cell = scenarios.lm_matrix()["granite-attn"]
+    eng, mesh, template = fedexec.make_fed_lm_engine(
+        cell.arch_config(reduced=True), cell.fl_config()
+    )
+    params = lm.init_params(cell.arch_config(reduced=True), jax.random.PRNGKey(3))
+
+    materialized = np.asarray(
+        jax.jit(
+            lambda t: ts.flat_view(eng.tspec, ts.tree_sketch_forward(eng.tspec, t))
+        )(params)
+    )
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "client0.npz")
+        ckpt.save_checkpoint(path, params)
+        stored_paths, get_leaf = mio.checkpoint_leaf_reader(path)
+        meter = stream.MemMeter()
+        streamed = stream.stream_sketch(eng.tspec, get_leaf, meter=meter)
+    bit_exact = bool(np.array_equal(streamed, materialized))
+    out = {
+        "cell": cell.name,
+        "arch": cell.arch,
+        "reduced": True,
+        "n": eng.n,
+        "n_trainable": eng.n_trainable,
+        "m": eng.m,
+        "bit_exact": bit_exact,
+        "checkpoint_leaves": len(stored_paths),
+        "stream_peak_bytes": meter.peak,
+    }
+    if progress is not None:
+        progress("parity", out)
+    return out
+
+
+def _memory_rows(cells, progress=None) -> list:
+    """Measured MemMeter peak of the streamed encode per reduced cell."""
+    import jax
+
+    from repro.core import stream, subset
+    from repro.models import lm
+
+    rows = []
+    for cell in cells:
+        arch, template, tspec = _cell_tspec(cell, reduced=True)
+        params = lm.init_params(arch, jax.random.PRNGKey(3))
+        leaves = dict(subset.leaf_paths(params))
+        meter = stream.MemMeter()
+        stream.stream_sketch(tspec, lambda p: leaves[p], meter=meter)
+        n_total = sum(
+            int(np.prod(l.shape)) if l.shape else 1 for l in leaves.values()
+        )
+        row = {
+            "cell": cell.name,
+            "arch": cell.arch,
+            "reduced": True,
+            "n": n_total,
+            "n_trainable": tspec.n,
+            "m": tspec.m,
+            "peak_bytes": meter.peak,
+            "peak_bound_bytes": stream.stream_peak_bound(tspec),
+            "flat_bytes": 4 * n_total,
+        }
+        rows.append(row)
+        if progress is not None:
+            progress(f"memory:{cell.name}", row)
+    return rows
+
+
+def _round_rows(cells, fast: bool, progress=None) -> list:
+    """Real fed_lm rounds on a (1, 1) mesh: wall time + Table-2 billing."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fl import comms
+    from repro.launch import fedexec
+    from repro.models import io as mio
+    from repro.models import lm
+
+    reps = 2 if fast else 4
+    rows = []
+    for cell in cells:
+        arch = cell.arch_config(reduced=True)
+        eng, mesh, template = fedexec.make_fed_lm_engine(arch, cell.fl_config())
+        sh = fedexec.fed_lm_shardings(arch, template, mesh)
+        state = fedexec.place_fed_lm_state(
+            eng.init(lambda k: lm.init_params(arch, k), jax.random.PRNGKey(0)),
+            sh,
+        )
+        k, r, b = cell.num_clients, cell.local_steps, cell.batch
+        mk = lambda key: mio.make_batch(arch, key, b, cell.seq)
+        batches = jax.vmap(
+            lambda key: jax.vmap(mk)(jax.random.split(key, r))
+        )(jax.random.split(jax.random.PRNGKey(1), k))
+        batches = fedexec.place_fed_lm_batches(batches, sh)
+        weights = jnp.ones((k,)) / k
+
+        state, metrics = eng.round(state, batches, weights, jax.random.PRNGKey(2))
+        jax.block_until_ready(state)                        # compile + warm
+        t0 = time.perf_counter()
+        for i in range(reps):
+            state, metrics = eng.round(
+                state, batches, weights, jax.random.PRNGKey(3 + i)
+            )
+        jax.block_until_ready(state)
+        us = (time.perf_counter() - t0) / reps * 1e6
+
+        row = {
+            "cell": cell.name,
+            "arch": cell.arch,
+            "reduced": True,
+            "n": eng.n,
+            "n_trainable": eng.n_trainable,
+            "m": eng.m,
+            "participate": cell.participate,
+            "local_steps": cell.local_steps,
+            "us_per_round": us,
+            "task_loss": float(metrics["task_loss"]),
+            "uplink_bits": int(metrics["uplink_bits"]),
+            "downlink_bits": int(metrics["downlink_bits"]),
+            "bits": comms.subset_round_bits(
+                "pfed1bs", n_total=eng.n, n_trainable=eng.n_trainable,
+                m=eng.m, s=cell.participate,
+            ),
+        }
+        rows.append(row)
+        if progress is not None:
+            progress(f"round:{cell.name}", row)
+    return rows
+
+
+def _at_scale_rows(cells, progress=None) -> list:
+    """Full-config geometry, analytic (eval_shape — nothing allocated)."""
+    from repro.core import flatten, stream
+    from repro.fl import comms
+
+    rows = []
+    for cell in cells:
+        arch, template, tspec = _cell_tspec(cell, reduced=False)
+        n_total = flatten.tree_size(template)
+        row = {
+            "cell": cell.name,
+            "arch": cell.arch,
+            "reduced": False,
+            "n": n_total,
+            "n_trainable": tspec.n,
+            "m": tspec.m,
+            "peak_bound_bytes": stream.stream_peak_bound(tspec),
+            "flat_bytes": 4 * n_total,
+            "bits": comms.subset_round_bits(
+                "pfed1bs", n_total=n_total, n_trainable=tspec.n, m=tspec.m,
+                s=cell.participate,
+            ),
+        }
+        rows.append(row)
+        if progress is not None:
+            progress(f"at_scale:{cell.name}", row)
+    return rows
+
+
+def bench_fl_lm(fast: bool = False, progress=None) -> dict:
+    from repro.exp import scenarios
+
+    matrix = scenarios.lm_matrix()
+    cells = list(matrix.values())
+    round_cells = (
+        [matrix["granite-full"], matrix["granite-attn"]] if fast else cells
+    )
+    return {
+        "bench": "fl_lm",
+        "fast": fast,
+        "parity": _parity_cell(progress=progress),
+        "memory": _memory_rows(cells, progress=progress),
+        "rounds": _round_rows(round_cells, fast, progress=progress),
+        "at_scale": _at_scale_rows(cells, progress=progress),
+    }
+
+
+def fl_lm_markdown(results: dict) -> str:
+    lines = [
+        "# Federating a real LM (BENCH_fl_lm)",
+        "",
+        "| cell | n | trainable | m | stream peak (bytes) | flat vector (bytes) | uplink bits/round |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for row in results["at_scale"]:
+        lines.append(
+            f"| {row['cell']} | {row['n']:,} | {row['n_trainable']:,} | "
+            f"{row['m']:,} | {row['peak_bound_bytes']:,} | "
+            f"{row['flat_bytes']:,} | {row['bits']['uplink_bits']:,} |"
+        )
+    lines += [
+        "",
+        "Streamed per-leaf sketching holds O(max-layer + m) host bytes per "
+        "client — never the 4n flat vector — and is bit-exact with the "
+        "materialized leaf-layout sketch (parity cell).",
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def write_artifacts(results: dict, out_path: str | None = None) -> str:
+    """BENCH_fl_lm.json writer; --fast runs land in BENCH_fl_lm.fast.json
+    and never touch the canonical artifacts. The canonical run also
+    renders experiments/bench/FL_LM.md."""
+    fast = bool(results.get("fast"))
+    if out_path is None:
+        out_path = "BENCH_fl_lm.fast.json" if fast else "BENCH_fl_lm.json"
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    if not fast:
+        os.makedirs("experiments/bench", exist_ok=True)
+        with open("experiments/bench/BENCH_fl_lm.json", "w") as f:
+            json.dump(results, f, indent=2)
+        with open("experiments/bench/FL_LM.md", "w") as f:
+            f.write(fl_lm_markdown(results))
+    return out_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    results = bench_fl_lm(
+        fast=args.fast,
+        progress=lambda tag, row: print(f"{tag}: {row}", flush=True),
+    )
+    path = write_artifacts(results)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

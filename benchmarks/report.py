@@ -57,7 +57,21 @@ BENCH_SCHEMAS = {
         "counter_merge_parity.engine_cells", "scaling",
         "root_ingress_growth", "simulated_note",
     ],
+    "BENCH_fl_lm": [
+        "parity.bit_exact", "parity.stream_peak_bytes", "memory", "rounds",
+        "at_scale",
+    ],
 }
+
+# metrics the perf-regression gate (--compare-baselines) never fails on:
+# wall-clock and throughput vary across runners; the gate holds the line
+# on the DERIVED numbers (bits, bytes, accuracy, parity flags, geometry),
+# which are deterministic for fixed seeds.
+DEFAULT_COMPARE_IGNORE = (
+    r"_us\b|_ms\b|us_per|ms_per|_s\b|speedup|time_to_target|per_sec"
+    r"|gb_per_s|compile_s|wall|arrivals_per_flush|stream_peak_bytes"
+    r"|doubling_ratios|time_growth"   # ratios of wall times drift too
+)
 
 
 def _dig(obj, dotted: str) -> bool:
@@ -119,6 +133,16 @@ def validate_bench_artifacts(fast: bool, root: str = ".") -> list[str]:
                 validate_hier(obj)
             except ValueError as e:
                 problems.append(f"{path}: {e}")
+        if stem == "BENCH_fl_lm" and not any(p.startswith(path) for p in problems):
+            # streamed-vs-materialized sketch parity bit-exact, measured
+            # streaming peak == the O(max-layer + m) closed form re-derived
+            # per row, subset bits re-invoiced via fl/comms.subset_round_bits
+            from repro.exp.report import validate_fl_lm
+
+            try:
+                validate_fl_lm(obj)
+            except ValueError as e:
+                problems.append(f"{path}: {e}")
     return problems
 
 
@@ -138,14 +162,25 @@ def numeric_leaves(obj, prefix: str = "") -> dict:
 
 
 def compare_artifacts(old: dict, new: dict, tolerance: float,
-                      max_rows: int = 25) -> list[str]:
+                      max_rows: int = 25, ignore: str | None = None) -> list[str]:
     """Per-metric relative deltas between two bench artifacts; returns the
     list of violations (metrics whose |relative delta| exceeds
     `tolerance`). Prints a markdown table of the largest movers plus every
     violation; metrics present in only one file are reported but never
-    violations (schema drift is --validate's job)."""
+    violations (schema drift is --validate's job). `ignore`: regex of
+    metric paths excluded from comparison entirely (the regression gate
+    passes DEFAULT_COMPARE_IGNORE so runner-dependent timings never fail
+    CI)."""
+    import re
+
     a, b = numeric_leaves(old), numeric_leaves(new)
     shared = sorted(set(a) & set(b))
+    if ignore:
+        rx = re.compile(ignore)
+        skipped = [k for k in shared if rx.search(k)]
+        shared = [k for k in shared if not rx.search(k)]
+        if skipped:
+            print(f"(ignoring {len(skipped)} timing/throughput metrics)")
     deltas = {}
     for key in shared:
         base = abs(a[key])
@@ -216,6 +251,16 @@ def main():
                          "artifacts; exit 1 if any exceeds --tolerance")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="relative delta allowed by --compare (default 0.25)")
+    ap.add_argument("--ignore", default=None, metavar="REGEX",
+                    help="metric paths matching REGEX are excluded from "
+                         "--compare / --compare-baselines (default for "
+                         "--compare-baselines: the built-in timing filter)")
+    ap.add_argument("--compare-baselines", default=None, metavar="DIR",
+                    help="perf-regression gate: compare every "
+                         "BENCH_*.fast.json baseline in DIR against the "
+                         "fresh repo-root artifact of the same name, "
+                         "ignoring timing metrics; exit 1 on any drift "
+                         "past --tolerance or any missing fresh artifact")
     ap.add_argument("--kernels", nargs="?", const="experiments/bench/kernels.json",
                     metavar="PATH", default=None,
                     help="render the per-kernel probe table from the "
@@ -223,9 +268,37 @@ def main():
     args = ap.parse_args()
     if args.compare:
         old, new = (json.load(open(p)) for p in args.compare)
-        violations = compare_artifacts(old, new, args.tolerance)
+        violations = compare_artifacts(old, new, args.tolerance,
+                                       ignore=args.ignore)
         if violations:
             sys.exit(1)
+        return
+    if args.compare_baselines:
+        ignore = args.ignore or DEFAULT_COMPARE_IGNORE
+        baselines = sorted(
+            glob.glob(os.path.join(args.compare_baselines, "BENCH_*.fast.json"))
+        )
+        if not baselines:
+            print(f"no BENCH_*.fast.json baselines in {args.compare_baselines}")
+            sys.exit(1)
+        failed = []
+        for base_path in baselines:
+            name = os.path.basename(base_path)
+            fresh_path = name
+            print(f"\n## {name}")
+            if not os.path.exists(fresh_path):
+                print(f"FRESH MISSING: {fresh_path} (did its bench run?)")
+                failed.append(name)
+                continue
+            old = json.load(open(base_path))
+            new = json.load(open(fresh_path))
+            if compare_artifacts(old, new, args.tolerance, ignore=ignore):
+                failed.append(name)
+        if failed:
+            print(f"\nPERF REGRESSION GATE FAILED: {', '.join(failed)}")
+            sys.exit(1)
+        print(f"\nregression gate: {len(baselines)} baselines within "
+              f"{args.tolerance:.0%}")
         return
     if args.kernels:
         obj = json.load(open(args.kernels))

@@ -39,11 +39,20 @@ same protocols); the full-scale numbers live in the dry-run roofline.
                   the root-ingress-vs-client-count scaling curve 10^3 ->
                   10^6 clients, billed via fl/comms.hier_round_bits
                   (BENCH_hier.json; --fast emits BENCH_hier.fast.json)
+  fl_lm           pFed1BS over real models/lm.py configs: streamed
+                  per-leaf sketch parity (bit-exact vs materialized),
+                  O(max-layer + m) streaming peak vs model size, real
+                  round times on the (fed, model) mesh, analytic at-scale
+                  geometry + subset billing (BENCH_fl_lm.json; --fast
+                  emits BENCH_fl_lm.fast.json)
   roofline        reads experiments/dryrun/*.json -> per-(arch,shape) terms
 
-Run all:  PYTHONPATH=src python -m benchmarks.run
+Run all:  PYTHONPATH=src python -m benchmarks.run         (or: run all)
 One:      PYTHONPATH=src python -m benchmarks.run exp [--fast]
           (--only exp is the same; positional wins if both given)
+CI:       `run.py all --fast` is the bench-smoke consistency mode — one
+          process runs every target, a failure deletes that target's
+          stale artifacts and exits nonzero after the rest finish.
 
 A sub-benchmark that raises is reported and the process exits nonzero
 after the remaining ones run — the CI bench-smoke job gates on this.
@@ -453,6 +462,37 @@ def bench_async(fast=False, trace=False):
     return results
 
 
+def bench_fl_lm(fast=False):
+    """pFed1BS over real models/lm.py configs: streamed-vs-materialized
+    sketch parity, O(max-layer + m) streaming peak per model size, real
+    (1,1)-mesh round times, analytic at-scale geometry — emits
+    BENCH_fl_lm.json (fast: BENCH_fl_lm.fast.json; see
+    benchmarks/fl_lm_bench.py)."""
+    from benchmarks import fl_lm_bench
+
+    results = fl_lm_bench.bench_fl_lm(
+        fast=fast,
+        progress=lambda tag, row: emit(
+            f"fl_lm/{tag}", row.get("us_per_round", 0.0),
+            f"n={row.get('n')} m={row.get('m')} "
+            + (f"bit_exact={'OK' if row['bit_exact'] else 'FAIL'}"
+               if "bit_exact" in row else
+               f"peak={row.get('peak_bytes', row.get('peak_bound_bytes'))} "
+               f"flat={row.get('flat_bytes')}"),
+        ),
+    )
+    par = results["parity"]
+    emit("fl_lm/parity", 0.0,
+         f"bit_exact={'OK' if par['bit_exact'] else 'FAIL'} "
+         f"m={par['m']} leaves={par['checkpoint_leaves']}")
+    last = results["at_scale"][-1]
+    emit("fl_lm/at_scale", 0.0,
+         f"cell={last['cell']} n={last['n']} "
+         f"peak_bound={last['peak_bound_bytes']} flat={last['flat_bytes']}")
+    fl_lm_bench.write_artifacts(results)
+    return results
+
+
 # benches that can also record an obs timeline (--trace)
 TRACEABLE = ("exp", "async", "hier")
 
@@ -467,6 +507,7 @@ ARTIFACTS = {
     "async": ("BENCH_async", "TRACE_async"),
     "robust": ("BENCH_robust",),
     "hier": ("BENCH_hier", "TRACE_hier"),
+    "fl_lm": ("BENCH_fl_lm",),
 }
 
 
@@ -495,15 +536,22 @@ BENCHES = {
     "async": bench_async,
     "robust": bench_robust,
     "hier": bench_hier,
+    "fl_lm": bench_fl_lm,
     "roofline": bench_roofline,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("bench", nargs="?", default=None, choices=list(BENCHES),
-                    help="benchmark to run (same as --only)")
-    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    # "all" is an explicit consistency mode for CI: ONE process runs every
+    # target so a failed bench deletes its stale artifacts and fails the
+    # job as a whole — later validate/compare steps can never gate on a
+    # stale artifact mix left by per-target steps with independent caches.
+    ap.add_argument("bench", nargs="?", default=None,
+                    choices=list(BENCHES) + ["all"],
+                    help="benchmark to run (same as --only); 'all' runs "
+                         "every target in one process")
+    ap.add_argument("--only", default=None, choices=list(BENCHES) + ["all"])
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--trace", action="store_true",
                     help="benches that support it also dump a Perfetto "
@@ -512,7 +560,7 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived")
     only = args.bench or args.only
-    todo = [only] if only else list(BENCHES)
+    todo = list(BENCHES) if only in (None, "all") else [only]
     failures = []
     for name in todo:
         kw = {"fast": args.fast}

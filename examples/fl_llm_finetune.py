@@ -1,28 +1,48 @@
-"""End-to-end driver: federated fine-tuning of a ~100M-parameter GQA
-transformer (granite-8b family, 12 layers x d_model 768) with pFed1BS for a
-few hundred rounds on per-client skewed token streams.
+"""End-to-end driver: federated fine-tuning of a real models/lm.py
+transformer (granite-8b family; ~100M-parameter member by default) with
+pFed1BS — the canonical fed_lm demo (DESIGN.md §13).
 
-This is the (b) end-to-end deliverable at LM scale: every client holds its
-own personalized LLM; per round only one-bit sketches go up and the one-bit
-consensus comes down. Checkpoints land in experiments/runs/.
+What this exercises, in order:
+  1. the engine is built through launch/fedexec.make_fed_lm_engine on a
+     2-D (fed, model) mesh: client store K-axis over `fed`, Megatron-TP
+     leaves over `model`, per-leaf SRHT chunks flattened sharded-axis-
+     major so no FHT block straddles a model shard;
+  2. --subset restricts training/sketching/billing to a LoRA-style
+     leaf-path subset (core/subset.py; e.g. --subset attn);
+  3. before round 0, client 0 is round-tripped through checkpoint/ckpt.py
+     and its sketch is recomputed by STREAMING one leaf at a time off the
+     npz (models/io.checkpoint_leaf_reader -> core/stream.stream_sketch):
+     asserted bit-exact with the engine's materialized leaf-layout sketch,
+     with measured peak host bytes == the O(max-layer + m) closed form —
+     never the 4n flat vector;
+  4. a few hundred PFed1BS.round calls: only one-bit sketches go up, the
+     one-bit consensus comes down, billed at the trainable count via
+     fl/comms.subset_round_bits. Checkpoints land in experiments/runs/.
 
 Run:  PYTHONPATH=src python examples/fl_llm_finetune.py [--rounds 200]
+      [--subset attn] [--fed-shards F --model-shards M]  (F*M devices;
+      set XLA_FLAGS=--xla_force_host_platform_device_count=F*M on CPU)
 """
 import argparse
 import dataclasses
 import json
 import os
+import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.checkpoint import save_checkpoint
-from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.core import stream
+from repro.core import treesketch as ts
+from repro.core.pfed1bs import PFed1BSConfig
 from repro.data import synthetic as ds
 from repro.fl import comms
+from repro.launch import fedexec
+from repro.launch.mesh import make_fed_model_mesh
+from repro.models import io as mio
 from repro.models import lm
 
 # every size knob also reads an FLLM_* env var so the CI smoke test
@@ -44,6 +64,13 @@ ap.add_argument("--head-dim", type=int, default=_env("FLLM_HEAD_DIM", 64))
 ap.add_argument("--d-ff", type=int, default=_env("FLLM_D_FF", 2048))
 ap.add_argument("--vocab", type=int, default=_env("FLLM_VOCAB", 8192))
 ap.add_argument("--chunk", type=int, default=_env("FLLM_CHUNK", 16384))
+ap.add_argument("--subset", default=os.environ.get("FLLM_SUBSET", ""),
+                help="comma-separated leaf-path patterns; only matching "
+                     "leaves train/sketch/bill (e.g. 'attn' = attention "
+                     "projections). Empty = federate the full tree.")
+ap.add_argument("--fed-shards", type=int, default=_env("FLLM_FED_SHARDS", 1))
+ap.add_argument("--model-shards", type=int,
+                default=_env("FLLM_MODEL_SHARDS", 1))
 args = ap.parse_args()
 
 # ~100M-param member of the granite-8b family (same arch, smaller dims)
@@ -60,28 +87,65 @@ data = ds.make_federated_lm(
     samples_per_client=64, skew=0.85,
 )
 
-init_fn = lambda k: lm.init_params(cfg, k)
-loss_fn = lambda p, b: lm.loss_fn(cfg, p, b)[0]
-template = jax.eval_shape(init_fn, jax.random.key(1))
-n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(template))
-print(f"params per client: {n / 1e6:.1f}M")
-
+trainable = tuple(p for p in args.subset.split(",") if p) or None
 fl = PFed1BSConfig(
     num_clients=args.clients, participate=args.participate,
     local_steps=args.local_steps, lr=0.01, lam=5e-4, mu=1e-5, gamma=1e4,
-    m_ratio=0.1, chunk=args.chunk,
+    m_ratio=0.1, chunk=args.chunk, layout="leaf", trainable=trainable,
 )
-engine = PFed1BS(fl, loss_fn, template)
-state = engine.init(init_fn, jax.random.key(2))
-bits = comms.round_bits("pfed1bs", n=n, m=engine.spec.m, s=args.participate)
-print(f"sketch m={engine.spec.m} -> {bits['total_mb']:.2f} MB/round "
-      f"(FedAvg would be {comms.round_bits('fedavg', n=n, m=engine.spec.m, s=args.participate)['total_mb']:.0f} MB)")
+mesh = make_fed_model_mesh(args.fed_shards, args.model_shards)
+engine, mesh, template = fedexec.make_fed_lm_engine(cfg, fl, mesh=mesh)
+n = engine.n
+print(f"params per client: {n / 1e6:.1f}M"
+      + (f" (trainable subset {trainable}: "
+         f"{engine.n_trainable / 1e6:.1f}M)" if trainable else ""))
+
+init_fn = lambda k: lm.init_params(cfg, k)
+shardings = fedexec.fed_lm_shardings(cfg, template, mesh)
+state = fedexec.place_fed_lm_state(
+    engine.init(init_fn, jax.random.key(2)), shardings
+)
+bits = comms.subset_round_bits(
+    "pfed1bs", n_total=n, n_trainable=engine.n_trainable, m=engine.m,
+    s=args.participate,
+)
+fedavg = comms.round_bits("fedavg", n=engine.n_trainable, m=engine.m,
+                          s=args.participate)
+print(f"sketch m={engine.m} -> {bits['total_mb']:.2f} MB/round "
+      f"(FedAvg on the same trainable set would be "
+      f"{fedavg['total_mb']:.0f} MB)")
+
+# ---- streamed-sketch calibration (the §13 memory contract) ----------------
+# Client 0 goes through checkpoint/ckpt.py; its sketch is then recomputed by
+# streaming one leaf at a time off the npz. Bit-exact or bust, and the
+# measured peak must equal the O(max-layer + m) closed form — proving the
+# engine's wire object is computable without ever materializing the model.
+client0 = jax.tree.map(lambda a: np.asarray(a[0]), state.clients)
+materialized = np.asarray(
+    jax.jit(
+        lambda t: ts.flat_view(engine.tspec, ts.tree_sketch_forward(engine.tspec, t))
+    )(client0)
+)
+with tempfile.TemporaryDirectory() as td:
+    ck = os.path.join(td, "client0.npz")
+    save_checkpoint(ck, client0)
+    _, get_leaf = mio.checkpoint_leaf_reader(ck)
+    meter = stream.MemMeter()
+    streamed = stream.stream_sketch(engine.tspec, get_leaf, meter=meter)
+assert np.array_equal(streamed, materialized), (
+    "streamed sketch diverged from the materialized leaf-layout sketch"
+)
+bound = stream.stream_peak_bound(engine.tspec)
+assert meter.peak == bound < 4 * n, (meter.peak, bound, 4 * n)
+print(f"streamed sketch bit-exact; peak {meter.peak / 1e6:.2f} MB "
+      f"(= max-layer + m bound) vs {4 * n / 1e6:.1f} MB flat vector")
 
 hist = []
 t0 = time.time()
 for r in range(args.rounds):
     kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(3), r))
     batches = ds.sample_lm_batches(kb, data, args.local_steps, args.batch)
+    batches = fedexec.place_fed_lm_batches(batches, shardings)
     state, m = engine.round(state, batches, data.weights, kr)
     hist.append(float(m["task_loss"]))
     if r % 10 == 0 or r == args.rounds - 1:
@@ -91,9 +155,12 @@ for r in range(args.rounds):
 
 os.makedirs("experiments/runs", exist_ok=True)
 save_checkpoint("experiments/runs/fl_llm_clients.npz", state.clients,
-                meta={"arch": cfg.name, "rounds": args.rounds})
+                meta={"arch": cfg.name, "rounds": args.rounds,
+                      "trainable": list(trainable or ())})
 with open("experiments/runs/fl_llm_finetune.json", "w") as f:
-    json.dump({"ce_history": hist, "n_params": n, "m": engine.spec.m,
+    json.dump({"ce_history": hist, "n_params": n,
+               "n_trainable": engine.n_trainable, "m": engine.m,
+               "mesh": {"fed": args.fed_shards, "model": args.model_shards},
                "comm_per_round": bits}, f, indent=2)
 print(f"final CE {hist[-1]:.4f} (started {hist[0]:.4f}); "
       f"checkpoints in experiments/runs/")

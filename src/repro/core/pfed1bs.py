@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core import consensus, flatten, regularizer, rounds
 from repro.core import sketch as sk
+from repro.core import subset as sub_sel
 from repro.core import treesketch as ts
 from repro.kernels import ops as kops
 from repro.obs import trace as obstrace
@@ -77,6 +78,14 @@ class PFed1BSConfig:
     #                                literal); "leaf": per-leaf block-diagonal
     #                                SRHT via core/treesketch.py (no global
     #                                ravel — collective-free on sharded models).
+    trainable: Any = None          # LoRA-style trainable subset: tuple of
+    #                                path-substring patterns resolved against
+    #                                the template's keystr leaf paths
+    #                                (core/subset.py). Requires layout="leaf".
+    #                                Local SGD, the sketch, the vote and the
+    #                                bit bill all restrict to the selected
+    #                                leaves; frozen leaves never change
+    #                                (DESIGN.md §13).
     vote: str = "exact"            # "exact": server unpacks the wire words and
     #                                votes sign(sum p_k z_k) (Lemma 1, ties->0,
     #                                bit-exact vs the fused round); "popcount":
@@ -158,7 +167,7 @@ class PFed1BS:
     """
 
     def __init__(self, cfg: PFed1BSConfig, loss_fn: Callable, params_template,
-                 mesh=None, tracer=None):
+                 mesh=None, tracer=None, major_axes=None):
         assert cfg.layout in ("flat", "leaf"), cfg.layout
         assert cfg.vote in ("exact", "popcount"), cfg.vote
         assert cfg.defense in ("none", "trim", "reputation"), cfg.defense
@@ -182,11 +191,22 @@ class PFed1BS:
         self.tracer = obstrace.NOOP if tracer is None else tracer
         self.loss_fn = loss_fn     # loss_fn(params, batch) -> scalar
         self.n = flatten.tree_size(params_template)
+        # LoRA-style trainable subset (DESIGN.md §13): resolve the path
+        # patterns against the template once; the filtered tspec keeps the
+        # full-template per-leaf seeds, so trainable=None and trainable=
+        # <every path> build the identical operator.
+        self.trainable_paths = None
+        if cfg.trainable is not None:
+            assert cfg.layout == "leaf", "cfg.trainable requires layout='leaf'"
+            self.trainable_paths = sub_sel.match_paths(
+                params_template, cfg.trainable
+            )
         if cfg.layout == "leaf":
             self.spec = None
             self.tspec = ts.make_tree_sketch_spec(
                 params_template, cfg.m_ratio, chunk=cfg.chunk,
-                seed=cfg.sketch_seed,
+                seed=cfg.sketch_seed, major_axes=major_axes,
+                paths=self.trainable_paths,
             )
             self.m = self.tspec.m
         else:
@@ -196,6 +216,10 @@ class PFed1BS:
             )
             self.tspec = None
             self.m = self.spec.m
+        # bits are billed at the trainable count (fl/comms.subset_round_bits)
+        self.n_trainable = (
+            self.tspec.n if self.trainable_paths is not None else self.n
+        )
         self.fed_mesh = None
         if cfg.sharded_round:
             assert cfg.participate % cfg.fed_shards == 0, (
@@ -243,6 +267,8 @@ class PFed1BS:
         task loss over the R steps).
         """
         cfg = self.cfg
+        if self.trainable_paths is not None:
+            return self._client_update_subset(params, batches, v)
 
         def objective(p, batch):
             task = self.loss_fn(p, batch)
@@ -266,6 +292,38 @@ class PFed1BS:
 
         params, task_losses = jax.lax.scan(step, params, batches)
         return params, jnp.mean(task_losses)
+
+    def _client_update_subset(self, params, batches, v):
+        """The cfg.trainable variant of `_client_update`: R local SGD steps
+        over ONLY the selected leaves. The scan carries the {path: leaf}
+        subset dict (a valid pytree); the frozen remainder of `params` is
+        closed over, so frozen leaves are literally never written. The
+        sketch/regularizer see the path-filtered tspec — exactly the blocks
+        the full operator would have assigned those leaves — and the l2
+        term covers the trainable subset only (the frozen leaves' l2 is a
+        constant with zero gradient; billing it would skew Psi across
+        subset sizes)."""
+        cfg = self.cfg
+        sub0 = sub_sel.extract(params, self.trainable_paths)
+
+        def objective(sub, batch):
+            p = sub_sel.merge(params, sub)
+            task = self.loss_fn(p, batch)
+            z = self._sketch_client(sub)
+            reg = regularizer.smoothed_reg(v, z, cfg.gamma)
+            l2 = 0.5 * sum(
+                jnp.sum(jnp.square(l.astype(jnp.float32)))
+                for l in sub.values()
+            )
+            return task + cfg.lam * reg + cfg.mu * l2, task
+
+        def step(sub, batch):
+            (_, task), grads = jax.value_and_grad(objective, has_aux=True)(sub, batch)
+            sub = jax.tree.map(lambda a, g: a - cfg.lr * g.astype(a.dtype), sub, grads)
+            return sub, task
+
+        sub, task_losses = jax.lax.scan(step, sub0, batches)
+        return sub_sel.merge(params, sub), jnp.mean(task_losses)
 
     def _sketch_client(self, params):
         """z = Phi w_k for one client: (m,) float32. layout="flat" sketches
@@ -537,11 +595,20 @@ class PFed1BS:
         cfg = self.cfg
 
         def fk(params, z, task):
-            w = flatten.ravel(params)
+            if self.trainable_paths is not None:
+                # subset semantics (§13): Psi's l2 matches the objective —
+                # trainable leaves only. Existing layouts keep the ravel.
+                l2 = sum(
+                    jnp.sum(jnp.square(l.astype(jnp.float32)))
+                    for l in sub_sel.extract(params, self.trainable_paths).values()
+                )
+            else:
+                w = flatten.ravel(params)
+                l2 = jnp.sum(w * w)
             return (
                 task
                 + cfg.lam * regularizer.smoothed_reg(v, z, cfg.gamma)
-                + 0.5 * cfg.mu * jnp.sum(w * w)
+                + 0.5 * cfg.mu * l2
             )
 
         vals = jax.vmap(fk)(clients, zs, task_loss)

@@ -1,0 +1,129 @@
+"""Streamed per-leaf sketch encode/decode: O(max-leaf + m) peak memory.
+
+The paper sketches w in R^n; at LM scale materializing that flat vector —
+or even the whole parameter tree at once — is exactly what a
+memory-frugal client must not do. Because the leaf-layout treesketch
+(core/treesketch.py) is block-diagonal PER LEAF, the uplink encode can
+stream: pull one leaf at a time from a lazy source (a checkpoint on disk,
+models/io.checkpoint_leaf_reader; a remote shard), push it through the
+fused SRHT kernel, write its block into the (m,) accumulator, drop it.
+The only objects ever live are the current leaf, its sketch block, and
+the accumulator — peak bytes O(max-leaf + m), never O(n). The decode
+mirror (`stream_adjoint`) walks Phi^T v the same way, emitting one leaf
+at a time to a sink.
+
+`MemMeter` is the accounting of that PROTOCOL: it counts the bytes the
+streaming client holds live and tracks the peak — an invariant the tests
+assert (`stream_peak_bound` is the exact closed form) and
+benchmarks/fl_lm_bench.py records per model size, not a measurement of
+allocator internals.
+
+Bit-exactness: each leaf's block is produced by the same
+`sketch_forward_2d(spec, ...)` program the materialized
+`tree_sketch_forward` runs, so the streamed sketch is bit-exact with
+`flat_view(tree_sketch_forward(tspec, tree))` — the fl_lm bench's parity
+cell and tests/test_fed_lm.py pin this.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core import treesketch as ts
+
+
+class MemMeter:
+    """Live/peak byte meter for the streaming protocol."""
+
+    def __init__(self):
+        self.live = 0
+        self.peak = 0
+
+    def alloc(self, nbytes: int) -> None:
+        self.live += int(nbytes)
+        self.peak = max(self.peak, self.live)
+
+    def free(self, nbytes: int) -> None:
+        self.live -= int(nbytes)
+
+    @contextlib.contextmanager
+    def holding(self, nbytes: int):
+        self.alloc(nbytes)
+        try:
+            yield
+        finally:
+            self.free(nbytes)
+
+
+def stream_peak_bound(tspec: ts.TreeSketchSpec, itemsize: int = 4) -> int:
+    """The exact peak `stream_sketch`'s meter reports for `itemsize`-byte
+    leaves: the (m,) fp32 accumulator plus the largest (leaf + its fp32
+    sketch block) pair. O(max-leaf + m) by construction — compare against
+    the O(n) flat vector (4n bytes) a materialized encode holds."""
+    return 4 * tspec.m + max(
+        itemsize * spec.n + 4 * spec.m for _, spec, _, _ in tspec.entries
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def _leaf_encoder(spec, major):
+    return jax.jit(lambda leaf: sk.sketch_forward_2d(spec, ts._to_major(leaf, major)))
+
+
+@functools.lru_cache(maxsize=512)
+def _leaf_decoder(spec, shape, major, dtype):
+    def dec(block):
+        wi = sk.sketch_adjoint(spec, block)
+        return ts._from_major(wi, shape, major).astype(dtype)
+
+    return jax.jit(dec)
+
+
+def stream_sketch(tspec: ts.TreeSketchSpec, get_leaf, *, meter=None) -> np.ndarray:
+    """z = Phi w, one leaf at a time: `get_leaf(path)` -> array for each
+    spec entry (called once each, in entry order — a lazy npz reader, a
+    shard fetch). Returns the (m,) float32 sketch in flat_view layout,
+    bit-exact with `flat_view(tree_sketch_forward(tspec, tree))`.
+
+    meter: optional MemMeter; the accumulator is counted for the whole
+    call, each leaf and its block only while live — so meter.peak ==
+    stream_peak_bound(tspec) for fp32 leaves.
+    """
+    meter = MemMeter() if meter is None else meter
+    out = np.zeros((tspec.m,), np.float32)
+    with meter.holding(out.nbytes):
+        for path, spec, off, major in tspec.entries:
+            leaf = np.asarray(get_leaf(path))
+            with meter.holding(leaf.nbytes):
+                block = np.asarray(_leaf_encoder(spec, major)(leaf))
+                with meter.holding(block.nbytes):
+                    out[off : off + spec.m] = block.reshape(-1)
+            del leaf, block
+    return out
+
+
+def stream_adjoint(tspec: ts.TreeSketchSpec, v, template, emit, *, meter=None):
+    """w = Phi^T v, one leaf at a time (the decode mirror): per entry the
+    (m_i,) block of `v` is decoded into its leaf and handed to
+    `emit(path, leaf)` — an npz writer, a shard push — so the full tree is
+    never resident. template: pytree of arrays/ShapeDtypeStructs giving
+    leaf shapes/dtypes (eval_shape output is fine; nothing is read but
+    shape/dtype)."""
+    meter = MemMeter() if meter is None else meter
+    shapes = {p: (tuple(l.shape), np.dtype(l.dtype))
+              for p, l in ts._leaf_paths(template)}
+    v = np.asarray(v, np.float32)
+    with meter.holding(v.nbytes):
+        for path, spec, off, major in tspec.entries:
+            shape, dtype = shapes[path]
+            block = v[off : off + spec.m].reshape(spec.num_chunks, spec.m_chunk)
+            leaf = np.asarray(
+                _leaf_decoder(spec, shape, major, dtype.name)(block)
+            )
+            with meter.holding(leaf.nbytes):
+                emit(path, leaf)
+            del leaf

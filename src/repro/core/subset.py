@@ -1,0 +1,81 @@
+"""LoRA-style trainable-subset selection over parameter pytrees.
+
+The fed_lm path (DESIGN.md §13) federates a real LM while training only a
+subset of its leaves — attention projections, the head, an adapter — the
+way parameter-efficient fine-tuning does. The subset is named by PATH
+PATTERNS: substrings matched against the `jax.tree_util.keystr` leaf paths
+(the same strings core/treesketch.py seeds its per-leaf SRHT blocks with
+and checkpoint/ckpt.py keys its npz members with). Everything downstream
+is keyed by those original path strings, so a subset-filtered
+TreeSketchSpec (make_tree_sketch_spec(..., paths=...)) sketches a selected
+leaf with EXACTLY the operator the full spec would have used — selecting
+every path is the identity, not a reseeding.
+
+Selection lives here, in `core`, because three layers share it: the
+PFed1BS engine (cfg.trainable — gradients and sketches restricted to the
+subset), the streamed encoder (core/stream.py walks the filtered spec),
+and the bit meter (fl/comms.subset_round_bits bills the trainable count).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def leaf_paths(tree) -> list:
+    """[(keystr path, leaf), ...] in template leaf order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), l) for p, l in flat]
+
+
+def match_paths(template, patterns) -> tuple:
+    """Resolve path-substring `patterns` against a template's leaf paths.
+
+    Returns the matching keystr paths as a tuple, in TEMPLATE LEAF ORDER
+    (the order every spec/stream walks leaves in — stable regardless of
+    pattern order). Raises on a pattern that matches nothing: a silently
+    empty LoRA subset would train nothing and bill nothing.
+    """
+    paths = [p for p, _ in leaf_paths(template)]
+    unmatched = [pat for pat in patterns
+                 if not any(pat in p for p in paths)]
+    if unmatched:
+        raise ValueError(
+            f"trainable patterns {unmatched} match no leaf path; "
+            f"paths are like {paths[:4]}..."
+        )
+    sel = tuple(p for p in paths if any(pat in p for pat in patterns))
+    return sel
+
+
+def extract(tree, paths) -> dict:
+    """The selected leaves as a {keystr path: leaf} dict.
+
+    A plain dict keyed by the ORIGINAL paths — treesketch's forward looks
+    leaves up by path (never by flatten order), so this dict is a valid
+    differentiable pytree for the subset objective.
+    """
+    want = set(paths)
+    out = {p: l for p, l in leaf_paths(tree) if p in want}
+    missing = want - set(out)
+    if missing:
+        raise ValueError(f"tree has no leaves for {sorted(missing)}")
+    return out
+
+
+def merge(tree, sub: dict):
+    """`tree` with the subset dict's leaves swapped in (inverse of extract
+    up to the untouched leaves)."""
+
+    def go(path, leaf):
+        return sub.get(jax.tree_util.keystr(path), leaf)
+
+    return jax.tree_util.tree_map_with_path(go, tree)
+
+
+def subset_size(template, paths) -> int:
+    """Trainable parameter count of the subset (the n that
+    fl/comms.subset_round_bits bills)."""
+    sel = extract(template, paths)
+    return int(sum(int(np.prod(l.shape)) if l.shape else 1
+                   for l in sel.values()))

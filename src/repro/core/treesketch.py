@@ -47,7 +47,7 @@ class TreeSketchSpec:
 
 def make_tree_sketch_spec(
     template, m_ratio: float = 0.1, *, chunk: int = 16384, seed: int = 0,
-    major_axes=None,
+    major_axes=None, paths=None,
 ) -> TreeSketchSpec:
     """Build the per-leaf block-diagonal SRHT spec (Eq. 15-18 per leaf).
 
@@ -59,12 +59,19 @@ def make_tree_sketch_spec(
     int|-1 giving the axis to move outermost (the tensor-parallel-sharded
     axis) before flattening each leaf — a fixed element permutation, which
     the SRHT analysis is invariant to, chosen so FHT chunks never straddle
-    device shards."""
+    device shards. paths: optional collection of keystr leaf paths to KEEP
+    (core/subset.py's LoRA-style trainable selection) — entries for other
+    leaves are dropped, but kept leaves keep their full-template seeds, so
+    selecting every path builds the identical spec and the spec's n/m
+    count only the trainable subset."""
     majors = None if major_axes is None else _leaf_paths(major_axes)
+    keep = None if paths is None else set(paths)
     entries = []
     off = 0
     total_n = 0
     for i, (path, leaf) in enumerate(_leaf_paths(template)):
+        if keep is not None and path not in keep:
+            continue
         size = int(np.prod(leaf.shape)) if leaf.shape else 1
         leaf_chunk = min(chunk, sk.next_pow2(size))
         leaf_seed = (zlib.crc32(path.encode()) ^ seed) & 0x7FFFFFFF
@@ -77,6 +84,7 @@ def make_tree_sketch_spec(
         entries.append((path, spec, off, major))
         off += spec.m
         total_n += size
+    assert entries, "path filter selected no leaves"
     return TreeSketchSpec(
         entries=tuple(entries), m=off, n=total_n, chunk=chunk, m_ratio=m_ratio
     )
@@ -95,18 +103,36 @@ def _from_major(flat, shape, major):
     return flat.reshape(shape)
 
 
+def _entry_leaves(tspec: TreeSketchSpec, tree) -> list:
+    """Resolve the spec's entries to leaves of `tree`, BY PATH: `tree` is
+    either a pytree whose leaf paths cover the entries (a superset when
+    the spec was path-filtered — core/subset.py selection) or already a
+    {keystr path: leaf} dict (an extracted subset)."""
+    if isinstance(tree, dict):
+        hit = [tree.get(path) for path, *_ in tspec.entries]
+        if all(leaf is not None for leaf in hit):
+            return hit
+    got = dict(_leaf_paths(tree))
+    try:
+        return [got[path] for path, *_ in tspec.entries]
+    except KeyError as e:
+        raise ValueError(f"tree has no leaf for spec entry {e}") from None
+
+
 def tree_sketch_forward(tspec: TreeSketchSpec, tree) -> dict:
     """z = Phi @ ravel(tree) with Phi leaf-block-diagonal (Eq. 15-18).
 
-    tree: pytree matching the spec's template. Returns a dict
-    {leaf_path: (num_chunks, m_chunk) float32} — each sketch block stays
-    sharded exactly like its source leaf (no concat => no resharding).
-    Differentiable; gradients flow through sketch_forward_2d's custom VJP,
-    so d/dw of the Eq. 5 regularizer is the Eq. 11 adjoint per leaf."""
-    leaves = _leaf_paths(tree)
+    tree: pytree matching the spec's template — or a SUPERSET of it when
+    the spec was path-filtered (leaves are matched by path, so the full
+    params pytree feeds a trainable-subset spec directly), or a
+    {path: leaf} subset dict. Returns a dict {leaf_path: (num_chunks,
+    m_chunk) float32} — each sketch block stays sharded exactly like its
+    source leaf (no concat => no resharding). Differentiable; gradients
+    flow through sketch_forward_2d's custom VJP, so d/dw of the Eq. 5
+    regularizer is the Eq. 11 adjoint per leaf."""
+    leaves = _entry_leaves(tspec, tree)
     out = {}
-    for (path, spec, _, major), (path2, leaf) in zip(tspec.entries, leaves):
-        assert path == path2, f"tree mismatch: {path} vs {path2}"
+    for (path, spec, _, major), leaf in zip(tspec.entries, leaves):
         out[path] = sk.sketch_forward_2d(spec, _to_major(leaf, major))
     return out
 
@@ -196,10 +222,16 @@ def sketch_pspecs(tspec: TreeSketchSpec, param_pspecs_tree, mesh) -> dict:
     row count divides."""
     from jax.sharding import PartitionSpec as P
 
-    flat, _ = jax.tree_util.tree_flatten_with_path(param_pspecs_tree)
+    flat = {
+        jax.tree_util.keystr(p): s
+        for p, s in jax.tree_util.tree_flatten_with_path(
+            param_pspecs_tree, is_leaf=lambda x: isinstance(x, P)
+        )[0]
+    }
     msize = mesh.shape["model"]
     out = {}
-    for (path, spec, _, major), (p2, pspec) in zip(tspec.entries, flat):
+    for path, spec, _, major in tspec.entries:
+        assert path in flat, f"pspecs tree has no leaf for {path}"
         sharded = major is not None and spec.num_chunks % msize == 0
         out[path] = P("model", None) if sharded else P(None, None)
     return out

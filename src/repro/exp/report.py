@@ -212,6 +212,142 @@ def validate_hier(results: dict, max_root_growth: float = 8.0) -> None:
         )
 
 
+FL_LM_TOP_KEYS = ("parity", "memory", "rounds", "at_scale")
+
+
+def validate_fl_lm(results: dict) -> None:
+    """Raise ValueError unless `results` is a well-formed BENCH_fl_lm
+    artifact satisfying the §13 invariants:
+
+      1. the streamed-vs-materialized parity cell is bit_exact — the
+         per-leaf streaming encoder (core/stream.py) produced the SAME
+         (m,) sketch as the engine's materialized leaf-layout forward;
+      2. every memory row's measured streaming peak EQUALS the
+         closed-form core/stream.stream_peak_bound re-derived from the
+         named lm_matrix cell — O(max-layer + m) — and sits strictly
+         below the 4n bytes a materialized flat vector would cost (the
+         artifact carries no number this module cannot recompute);
+      3. every round row bills uplink = participate * m and downlink = m,
+         and its bit dict re-derives through fl/comms.subset_round_bits
+         at the trainable-parameter count;
+      4. the at-scale rows (full, unreduced configs; analytic — no
+         allocation) re-derive the same way.
+    """
+    import functools
+
+    import jax
+    import numpy as np
+
+    from repro.core import flatten, stream, subset
+    from repro.core import treesketch as ts
+    from repro.exp import scenarios
+    from repro.models import lm
+
+    for key in FL_LM_TOP_KEYS:
+        if key not in results:
+            raise ValueError(f"fl_lm artifact missing top-level key {key!r}")
+    par = results["parity"]
+    if par.get("bit_exact") is not True:
+        raise ValueError(
+            "parity.bit_exact is not True — the streamed encode diverged "
+            "from the materialized leaf-layout sketch"
+        )
+
+    cells = scenarios.lm_matrix()
+
+    def derive(cell_name: str, reduced: bool):
+        cell = cells[cell_name]
+        arch = cell.arch_config(reduced=reduced)
+        template = jax.eval_shape(
+            functools.partial(lm.init_params, arch), jax.random.PRNGKey(0)
+        )
+        paths = (
+            subset.match_paths(template, cell.trainable)
+            if cell.trainable else None
+        )
+        tspec = ts.make_tree_sketch_spec(
+            template, cell.m_ratio, chunk=cell.chunk, paths=paths
+        )
+        return cell, flatten.tree_size(template), tspec
+
+    def check_geometry(row, where: str, reduced: bool):
+        cell, n_total, tspec = derive(row["cell"], reduced)
+        bound = stream.stream_peak_bound(tspec)
+        expect = {
+            "n": n_total,
+            "n_trainable": tspec.n,
+            "m": tspec.m,
+            "peak_bound_bytes": bound,
+            "flat_bytes": 4 * n_total,
+        }
+        for k, v in expect.items():
+            if row.get(k) != v:
+                raise ValueError(
+                    f"{where} row {row['cell']!r}: {k}={row.get(k)} does "
+                    f"not re-derive from lm_matrix ({v})"
+                )
+        if not bound < 4 * n_total:
+            raise ValueError(
+                f"{where} row {row['cell']!r}: streaming bound {bound} is "
+                f"not below the 4n flat vector ({4 * n_total}) — the "
+                "O(max-layer + m) claim fails"
+            )
+        return cell, n_total, tspec
+
+    mem = results["memory"]
+    if len(mem) < 2:
+        raise ValueError("memory needs >= 2 model-size rows for a curve")
+    for row in mem:
+        check_geometry(row, "memory", reduced=True)
+        if row.get("peak_bytes") != row["peak_bound_bytes"]:
+            raise ValueError(
+                f"memory row {row['cell']!r}: measured streaming peak "
+                f"{row.get('peak_bytes')} != closed-form bound "
+                f"{row['peak_bound_bytes']}"
+            )
+
+    rounds = results["rounds"]
+    if not rounds:
+        raise ValueError("rounds carries no cells")
+    for row in rounds:
+        cell, n_total, tspec = derive(row["cell"], reduced=True)
+        s = int(row["participate"])
+        if row["uplink_bits"] != s * tspec.m:
+            raise ValueError(
+                f"round row {row['cell']!r}: uplink_bits="
+                f"{row['uplink_bits']} != participate*m ({s * tspec.m})"
+            )
+        if row["downlink_bits"] != tspec.m:
+            raise ValueError(
+                f"round row {row['cell']!r}: downlink_bits="
+                f"{row['downlink_bits']} != m ({tspec.m})"
+            )
+        expect = comms.subset_round_bits(
+            "pfed1bs", n_total=n_total, n_trainable=tspec.n, m=tspec.m, s=s
+        )
+        got = row["bits"]
+        for k, v in expect.items():
+            if not np.isclose(got.get(k), v, rtol=0, atol=0):
+                raise ValueError(
+                    f"round row {row['cell']!r}: bits[{k!r}]={got.get(k)} "
+                    f"does not re-derive from subset_round_bits ({v})"
+                )
+
+    for row in results["at_scale"]:
+        cell, n_total, tspec = check_geometry(row, "at_scale", reduced=False)
+        expect = comms.subset_round_bits(
+            "pfed1bs", n_total=n_total, n_trainable=tspec.n, m=tspec.m,
+            s=cell.participate,
+        )
+        got = row["bits"]
+        for k, v in expect.items():
+            if not np.isclose(got.get(k), v, rtol=0, atol=0):
+                raise ValueError(
+                    f"at_scale row {row['cell']!r}: bits[{k!r}]="
+                    f"{got.get(k)} does not re-derive ({v})"
+                )
+
+
 def robust_markdown(results: dict) -> str:
     """README-style digest: accuracy vs adversary fraction x defense, and
     accuracy vs epsilon."""

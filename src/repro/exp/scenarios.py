@@ -456,3 +456,67 @@ def async_matrix() -> dict[str, Scenario]:
             ),
         ),
     }
+
+
+# --- fed_lm cells (DESIGN.md §13) -------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMFederation:
+    """One fed_lm experiment cell: WHICH real architecture federates, WHAT
+    subset of it trains, and the round geometry. The registry below is what
+    benchmarks/fl_lm_bench.py sweeps into BENCH_fl_lm.json and what
+    examples/fl_llm_finetune.py names on the command line.
+
+    arch: configs registry name (models/config.ArchConfig); trainable: ()
+    federates the full parameter tree, otherwise path-substring patterns
+    for core/subset.py (e.g. ("attn",) = the LoRA-style attention-only
+    subset). Benches run the `.reduced()` smoke variant of the arch; the
+    at-scale bits/memory rows are analytic over the full config's
+    eval_shape template (no allocation).
+    """
+
+    name: str
+    arch: str
+    trainable: tuple = ()
+    seq: int = 32
+    num_clients: int = 2
+    participate: int = 2
+    local_steps: int = 2
+    batch: int = 2
+    m_ratio: float = 0.05
+    chunk: int = 4096
+
+    def arch_config(self, reduced: bool = True):
+        from repro.configs import get
+
+        cfg = get(self.arch)
+        return cfg.reduced() if reduced else cfg
+
+    def fl_config(self):
+        from repro.core.pfed1bs import PFed1BSConfig
+
+        return PFed1BSConfig(
+            num_clients=self.num_clients,
+            participate=self.participate,
+            local_steps=self.local_steps,
+            m_ratio=self.m_ratio,
+            chunk=self.chunk,
+            layout="leaf",
+            trainable=self.trainable or None,
+        )
+
+
+def lm_matrix() -> dict[str, LMFederation]:
+    """The fed_lm registry: the two smallest dense real configs, each full
+    AND attention-subset, so the bench's bits/memory table shows subset
+    billing against full-tree federation on the same architecture."""
+    return {
+        "granite-full": LMFederation("granite-full", "granite-8b"),
+        "granite-attn": LMFederation(
+            "granite-attn", "granite-8b", trainable=("attn",)
+        ),
+        "starcoder-full": LMFederation("starcoder-full", "starcoder2-7b"),
+        "starcoder-attn": LMFederation(
+            "starcoder-attn", "starcoder2-7b", trainable=("attn",)
+        ),
+    }

@@ -108,6 +108,27 @@ def accumulate_round_bits(algo: str, *, n: int, m: int, s_per_round,
             "total_mb": (up + down) / 8e6, "rounds": rounds}
 
 
+def subset_round_bits(algo: str, *, n_total: int, n_trainable: int, m: int,
+                      s: int, num_tensors: int = 1) -> dict:
+    """Table-2 wire cost when only a trainable subset federates (the
+    fed_lm LoRA-style path, DESIGN.md §13): every algorithm ships the
+    TRAINABLE parameters only — n_trainable replaces n, and for pFed1BS
+    the m is the path-filtered TreeSketchSpec's m (already sized
+    ~m_ratio * n_trainable; `PFed1BS.m` under cfg.trainable). Frozen
+    leaves never cross the wire for anyone, so the competitor baselines
+    are billed at the same subset — the comparison stays apples-to-apples.
+
+    Returns round_bits' dict plus {n_total, n_trainable,
+    trainable_fraction}; the total_mb decimal-MB convention is inherited.
+    """
+    assert 0 < n_trainable <= n_total, (n_trainable, n_total)
+    out = round_bits(algo, n=n_trainable, m=m, s=s, num_tensors=num_tensors)
+    out["n_total"] = int(n_total)
+    out["n_trainable"] = int(n_trainable)
+    out["trainable_fraction"] = n_trainable / n_total
+    return out
+
+
 def counter_bits(width: int) -> int:
     """Bits per sketch coordinate of a partial popcount counter covering
     `width` clients: the count lies in [0, width], so the wire format is

@@ -471,3 +471,116 @@ def sharded_baseline_round(eng, params, batches_s, pw, keys):
         out_specs=(P(), P()),
         check_rep=False,
     )(params, batches_s, pw, keys)
+
+
+# ---------------------------------------------------------------------------
+# fed_lm: pFed1BS over a real models/lm.py architecture (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The LM path composes two parallelism regimes on ONE 2-D ("fed", "model")
+# mesh (launch/mesh.make_fed_model_mesh): the client store's K axis lays
+# out over `fed` while each client's parameter leaves shard over `model`
+# per sharding/specs.param_pspecs (Megatron TP). Unlike the 1-D executors
+# above this is NOT a shard_map region — models/lm.py is written
+# GSPMD-style, so the round is the ordinary fused `PFed1BS.round` program
+# with its inputs placed by NamedSharding and the partitioner propagating
+# the layout. The §6 wire discipline survives by construction: per-client
+# work is independent along K, so the ONLY fed-axis crossings GSPMD can
+# emit are the vote's sum over clients and the scalar metrics — the m-bit
+# consensus + diagnostics, exactly the Table-2 traffic. TP collectives
+# WITHIN a client (the usual Megatron all-reduces of the forward/backward)
+# stay inside the `model` submesh, and because the engine is built with
+# sharding/specs.param_major_axes, every leaf's SRHT chunks flatten
+# sharded-axis-major — no FHT block straddles a model shard. On a (1, 1)
+# debug mesh the placed round is the SAME jitted program as the unplaced
+# fused round, hence bit-exact (tests/test_fed_lm.py).
+
+
+def make_fed_lm_engine(arch, fl_cfg, *, mesh=None, tracer=None):
+    """Bind PFed1BS to a real models/lm.py architecture.
+
+    arch: models/config.ArchConfig (a registry entry or its .reduced());
+    fl_cfg: PFed1BSConfig — layout must be "leaf" (the flat layout would
+    ravel the LM: the O(n) materialization this path exists to avoid);
+    cfg.trainable selects the LoRA-style subset by leaf path. mesh:
+    a ("fed", "model") mesh (default: make_fed_model_mesh(1, 1)).
+
+    Returns (engine, mesh, template). The engine's tspec is built with the
+    mesh's param_major_axes so leaf chunks never straddle model shards.
+    """
+    import functools
+
+    from repro.core.pfed1bs import PFed1BS
+    from repro.models import lm
+    from repro.sharding import specs as shspec
+
+    assert fl_cfg.layout == "leaf", "fed_lm requires layout='leaf'"
+    if mesh is None:
+        from repro.launch.mesh import make_fed_model_mesh
+
+        mesh = make_fed_model_mesh(1, 1)
+    assert "fed" in mesh.shape and "model" in mesh.shape, mesh.shape
+    template = jax.eval_shape(
+        functools.partial(lm.init_params, arch), jax.random.PRNGKey(0)
+    )
+    major = shspec.param_major_axes(arch, template, mesh)
+
+    def loss(p, b):
+        return lm.loss_fn(arch, p, b)[0]
+
+    eng = PFed1BS(fl_cfg, loss, template, tracer=tracer, major_axes=major)
+    return eng, mesh, template
+
+
+def fed_lm_shardings(arch, template, mesh):
+    """NamedShardings placing an FLState on the ("fed", "model") mesh:
+    stacked clients K-major over `fed` with each leaf's TP axis over
+    `model` (sharding/specs.param_pspecs shifted one stacking axis right);
+    consensus v and the round counter replicated (every client receives
+    the same m-bit broadcast); EF residuals / reputation row-shard over
+    `fed` with their owning clients. cfg.num_clients must divide the fed
+    axis size for an even client layout (GSPMD handles ragged, but the
+    fed_lm benches keep it even)."""
+    from jax.sharding import NamedSharding
+
+    from repro.sharding import specs as shspec
+
+    pspecs = shspec.param_pspecs(arch, template, mesh)
+    clients = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*(("fed",) + tuple(s)))),
+        pspecs, is_leaf=lambda x: isinstance(x, P),
+    )
+    rep = NamedSharding(mesh, P())
+    return {
+        "clients": clients,
+        "v": rep,
+        "round": rep,
+        "ef": NamedSharding(mesh, P("fed", None)),
+        "rep": NamedSharding(mesh, P("fed")),
+        "batches": NamedSharding(mesh, P("fed")),
+    }
+
+
+def place_fed_lm_state(state, shardings):
+    """device_put an FLState per `fed_lm_shardings` (None fields pass
+    through). After placement, `PFed1BS.round` compiles under GSPMD with
+    clients resident along `fed` — the fed_lm round IS the fused round on
+    placed operands."""
+    put = lambda x, s: None if x is None else jax.device_put(x, s)
+    return state._replace(
+        clients=jax.device_put(state.clients, shardings["clients"]),
+        v=jax.device_put(state.v, shardings["v"]),
+        round=jax.device_put(state.round, shardings["round"]),
+        ef=put(state.ef, shardings["ef"]),
+        rep=put(state.rep, shardings["rep"]),
+    )
+
+
+def place_fed_lm_batches(batches, shardings):
+    """Place a (K, R, B, ...) batch pytree client-major over `fed`
+    (trailing dims replicated — sequence batches are small next to the
+    model; shard them over `model` via sharding/specs.batch_pspecs if
+    that ever inverts)."""
+    return jax.tree.map(
+        lambda a: jax.device_put(a, shardings["batches"]), batches
+    )

@@ -53,3 +53,24 @@ def make_fed_mesh(shards: int = 1):
             f"{shards} BEFORE importing jax to simulate the federation."
         )
     return jax.make_mesh((shards,), ("fed",), devices=devs[:shards])
+
+
+def make_fed_model_mesh(fed: int = 1, model: int = 1):
+    """2-D federation x tensor-parallel mesh for the fed_lm path (DESIGN.md
+    §13): client store K-axis over `fed`, each client's LM leaves sharded
+    over `model` per sharding/specs.param_pspecs. Composes the §6 wire
+    discipline (only m-bit words cross `fed`) with Megatron-style TP
+    within a client.
+    """
+    import jax
+
+    ndev = fed * model
+    devs = jax.devices()
+    if len(devs) < ndev:
+        raise RuntimeError(
+            f"fed_lm mesh ({fed}, {model}) needs {ndev} devices but only "
+            f"{len(devs)} visible. Set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={ndev} BEFORE "
+            "importing jax to simulate the federation."
+        )
+    return jax.make_mesh((fed, model), ("fed", "model"), devices=devs[:ndev])

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import ArchConfig
 
@@ -52,6 +53,21 @@ def make_batch(cfg: ArchConfig, key, batch: int, seq: int) -> dict:
         else:
             out[name] = jax.random.normal(sub, shape, dt)
     return out
+
+
+def checkpoint_leaf_reader(path: str):
+    """Lazy per-leaf reader over a checkpoint/ckpt.py npz: returns
+    (paths, get_leaf) where `paths` are the stored keystr leaf paths
+    (sorted) and `get_leaf(path)` loads exactly that member from disk.
+
+    np.load on an npz is lazy per member — each get_leaf decompresses one
+    leaf, so feeding this to core/stream.stream_sketch encodes a
+    checkpointed LM at O(max-leaf + m) peak host memory without the model
+    ever being resident (DESIGN.md §13)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    return sorted(data.files), data.__getitem__
 
 
 def decode_token_spec(cfg: ArchConfig, batch: int) -> jax.ShapeDtypeStruct:

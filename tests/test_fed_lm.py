@@ -1,0 +1,314 @@
+"""fed_lm: federating a real models/lm.py transformer through streamed
+per-leaf sketching (DESIGN.md §13).
+
+Contracts pinned here:
+  * subset selection (core/subset.py): substring patterns resolve in
+    template leaf order, extract/merge round-trips, size accounting.
+  * a path-filtered TreeSketchSpec keeps full-template seeds: selecting
+    every path rebuilds the identical spec, and each filtered entry uses
+    exactly the operator the full spec gave that leaf.
+  * the streamed encode (core/stream.py) is bit-exact with the
+    materialized leaf-layout sketch, its measured peak EQUALS the
+    closed-form O(max-layer + m) bound (never the 4n flat vector), and
+    the decode mirror matches tree_sketch_adjoint leaf-for-leaf.
+  * models/io.checkpoint_leaf_reader feeds the stream straight off a
+    checkpoint/ckpt.py npz — full tree never resident.
+  * a cfg.trainable engine updates ONLY the selected leaves (frozen
+    leaves bit-identical across a round) and sizes its sketch from the
+    trainable count.
+  * make_fed_lm_engine's placed round on the default (1, 1) fed-model
+    mesh is the same program as the unplaced fused round.
+  * fl/comms.subset_round_bits bills every algorithm at n_trainable.
+"""
+import dataclasses
+import functools
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import save_checkpoint
+from repro.core import stream, subset
+from repro.core import treesketch as ts
+from repro.core.pfed1bs import PFed1BS, PFed1BSConfig
+from repro.fl import comms
+from repro.launch import fedexec
+from repro.models import io as mio
+from repro.models import lm
+
+TINY = dataclasses.replace(
+    configs.get("granite-8b"), n_layers=2, d_model=64, n_heads=4, n_kv=2,
+    head_dim=16, d_ff=128, vocab=256, name="granite-tiny",
+)
+
+
+@pytest.fixture(scope="module")
+def template():
+    return jax.eval_shape(
+        functools.partial(lm.init_params, TINY), jax.random.PRNGKey(0)
+    )
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(TINY, jax.random.PRNGKey(3))
+
+
+def _lm_batches(arch, k, r, b, seq=32, seed=1):
+    mk = lambda key: mio.make_batch(arch, key, b, seq)
+    return jax.vmap(lambda key: jax.vmap(mk)(jax.random.split(key, r)))(
+        jax.random.split(jax.random.PRNGKey(seed), k)
+    )
+
+
+# ---------------------------------------------------------------------------
+# subset selection
+# ---------------------------------------------------------------------------
+
+def test_match_paths_substring_in_template_order(template):
+    all_paths = [p for p, _ in subset.leaf_paths(template)]
+    sel = subset.match_paths(template, ("attn",))
+    assert sel and all("attn" in p for p in sel)
+    assert list(sel) == [p for p in all_paths if "attn" in p]
+    # pattern order does not reorder the selection
+    two = subset.match_paths(template, ("head", "attn"))
+    assert list(two) == [p for p in all_paths if "attn" in p or "head" in p]
+
+
+def test_match_paths_unmatched_pattern_raises(template):
+    with pytest.raises(ValueError, match="no_such_leaf"):
+        subset.match_paths(template, ("attn", "no_such_leaf"))
+
+
+def test_extract_merge_roundtrip(params):
+    paths = subset.match_paths(params, ("attn",))
+    sub = subset.extract(params, paths)
+    assert set(sub) == set(paths)
+    # merge(extract) is the identity
+    back = subset.merge(params, sub)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # merging zeroed subset leaves zeroes exactly the selected leaves
+    zeroed = subset.merge(params, {p: jnp.zeros_like(l) for p, l in sub.items()})
+    for p, leaf in subset.leaf_paths(zeroed):
+        if p in sub:
+            assert not np.any(np.asarray(leaf))
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(leaf), np.asarray(dict(subset.leaf_paths(params))[p])
+            )
+
+
+def test_subset_size_counts_selected_leaves(template):
+    paths = subset.match_paths(template, ("attn",))
+    want = sum(
+        int(np.prod(l.shape)) for p, l in subset.leaf_paths(template)
+        if p in set(paths)
+    )
+    assert subset.subset_size(template, paths) == want > 0
+
+
+# ---------------------------------------------------------------------------
+# path-filtered spec keeps full-template seeds
+# ---------------------------------------------------------------------------
+
+def _entry_key(e):
+    path, spec, off, major = e
+    return (path, spec.seed, spec.n, spec.m, major)
+
+
+def test_filtered_spec_selecting_all_is_identity(template):
+    full = ts.make_tree_sketch_spec(template, 0.1, chunk=1024)
+    every = tuple(p for p, _ in subset.leaf_paths(template))
+    refilt = ts.make_tree_sketch_spec(template, 0.1, chunk=1024, paths=every)
+    assert [_entry_key(e) for e in full.entries] == \
+           [_entry_key(e) for e in refilt.entries]
+    assert (full.n, full.m) == (refilt.n, refilt.m)
+
+
+def test_filtered_spec_reuses_full_template_operator(template):
+    full = ts.make_tree_sketch_spec(template, 0.1, chunk=1024)
+    paths = subset.match_paths(template, ("attn",))
+    filt = ts.make_tree_sketch_spec(template, 0.1, chunk=1024, paths=paths)
+    by_path = {e[0]: e for e in full.entries}
+    off = 0
+    for e in filt.entries:
+        assert _entry_key(e) == _entry_key(by_path[e[0]])  # same seed/geometry
+        assert e[2] == off                                 # offsets repacked
+        off += e[1].m
+    assert filt.n == subset.subset_size(template, paths)
+    assert filt.m == off < full.m
+
+
+def test_empty_filter_raises(template):
+    with pytest.raises(AssertionError):
+        ts.make_tree_sketch_spec(template, 0.1, chunk=1024, paths=())
+
+
+# ---------------------------------------------------------------------------
+# streamed encode/decode
+# ---------------------------------------------------------------------------
+
+def test_stream_sketch_bit_exact_and_peak_is_closed_form(params):
+    tspec = ts.make_tree_sketch_spec(params, 0.1, chunk=1024)
+    materialized = np.asarray(
+        jax.jit(lambda t: ts.flat_view(tspec, ts.tree_sketch_forward(tspec, t)))(
+            params
+        )
+    )
+    leaves = dict(subset.leaf_paths(params))
+    meter = stream.MemMeter()
+    streamed = stream.stream_sketch(tspec, leaves.__getitem__, meter=meter)
+    np.testing.assert_array_equal(streamed, materialized)
+    assert meter.peak == stream.stream_peak_bound(tspec)
+    assert meter.peak < 4 * tspec.n       # never the flat vector
+    assert meter.live == 0                # everything released
+
+
+def test_stream_sketch_through_checkpoint_reader(params):
+    """Full protocol: params -> npz on disk -> lazy per-leaf reads ->
+    streamed sketch. Bit-exact with the in-memory streamed sketch."""
+    tspec = ts.make_tree_sketch_spec(params, 0.1, chunk=1024)
+    leaves = dict(subset.leaf_paths(params))
+    want = stream.stream_sketch(tspec, leaves.__getitem__)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "c.npz")
+        save_checkpoint(path, params)
+        stored, get_leaf = mio.checkpoint_leaf_reader(path)
+        assert set(stored) >= {p for p, *_ in tspec.entries}
+        got = stream.stream_sketch(tspec, get_leaf, meter=stream.MemMeter())
+    np.testing.assert_array_equal(got, want)
+
+
+def test_subset_spec_streams_from_full_checkpoint(params):
+    """A path-filtered spec only ever asks the reader for its own leaves,
+    so a full checkpoint feeds a LoRA-subset stream unchanged."""
+    paths = subset.match_paths(params, ("attn",))
+    tspec = ts.make_tree_sketch_spec(params, 0.1, chunk=1024, paths=paths)
+    asked = []
+    leaves = dict(subset.leaf_paths(params))
+    got = stream.stream_sketch(
+        tspec, lambda p: (asked.append(p), leaves[p])[1]
+    )
+    assert set(asked) == set(paths)
+    sub = subset.extract(params, paths)
+    materialized = np.asarray(
+        jax.jit(lambda t: ts.flat_view(tspec, ts.tree_sketch_forward(tspec, t)))(sub)
+    )
+    np.testing.assert_array_equal(got, materialized)
+
+
+def test_stream_adjoint_matches_tree_sketch_adjoint(params, template):
+    tspec = ts.make_tree_sketch_spec(params, 0.1, chunk=1024)
+    v = np.random.default_rng(0).standard_normal(tspec.m).astype(np.float32)
+    vdict = {
+        path: jnp.asarray(v[off: off + spec.m].reshape(spec.num_chunks, spec.m_chunk))
+        for path, spec, off, major in tspec.entries
+    }
+    want = ts.tree_sketch_adjoint(tspec, vdict, template)
+    got = {}
+    stream.stream_adjoint(tspec, v, template, lambda p, l: got.__setitem__(p, l))
+    want_by_path = dict(subset.leaf_paths(want))
+    assert set(got) == set(want_by_path)
+    for p in got:
+        np.testing.assert_array_equal(got[p], np.asarray(want_by_path[p]))
+
+
+# ---------------------------------------------------------------------------
+# subset engine + placed fed_lm round
+# ---------------------------------------------------------------------------
+
+def _fl_cfg(**kw):
+    base = dict(num_clients=2, participate=2, local_steps=1, lr=0.02,
+                m_ratio=0.1, chunk=4096, layout="leaf")
+    return PFed1BSConfig(**{**base, **kw})
+
+
+def test_subset_engine_trains_only_selected_leaves(template):
+    eng = PFed1BS(
+        _fl_cfg(trainable=("attn",)),
+        lambda p, b: lm.loss_fn(TINY, p, b)[0],
+        template,
+    )
+    assert eng.n_trainable == subset.subset_size(template, eng.trainable_paths)
+    assert eng.n_trainable < eng.n
+    state = eng.init(lambda k: lm.init_params(TINY, k), jax.random.PRNGKey(0))
+    before = jax.tree.map(np.asarray, state.clients)
+    batches = _lm_batches(TINY, 2, 1, 2)
+    state, m = eng.round(state, batches, jnp.ones((2,)) / 2, jax.random.PRNGKey(5))
+    assert int(m["uplink_bits"]) == 2 * eng.m
+    frozen = moved = 0
+    trainable = set(eng.trainable_paths)
+    after = dict(subset.leaf_paths(state.clients))
+    for path, leaf in subset.leaf_paths(before):
+        if path in trainable:
+            moved += int(not np.array_equal(np.asarray(after[path]), leaf))
+        else:
+            np.testing.assert_array_equal(np.asarray(after[path]), leaf)
+            frozen += 1
+    assert moved > 0 and frozen > 0
+
+
+def test_fed_lm_placed_round_matches_unplaced(template):
+    """On the default (1, 1) fed-model mesh, NamedSharding placement is a
+    layout annotation — the placed round must be the identical program."""
+    eng, mesh, tmpl = fedexec.make_fed_lm_engine(TINY, _fl_cfg())
+    assert dict(mesh.shape) == {"fed": 1, "model": 1}
+    init_fn = lambda k: lm.init_params(TINY, k)
+    state = eng.init(init_fn, jax.random.PRNGKey(0))
+    sh = fedexec.fed_lm_shardings(TINY, tmpl, mesh)
+    placed = fedexec.place_fed_lm_state(state, sh)
+    batches = _lm_batches(TINY, 2, 1, 2)
+    pbatches = fedexec.place_fed_lm_batches(batches, sh)
+    w = jnp.ones((2,)) / 2
+    st_p, m_p = eng.round(placed, pbatches, w, jax.random.PRNGKey(7))
+    st_u, m_u = eng.round(state, batches, w, jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(st_p.v), np.asarray(st_u.v))
+    for a, b in zip(jax.tree.leaves(st_p.clients), jax.tree.leaves(st_u.clients)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m_p["task_loss"]) == float(m_u["task_loss"])
+
+
+def test_trainable_requires_leaf_layout(template):
+    with pytest.raises(AssertionError):
+        PFed1BS(
+            _fl_cfg(trainable=("attn",), layout="flat"),
+            lambda p, b: lm.loss_fn(TINY, p, b)[0],
+            template,
+        )
+
+
+# ---------------------------------------------------------------------------
+# subset billing
+# ---------------------------------------------------------------------------
+
+def test_subset_round_bits_bills_at_trainable_count():
+    n, m, s = 1_000_000, 50_000, 8
+    for algo in ("pfed1bs", "fedavg", "obda"):
+        sub = comms.subset_round_bits(
+            algo, n_total=n, n_trainable=n // 4, m=m, s=s
+        )
+        at_sub = comms.round_bits(algo, n=n // 4, m=m, s=s)
+        assert sub["uplink_bits"] == at_sub["uplink_bits"], algo
+        assert sub["downlink_bits"] == at_sub["downlink_bits"], algo
+    sub = comms.subset_round_bits("pfed1bs", n_total=n, n_trainable=n // 4,
+                                  m=m, s=s)
+    assert sub["n_total"] == n and sub["n_trainable"] == n // 4
+    assert sub["trainable_fraction"] == 0.25
+    # full tree is the round_bits identity (plus the bookkeeping keys)
+    full = comms.subset_round_bits("pfed1bs", n_total=n, n_trainable=n,
+                                   m=m, s=s)
+    assert {k: v for k, v in full.items()
+            if k not in ("n_total", "n_trainable", "trainable_fraction")} \
+        == comms.round_bits("pfed1bs", n=n, m=m, s=s)
+
+
+def test_subset_round_bits_rejects_bad_counts():
+    with pytest.raises(AssertionError):
+        comms.subset_round_bits("pfed1bs", n_total=10, n_trainable=0, m=4, s=2)
+    with pytest.raises(AssertionError):
+        comms.subset_round_bits("pfed1bs", n_total=10, n_trainable=11, m=4, s=2)

@@ -11,8 +11,8 @@ from jax.sharding import PartitionSpec as P
 from repro import configs
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.data import synthetic as ds
-from repro.launch.mesh import make_debug_mesh
-from repro.launch import steps as st
+from repro.launch.mesh import make_debug_mesh, make_fed_model_mesh
+from repro.launch import fedexec, steps as st
 from repro.models import io, lm
 from repro.sharding import specs as sh
 
@@ -58,6 +58,54 @@ def test_train_step_runs_on_debug_mesh():
     d = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in
             zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
     assert d > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_fed_lm_specs_valid_on_one_device_mesh(arch):
+    """Every named config yields placeable fed_lm specs on the degenerate
+    (1, 1) mesh (the CI/laptop tier): NamedShardings construct for every
+    leaf, and the major axes param_major_axes picks are real leaf axes —
+    the contract make_fed_lm_engine's leaf-layout treesketch relies on."""
+    cfg = configs.get(arch).reduced()
+    tmpl = st.param_template(cfg)
+    mesh = make_fed_model_mesh(1, 1)
+    shd = fedexec.fed_lm_shardings(cfg, tmpl, mesh)
+    flat_t = jax.tree_util.tree_flatten_with_path(tmpl)[0]
+    flat_s = jax.tree.leaves(
+        shd["clients"],
+        is_leaf=lambda x: hasattr(x, "spec") and not isinstance(x, dict),
+    )
+    assert len(flat_s) == len(flat_t)
+    for (path, leaf), ns in zip(flat_t, flat_s):
+        assert tuple(ns.spec)[0] == "fed", (path, ns.spec)
+        assert len(ns.spec) <= 1 + leaf.ndim, (path, ns.spec, leaf.shape)
+    majors = sh.param_major_axes(cfg, tmpl, mesh)
+    for (path, leaf), (p2, ax) in zip(
+        flat_t, jax.tree_util.tree_flatten_with_path(majors)[0]
+    ):
+        assert ax == -1 or 0 <= ax < leaf.ndim, (path, ax, leaf.shape)
+
+
+def test_sharded_lm_checkpoint_roundtrip():
+    """A fed_lm client store (K leading axis, leaves placed through
+    fed_lm_shardings) round-trips bit-exactly through checkpoint/ckpt.py,
+    and the loaded tree re-places under the same shardings."""
+    cfg = configs.get("granite-8b").reduced()
+    tmpl = st.param_template(cfg)
+    mesh = make_fed_model_mesh(1, 1)
+    shd = fedexec.fed_lm_shardings(cfg, tmpl, mesh)
+    params = lm.init_params(cfg, jax.random.key(0))
+    clients = jax.tree.map(lambda a: jnp.stack([a, a + 1]), params)
+    placed = jax.tree.map(jax.device_put, clients, shd["clients"])
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "clients.npz")
+        save_checkpoint(path, placed, meta={"round": 1})
+        back = load_checkpoint(path, placed)
+        for a, b in zip(jax.tree.leaves(placed), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        again = jax.tree.map(jax.device_put, back, shd["clients"])
+        for a, b in zip(jax.tree.leaves(placed), jax.tree.leaves(again)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_label_skew_partition():
