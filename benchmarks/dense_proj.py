@@ -51,17 +51,20 @@ def run_dense_pfed1bs(data, init_fn, loss_fn, eval_fn, *, rounds=15,
     )
     eng = DensePFed1BS(cfg, loss_fn, template)
     state = eng.init(init_fn, jax.random.key(seed + 1))
+    losses = []
     t0 = time.time()
     for r in range(rounds):
         kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(seed + 2), r))
         batches = ds.sample_round_batches(kb, data, local_steps, batch)
-        state, _ = eng.round(state, batches, data.weights, kr)
+        state, m = eng.round(state, batches, data.weights, kr)
+        losses.append(float(m["task_loss"]))
     wall = time.time() - t0
     accs = jax.vmap(eval_fn)(state.clients, data.test_x, data.test_y)
     n = eng.n
     return {
         "algo": "pfed1bs_dense_phi",
         "acc": float(accs.mean()),
+        "loss_curve": losses,
         "us_per_round": wall / rounds * 1e6,
         "mb_per_round": comms.round_bits("pfed1bs", n=n, m=eng.spec.m,
                                          s=data.num_clients)["total_mb"],

@@ -65,15 +65,30 @@ def run_algo(algo, data, init_fn, loss_fn, eval_fn, *, rounds=15,
         losses.append(float(m["task_loss"]))
     wall = time.time() - t0
 
+    # Evaluation semantics (documented in experiments/bench/EXP_MATRIX.md):
+    # personalized engines are scored with each client's OWN model on its
+    # own shard (`acc`); a mean-of-clients consensus model scored the same
+    # way is recorded as `acc_global` so the table is comparable with the
+    # single-global-model baselines (where acc == acc_global by
+    # construction). Under concept_shift the global number is expected to
+    # collapse — that asymmetry is the paper's point, not a bug.
     if hasattr(state, "clients"):
+        personalized = True
         accs = jax.vmap(eval_fn)(state.clients, data.test_x, data.test_y)
+        consensus = jax.tree.map(lambda x: x.mean(0), state.clients)
+        gaccs = jax.vmap(lambda x, y: eval_fn(consensus, x, y))(
+            data.test_x, data.test_y)
     else:
+        personalized = False
         accs = jax.vmap(lambda x, y: eval_fn(state.params, x, y))(
             data.test_x, data.test_y)
+        gaccs = accs
     bits = comms.round_bits(algo, n=n, m=m_dim, s=participate, num_tensors=nt)
     return {
         "algo": algo,
+        "personalized": personalized,
         "acc": float(accs.mean()),
+        "acc_global": float(gaccs.mean()),
         "acc_std": float(accs.std()),
         "loss_curve": losses,
         "mb_per_round": bits["total_mb"],

@@ -373,9 +373,27 @@ def _by_scenario(cells):
     return out
 
 
+_EVAL_SEMANTICS_NOTE = """\
+## Evaluation semantics
+
+`acc` for **pfed1bs** scores each client's own personalized model on that
+client's test shard; every baseline fields a **single global model** scored
+on the same shards. That asymmetry is the object of study — under
+concept shift a global model mathematically cannot fit all clients — but
+it means pfed1bs's `acc` is not a like-for-like global-model number. The
+paper-table artifacts (`experiments/bench/table2.json`,
+`fig34_convergence.json`) therefore also record `acc_global`: a
+mean-of-clients consensus model evaluated exactly like the baselines
+(for baselines `acc_global == acc` by construction). Loss curves are
+likewise per-algorithm objectives over different model sets (personalized
+ensembles start from per-client inits), so curves are comparable across
+rounds *within* an algorithm, not in absolute scale *across* algorithms.
+"""
+
+
 def matrix_markdown(results: dict) -> str:
     """GitHub-markdown Table-1/2 per scenario: accuracy vs wire cost."""
-    lines = []
+    lines = [_EVAL_SEMANTICS_NOTE]
     for scenario, cells in _by_scenario(results["cells"]).items():
         fedavg = next((c for c in cells if c["algo"] == "fedavg"), None)
         lines.append(f"### Scenario `{scenario}`\n")

@@ -189,6 +189,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool, hyper: st.StepHype
         record["compile_s"] = round(time.time() - t1, 2)
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     hbm = float(ca.get("bytes accessed", 0.0))
     record["cost_analysis"] = {"flops": flops, "bytes_accessed": hbm}
