@@ -37,6 +37,15 @@ BENCH_SCHEMAS = {
     "BENCH_serve": [
         "quality.acc_fp32_store", "quality.acc_sketch_store",
         "quality.compression_vs_fp32", "reconstruct.batches", "stream.grid",
+        "stream.slo.ok",
+    ],
+    # written by `run.py all` (the CI bench-smoke mode): consolidated
+    # per-target headline metrics + SLO verdicts
+    "BENCH_index": [
+        "targets.sketch.ok", "targets.round_sharded.ok",
+        "targets.serve.ok", "targets.serve.slo.ok",
+        "targets.exp.ok", "targets.async.ok", "targets.robust.ok",
+        "targets.hier.ok", "targets.fl_lm.ok",
     ],
     "BENCH_exp": [
         "cells", "algos", "scenarios", "config",

@@ -55,7 +55,10 @@ One:      PYTHONPATH=src python -m benchmarks.run exp [--fast]
           (--only exp is the same; positional wins if both given)
 CI:       `run.py all --fast` is the bench-smoke consistency mode — one
           process runs every target, a failure deletes that target's
-          stale artifacts and exits nonzero after the rest finish.
+          stale artifacts and exits nonzero after the rest finish. `all`
+          runs also write BENCH_index[.fast].json: one entry per target
+          with its artifact path, a headline-metric dict, and the
+          embedded SLO verdict (serving carries one; see DESIGN.md §14).
 
 A sub-benchmark that raises is reported and the process exits nonzero
 after the remaining ones run — the CI bench-smoke job gates on this.
@@ -395,9 +398,11 @@ def bench_round_sharded(fast=False):
     return out
 
 
-def bench_serve(fast=False):
+def bench_serve(fast=False, trace=False):
     """Serving-tier numbers — emits BENCH_serve.json (fast:
-    BENCH_serve.fast.json; see benchmarks/serve_bench.py)."""
+    BENCH_serve.fast.json; see benchmarks/serve_bench.py). --trace also
+    dumps the serving flight ring as TRACE_serve[.fast].json; a breached
+    per-cell SLO snapshots FLIGHT_serve[.fast].json."""
     from benchmarks import serve_bench
 
     results = {"fast": fast}
@@ -413,12 +418,17 @@ def bench_serve(fast=False):
         emit(f"serve/reconstruct_B{b}", r["batched_us"],
              f"sequential_us={r['sequential_us']:.0f} "
              f"speedup={r['speedup']:.2f}x")
-    results["stream"] = serve_bench.bench_stream(fast=fast)
+    results["stream"] = serve_bench.bench_stream(fast=fast, trace=trace)
     for k, r in results["stream"]["grid"].items():
         emit(f"serve/stream_K{k}", r["materialize_p50_ms"] * 1e3,
              f"tok_s={r['tokens_per_sec']:.0f} "
              f"p99_ms={r['materialize_p99_ms']:.0f} hit={r['hit_rate']:.2f} "
-             f"compression={r['compression_vs_fp32']:.1f}x")
+             f"telemetry_B={r['telemetry_bytes']} "
+             f"compression={r['compression_vs_fp32']:.1f}x "
+             f"slo={'ok' if r['slo']['ok'] else 'BREACH'}")
+    s = results["stream"]["slo"]
+    emit("serve/slo", 0.0,
+         f"spec={s['spec']} {'OK' if s['ok'] else 'BREACH:' + ';'.join(s['breaches'])}")
     serve_bench.write_artifacts(results)
     return results
 
@@ -535,7 +545,7 @@ def bench_fl_lm(fast=False):
 
 
 # benches that can also record an obs timeline (--trace)
-TRACEABLE = ("exp", "async", "hier")
+TRACEABLE = ("exp", "async", "hier", "serve")
 
 # artifact stems each bench owns (repo-root BENCH_*/TRACE_* plus the
 # experiments/bench paper tables); on a FAILED run the matching
@@ -544,7 +554,7 @@ TRACEABLE = ("exp", "async", "hier")
 ARTIFACTS = {
     "sketch": ("BENCH_sketch",),
     "round_sharded": ("BENCH_round_sharded",),
-    "serve": ("BENCH_serve",),
+    "serve": ("BENCH_serve", "TRACE_serve", "FLIGHT_serve"),
     "exp": ("BENCH_exp", "TRACE_exp"),
     "async": ("BENCH_async", "TRACE_async"),
     "robust": ("BENCH_robust",),
@@ -569,6 +579,65 @@ def _remove_stale_artifacts(name: str, fast: bool) -> None:
         if os.path.exists(path):
             os.remove(path)
             print(f"# removed stale {path} (bench {name} failed)", flush=True)
+
+
+# headline metric per target for the consolidated BENCH_index (one small
+# dict of load-bearing numbers per artifact; missing keys -> empty headline)
+_HEADLINES = {
+    "table2": lambda o: {"pfed1bs_acc": o["pfed1bs"]["acc"]},
+    "sketch": lambda o: {"round_speedup": o["round"]["round_speedup"]},
+    "round_sharded": lambda o: {"device_count": o["device_count"]},
+    "serve": lambda o: {
+        "compression_vs_fp32": o["quality"]["compression_vs_fp32"],
+        "acc_gap_points": o["quality"]["acc_gap_points"],
+    },
+    "exp": lambda o: {"cells": len(o["cells"])},
+    "async": lambda o: {
+        "speedup_time_to_target": o["speedup_time_to_target"],
+        "sync_parity": o["sync_parity"]["bit_exact"],
+    },
+    "robust": lambda o: {"recovered_frac": o["recovery"]["recovered_frac"]},
+    "hier": lambda o: {
+        "root_ingress_growth": o["root_ingress_growth"],
+        "parity": o["counter_merge_parity"]["bit_exact"],
+    },
+    "fl_lm": lambda o: {"parity": o["parity"]["bit_exact"]},
+}
+
+
+def write_index(targets, failures, fast: bool) -> str:
+    """Consolidated BENCH_index[.fast].json for `all` runs: per target its
+    primary artifact path, a small headline-metric dict, the embedded SLO
+    verdict (serving carries one; others null), and an ok flag (bench ran
+    AND its SLO, if any, holds). Built from the artifacts ON DISK so the
+    index always agrees with what validate/compare gate on."""
+    suffix = ".fast" if fast else ""
+    index = {"fast": fast, "targets": {}}
+    for name in targets:
+        stems = ARTIFACTS.get(name, ())
+        path = f"{stems[0]}{suffix}.json" if stems else None
+        entry = {"ok": name not in failures, "artifact": path,
+                 "headline": {}, "slo": None}
+        if path and os.path.exists(path):
+            obj = json.load(open(path))
+            try:
+                entry["headline"] = _HEADLINES.get(name, lambda o: {})(obj)
+            except (KeyError, IndexError, TypeError):
+                pass                      # schema drift is --validate's job
+            stream = obj.get("stream")
+            slo = (stream.get("slo") if isinstance(stream, dict) else None) \
+                or obj.get("slo")
+            if isinstance(slo, dict):
+                entry["slo"] = slo
+                if not slo.get("ok", True):
+                    entry["ok"] = False
+        else:
+            entry["artifact"] = None
+        index["targets"][name] = entry
+    out_path = f"BENCH_index{suffix}.json"
+    with open(out_path, "w") as f:
+        json.dump(index, f, indent=2)
+    return out_path
 
 
 BENCHES = {
@@ -625,6 +694,11 @@ def main() -> None:
             traceback.print_exc()
             failures.append(name)
             _remove_stale_artifacts(name, args.fast)
+    if only in (None, "all"):
+        # consolidated cross-target index (headline + SLO verdict each);
+        # written even on failure so the ok flags record what broke
+        path = write_index(todo, failures, args.fast)
+        print(f"# wrote {path}", flush=True)
     if failures:
         print(f"# FAILED: {', '.join(failures)}", flush=True)
         raise SystemExit(1)

@@ -12,10 +12,17 @@ Three sections:
               vs B sequential adjoints — the store's decode path win.
   stream      Zipf-distributed request streams over K in {64, 256, 1024}
               personalized LMs through the ServeEngine: tokens/sec, p50/p99
-              materialization latency, LRU hit rate, resident bytes per
-              client vs the fp32 store.
+              materialization latency (sketch-derived, DESIGN.md §14), LRU
+              hit rate, resident bytes per client vs the fp32 store, and a
+              per-cell SLO verdict against the committed spec
+              benchmarks/slo_serve.json. The engine's tracer is an
+              always-on FlightRecorder ring: a breached cell snapshots
+              FLIGHT_serve[.fast].json for postmortem, and --trace dumps
+              the ring as TRACE_serve[.fast].json (billing kind "serve" —
+              zero federation bits, asserted), validated in-process like
+              the exp/async/hier benches.
 
-Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--fast] [--trace]
 (--fast shrinks every axis and writes BENCH_serve.fast.json, never the
 canonical artifacts.)
 """
@@ -30,10 +37,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import flatten
+from repro.obs import slo as obsslo
 from repro.serve import router
 from repro.serve.engine import EngineConfig, ServeEngine
 from repro.serve.store import DenseStore, SketchStore, make_store_spec
+
+SLO_SPEC_PATH = os.path.join(os.path.dirname(__file__), "slo_serve.json")
 
 
 # ---------------------------------------------------------------------------
@@ -169,7 +180,7 @@ def _perturbed_clients(base, keys, scale=0.05):
     return jax.vmap(one)(keys)
 
 
-def bench_stream(fast=False):
+def bench_stream(fast=False, trace=False):
     from repro import configs
     from repro.models import lm
 
@@ -181,8 +192,16 @@ def bench_stream(fast=False):
     ecfg = EngineConfig(prompt_len=8, gen_len=16, max_batch=8, hot_models=16)
     import dataclasses
 
+    spec = obsslo.SLOSpec.load(SLO_SPEC_PATH)
+    # always-on flight ring: the engine traces into a bounded buffer so a
+    # breached cell can snapshot the last moments for postmortem
+    recorder = obs.FlightRecorder(clock="wall", capacity=4096)
+    suffix = ".fast" if fast else ""
+    flight_path = f"FLIGHT_serve{suffix}.json"
+
     out = {"arch": arch.name, "model_n": n,
-           "engine": dataclasses.asdict(ecfg), "grid": {}}
+           "engine": dataclasses.asdict(ecfg), "grid": {},
+           "slo": {"spec": spec.name, "ok": True, "breaches": []}}
 
     for k in grid:
         sspec = make_store_spec(base, k, m_ratio=1.0, chunk=4096)
@@ -192,17 +211,40 @@ def bench_stream(fast=False):
             ids = np.arange(lo, min(lo + enc, k))
             keys = jax.random.split(jax.random.fold_in(jax.random.key(1), lo), len(ids))
             store.put_batch(ids, _perturbed_clients(base, keys))
-        engine = ServeEngine(arch, store, ecfg)
+        engine = ServeEngine(arch, store, ecfg, tracer=recorder)
         cids = router.zipf_stream(k, k, requests, alpha=1.1)
         prompts = router.random_prompts(k + 1, requests, ecfg.prompt_len, arch.vocab)
         rep = router.run_stream(engine, cids, prompts, zipf_alpha=1.1, warm=True)
         rb = store.resident_bytes()
-        out["grid"][str(k)] = {
+        cell = {
             **rep.to_dict(),
             "per_client_bytes_sketch": rb["per_client_bytes"],
             "per_client_bytes_fp32": rb["fp32_per_client_bytes"],
             "compression_vs_fp32": rb["compression_vs_fp32"],
         }
+        # per-cell SLO verdict: thresholds on the cell scalars, burn rates
+        # on the engine's recent-materialization event ring
+        verdict = obsslo.evaluate(spec, cell, events=engine.slo_events(),
+                                  now=engine.now)
+        cell["slo"] = verdict
+        out["grid"][str(k)] = cell
+        if not verdict["ok"]:
+            out["slo"]["ok"] = False
+            out["slo"]["breaches"].extend(
+                f"K={k}:{b}" for b in verdict["breaches"])
+            if not os.path.exists(flight_path):   # first breach wins
+                obs.maybe_snapshot(
+                    recorder, flight_path, slo_verdict=verdict,
+                    meta={"bench": "serve", "fast": fast, "K": k})
+                out["slo"]["flight"] = flight_path
+
+    if trace:
+        trace_path = f"TRACE_serve{suffix}.json"
+        obj = obs.dump_trace(trace_path, recorder,
+                             billing=[{"kind": "serve"}],
+                             meta={"bench": "serve", "fast": fast})
+        obs.validate_trace(obj)   # in-process: bad trace fails the bench
+        out["trace_path"] = trace_path
     return out
 
 
@@ -226,6 +268,8 @@ def write_artifacts(results: dict, out_path: str | None = None) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="dump the serving flight ring as TRACE_serve[.fast].json")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -242,13 +286,19 @@ def main() -> None:
         print(f"reconstruct B={b}: sequential {r['sequential_us']:.0f}us  "
               f"batched {r['batched_us']:.0f}us  ({r['speedup']:.2f}x)")
 
-    results["stream"] = bench_stream(fast=args.fast)
+    results["stream"] = bench_stream(fast=args.fast, trace=args.trace)
     for k, r in results["stream"]["grid"].items():
         print(f"stream K={k}: {r['tokens_per_sec']:.0f} tok/s decode  "
               f"mat p50 {r['materialize_p50_ms']:.1f}ms p99 "
               f"{r['materialize_p99_ms']:.1f}ms  hit {r['hit_rate']:.2f}  "
+              f"telemetry {r['telemetry_bytes']}B  "
               f"{r['per_client_bytes_sketch'] / 1e3:.0f} KB/client "
-              f"({r['compression_vs_fp32']:.1f}x)")
+              f"({r['compression_vs_fp32']:.1f}x)  "
+              f"slo {'ok' if r['slo']['ok'] else 'BREACH'}")
+    s = results["stream"]["slo"]
+    print(f"slo[{s['spec']}]: {'OK' if s['ok'] else 'BREACH ' + str(s['breaches'])}")
+    if results["stream"].get("trace_path"):
+        print(f"wrote {results['stream']['trace_path']}")
 
     out_path = write_artifacts(results, args.out)
     print(f"wrote {out_path}")

@@ -567,6 +567,12 @@ class PFed1BS:
             "downlink_bits": jnp.float32(self.m),
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),
+            # per-coordinate |weighted vote sum| / total weight in [0, 1]:
+            # how far each consensus coordinate sat from a coin flip this
+            # round, computed on the PRIVATIZED wire signs the server
+            # actually tallied — the health monitor (obs/health.py)
+            # sketches the distribution
+            "vote_margins": jnp.abs(jnp.einsum("s,sm->m", w_s, wire)) / w_norm,
         }
         if cfg.privacy is not None:
             # sign bits the RR privatizer actually flipped on transmitting
@@ -667,6 +673,8 @@ class PFed1BS:
             "downlink_bits": jnp.float32(self.m),
             "sign_agreement": jnp.mean((zs * v_new[None, :] > 0).astype(jnp.float32)),
             "packed_words": jnp.float32(packed.shape[-1]),
+            "vote_margins": jnp.abs(jnp.einsum("s,sm->m", pw, wire))
+            / jnp.maximum(jnp.sum(pw), 1e-9),
         }
         if cfg.privacy is not None:
             metrics["rr_flips"] = jnp.sum(

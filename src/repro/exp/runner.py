@@ -38,6 +38,7 @@ from repro.data import synthetic as ds
 from repro.exp.scenarios import Scenario
 from repro.fl import comms
 from repro.models import smallnets as sn
+from repro.obs import health as obshealth
 from repro.obs import registry as obsreg
 from repro.obs import trace as obstrace
 
@@ -203,6 +204,9 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig,
             )
         return float(accs.mean()), float(accs.std())
 
+    # online convergence monitor (obs/health.py) — pfed1bs cells only:
+    # the baselines have no consensus sign vector to watch
+    monitor = obshealth.HealthMonitor() if algo == "pfed1bs" else None
     losses, s_per_round, acc_curve, round_s = [], [], [], []
     with tr.span("cell", track="exp", algo=algo, scenario=scenario.name,
                  rounds=cfg.rounds):
@@ -219,6 +223,16 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig,
             loss = float(metrics["task_loss"])  # blocks on the round's result
             round_s.append(time.time() - t0)
             losses.append(loss)
+            if monitor is not None:
+                monitor.update(
+                    v=np.asarray(state.v),
+                    ef_norm=(float(metrics["ef_residual_norm"])
+                             if "ef_residual_norm" in metrics else None),
+                    agreement=(float(metrics["sign_agreement"])
+                               if "sign_agreement" in metrics else None),
+                    margins=(np.asarray(metrics["vote_margins"])
+                             if "vote_margins" in metrics else None),
+                )
             s_r = int(round(float(np.sum(np.asarray(participants[1])))))
             s_per_round.append(s_r)
             if tr.enabled:
@@ -294,6 +308,9 @@ def run_cell(algo: str, scenario: Scenario, cfg: ExpConfig,
         "total_bits": bits["total_bits"],
         "total_mb": bits["total_mb"],
         "us_per_round": float(np.mean(steady)) * 1e6,
+        # per-cell federation health verdict (obs/health.py): consensus
+        # churn / EF trend / vote-margin distribution; None for baselines
+        "health": monitor.verdict() if monitor is not None else None,
         # re-derivation spec for obs.validate_trace: the cell's counter
         # emissions sum to exactly what this spec re-computes from fl/comms
         "billing": {

@@ -160,7 +160,10 @@ def main(argv=None):
     for r in range(args.rounds):
         kb, kr = jax.random.split(jax.random.fold_in(key, 1000 + r))
         state, metrics = engine.round(state, sample(kb), data.weights, kr)
-        rec = {"round": r, **{k: float(v) for k, v in metrics.items()}}
+        # scalars only: vector diagnostics (e.g. per-coordinate
+        # vote_margins) are for the online health monitor, not the history
+        rec = {"round": r, **{k: float(v) for k, v in metrics.items()
+                              if np.ndim(v) == 0}}
         if (r + 1) % args.eval_every == 0 or r == args.rounds - 1:
             rec.update(evaluate(args, engine, state, eval_fn, data))
         history.append(rec)

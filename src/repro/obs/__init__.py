@@ -1,10 +1,15 @@
 """Unified observability layer: deterministic tracing, one metrics
-registry, kernel probing, and Perfetto-compatible export.
+registry, kernel probing, Perfetto-compatible export, and (PR 10) online
+production telemetry — mergeable quantile sketches, SLO burn-rate gates,
+federation health monitoring, and an always-on flight recorder.
 
-See DESIGN.md §12 for the tracer model and clock domains; the usual
-entry points are re-exported here.
+See DESIGN.md §12 for the tracer model and clock domains and §14 for the
+telemetry layer; the usual entry points are re-exported here.
 """
 from repro.obs.export import dump_trace, dumps_trace, to_chrome
+from repro.obs.flight import FlightRecorder, maybe_snapshot
+from repro.obs.health import HealthConfig, HealthMonitor
+from repro.obs.hist import QuantileSketch, merged
 from repro.obs.probe import KernelProbe, probing
 from repro.obs.registry import (
     COUNTERS,
@@ -13,21 +18,39 @@ from repro.obs.registry import (
     expected_async_bits,
     expected_hier_bits,
 )
+from repro.obs.slo import BurnRateObjective, Objective, SLOSpec
+from repro.obs.slo import evaluate as evaluate_slo
 from repro.obs.trace import NOOP, Tracer
-from repro.obs.validate_trace import validate_trace
+from repro.obs.validate_trace import (
+    validate_flight,
+    validate_slo_verdict,
+    validate_trace,
+)
 
 __all__ = [
     "COUNTERS",
+    "BurnRateObjective",
+    "FlightRecorder",
+    "HealthConfig",
+    "HealthMonitor",
     "KernelProbe",
     "MetricsRegistry",
     "NOOP",
+    "Objective",
+    "QuantileSketch",
+    "SLOSpec",
     "Tracer",
     "assert_billing",
     "dump_trace",
     "dumps_trace",
+    "evaluate_slo",
     "expected_async_bits",
     "expected_hier_bits",
+    "maybe_snapshot",
+    "merged",
     "probing",
     "to_chrome",
+    "validate_flight",
+    "validate_slo_verdict",
     "validate_trace",
 ]

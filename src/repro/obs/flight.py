@@ -1,0 +1,117 @@
+"""Always-on flight recorder: bounded span/counter ring + breach snapshot.
+
+A `FlightRecorder` is a `Tracer` whose event store is a fixed-capacity
+ring instead of an unbounded list — it can stay enabled in production
+forever at constant memory, remembering the most recent `capacity`
+spans/instants/counter samples (oldest evicted first; an eviction count
+is kept so the snapshot says how much history fell off the back).
+
+`snapshot(path, reason, ...)` freezes the ring into a Perfetto-loadable
+`FLIGHT_*.json`: the standard Chrome trace shape (same `dumps_trace`
+canonical serialization as TRACE files) plus a `flight` block recording
+why the snapshot fired, the ring capacity, and the eviction count, and
+optionally the SLO verdict / health verdict that triggered it. Unlike a
+TRACE file it carries NO billing requirement — a ring that dropped
+events cannot re-derive bit totals, and the point of a flight recording
+is the last moments before the alarm, not the full ledger.
+`obs.validate_trace.validate_flight` pins the schema.
+
+Counter semantics under eviction: `Tracer` keeps cumulative totals in a
+side dict that is never evicted, so `counterTotals` in the snapshot is
+exact even when early counter SAMPLES fell out of the ring; surviving
+samples are still monotone (evictions take the oldest first).
+"""
+from __future__ import annotations
+
+import collections
+
+from repro.obs.export import dumps_trace, to_chrome
+from repro.obs.trace import Tracer
+
+#: Default ring capacity — enough for a few hundred recent spans while
+#: keeping the resident footprint trivially bounded.
+DEFAULT_CAPACITY = 512
+
+
+class _Ring:
+    """Fixed-capacity append-only view with an eviction counter. Quacks
+    enough like a list for `Tracer` (append) and `obs.export.to_chrome`
+    (iteration) to use it unchanged."""
+
+    __slots__ = ("capacity", "_buf", "total")
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._buf = collections.deque(maxlen=capacity)
+        self.total = 0
+
+    def append(self, ev) -> None:
+        self._buf.append(ev)
+        self.total += 1
+
+    @property
+    def dropped(self) -> int:
+        return self.total - len(self._buf)
+
+    def __iter__(self):
+        return iter(self._buf)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class FlightRecorder(Tracer):
+    """A Tracer bounded to the last `capacity` events, with snapshots."""
+
+    def __init__(self, clock: str = "wall", capacity: int = DEFAULT_CAPACITY,
+                 enabled: bool = True):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1; got {capacity}")
+        super().__init__(clock=clock, enabled=enabled)
+        self.events = _Ring(capacity)
+
+    @property
+    def capacity(self) -> int:
+        return self.events.capacity
+
+    @property
+    def dropped(self) -> int:
+        return self.events.dropped
+
+    def snapshot(self, path, reason: str, slo_verdict: dict | None = None,
+                 health: dict | None = None, meta: dict | None = None) -> dict:
+        """Write the ring to `path` as a FLIGHT_*.json; returns the
+        object written. `reason` is the trigger ("slo_breach",
+        "health_alarm", "manual", ...); the triggering SLO/health
+        verdicts ride along for postmortem."""
+        obj = to_chrome(self, billing=None, meta=meta)
+        del obj["billing"]          # flight files carry no billing ledger
+        obj["flight"] = {
+            "reason": str(reason),
+            "capacity": int(self.capacity),
+            "dropped": int(self.dropped),
+            "events_total": int(self.events.total),
+        }
+        if slo_verdict is not None:
+            obj["slo_verdict"] = slo_verdict
+        if health is not None:
+            obj["health"] = health
+        with open(path, "w") as fh:
+            fh.write(dumps_trace(obj))
+        return obj
+
+
+def maybe_snapshot(recorder: FlightRecorder, path, slo_verdict: dict | None = None,
+                   health: dict | None = None, meta: dict | None = None):
+    """Snapshot iff something is actually wrong: an SLO verdict with
+    ok=False or a health verdict with ok=False. Returns the written
+    object, or None when everything is healthy (no file touched)."""
+    reasons = []
+    if slo_verdict is not None and not slo_verdict.get("ok", True):
+        reasons.append("slo_breach")
+    if health is not None and not health.get("ok", True):
+        reasons.append("health_alarm")
+    if not reasons:
+        return None
+    return recorder.snapshot(path, "+".join(reasons), slo_verdict=slo_verdict,
+                             health=health, meta=meta)

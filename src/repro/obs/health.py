@@ -1,0 +1,159 @@
+"""Online federation health monitoring (DESIGN.md §14).
+
+The paper's theory says the one-bit consensus converges to a stationary
+neighborhood of the personalized optimum — which makes several signals
+the executors ALREADY emit natural online convergence monitors, no extra
+communication required:
+
+  sign-flip churn      fraction of consensus coordinates that changed
+                       sign vs the previous round. Near a stationary
+                       point the majority vote stabilizes, so churn
+                       decays toward the dithering floor; sustained high
+                       churn after warmup means the vote is thrashing.
+  EF residual trend    ||error-feedback residual|| per round. Bounded
+                       under the paper's assumptions; a steady upward
+                       trend is the classic EF divergence signature
+                       (step size too large / sketch too small).
+  vote margin          |sum_s w_s * sign_s| per coordinate — how far
+                       each majority vote is from a coin flip. A healthy
+                       consensus has margins bounded away from 0; the
+                       distribution is summarized by a QuantileSketch.
+  staleness tail       async-tier update staleness, sketched; a growing
+                       p99 means stragglers are aging out of usefulness.
+
+`HealthMonitor.update(...)` ingests whichever signals a tier has each
+round/flush; `status()` classifies the trajectory:
+
+  warming      fewer than `warmup` rounds observed — no verdict yet.
+  converging   churn decaying / below alarm, EF trend flat or falling.
+  plateau      mean churn over the trailing window under
+               `churn_plateau` — the vote has locked in.
+  diverging    churn above `churn_alarm` after warmup, or the EF
+               residual trend growing by more than `ef_growth_alarm`
+               across the window. This is the alarm state: `ok` is
+               False and the flight recorder should snapshot.
+
+All state is O(window + sketch buckets): trailing deques plus two
+bounded sketches — the monitor itself obeys the telemetry memory bound.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.obs.hist import QuantileSketch
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    window: int = 8             # trailing rounds kept for trend estimates
+    warmup: int = 3             # rounds before any non-"warming" verdict
+    churn_plateau: float = 0.02  # mean churn below this => plateau
+    churn_alarm: float = 0.5    # churn above this after warmup => diverging
+    ef_growth_alarm: float = 1.5  # late/early EF ratio above this => diverging
+    rel_acc: float = 0.01       # sketch accuracy for margins/staleness
+    max_buckets: int = 128      # sketch memory bound
+
+
+class HealthMonitor:
+    """Per-round/flush federation health state machine. Feed it whatever
+    signals the tier has; read `status()`/`verdict()` whenever."""
+
+    def __init__(self, cfg: HealthConfig = HealthConfig()):
+        self.cfg = cfg
+        self.rounds = 0
+        self._prev_v = None
+        self.churn = collections.deque(maxlen=cfg.window)
+        self.ef = collections.deque(maxlen=cfg.window)
+        self.agreement = collections.deque(maxlen=cfg.window)
+        self.margins = QuantileSketch(cfg.rel_acc, cfg.max_buckets)
+        self.staleness = QuantileSketch(cfg.rel_acc, cfg.max_buckets)
+
+    # -- ingest ---------------------------------------------------------------
+
+    def update(self, v=None, ef_norm=None, agreement=None,
+               margins=None, staleness=None) -> None:
+        """One round/flush of signals; every argument optional.
+
+        v: consensus sign vector (any array-like in {-1, 0, +1}) — churn
+        is computed against the previous round's v. ef_norm: scalar EF
+        residual norm. agreement: scalar sign-agreement rate. margins:
+        per-coordinate vote margins (array-like, >= 0). staleness: one
+        scalar staleness observation or an array of them."""
+        self.rounds += 1
+        if v is not None:
+            v = np.asarray(v)
+            if self._prev_v is not None and v.shape == self._prev_v.shape:
+                self.churn.append(float(np.mean(v != self._prev_v)))
+            self._prev_v = v.copy()
+        if ef_norm is not None:
+            self.ef.append(float(ef_norm))
+        if agreement is not None:
+            self.agreement.append(float(agreement))
+        if margins is not None:
+            self.margins.add_many(np.abs(np.asarray(margins, np.float64)))
+        if staleness is not None:
+            self.staleness.add_many(np.atleast_1d(staleness))
+
+    # -- classify -------------------------------------------------------------
+
+    def _ef_trend(self) -> float:
+        """Late-half / early-half mean EF residual over the window; 1.0
+        when flat or not enough data."""
+        if len(self.ef) < 4:
+            return 1.0
+        vals = list(self.ef)
+        half = len(vals) // 2
+        early = float(np.mean(vals[:half]))
+        late = float(np.mean(vals[half:]))
+        if early <= 0.0:
+            # keep the trend finite (JSON-safe): a zero early half with a
+            # nonzero late half is maximal measurable growth
+            return 1.0 if late <= 0.0 else late / 1e-30
+        return late / early
+
+    def alarms(self) -> list:
+        """Active alarm names (empty when healthy or still warming)."""
+        if self.rounds < self.cfg.warmup:
+            return []
+        out = []
+        if self.churn and self.churn[-1] > self.cfg.churn_alarm:
+            out.append("churn_alarm")
+        if self._ef_trend() > self.cfg.ef_growth_alarm:
+            out.append("ef_divergence")
+        return out
+
+    def status(self) -> str:
+        if self.rounds < self.cfg.warmup:
+            return "warming"
+        if self.alarms():
+            return "diverging"
+        if self.churn and float(np.mean(self.churn)) < self.cfg.churn_plateau:
+            return "plateau"
+        return "converging"
+
+    def verdict(self) -> dict:
+        """Machine-readable health verdict (embedded in BENCH_exp cells;
+        `ok` is False only in the alarm state)."""
+        status = self.status()
+        return {
+            "status": status,
+            "ok": status != "diverging",
+            "rounds": int(self.rounds),
+            "alarms": self.alarms(),
+            "churn": {
+                "last": float(self.churn[-1]) if self.churn else None,
+                "mean_window": float(np.mean(self.churn)) if self.churn else None,
+            },
+            "ef": {
+                "last": float(self.ef[-1]) if self.ef else None,
+                "trend": float(self._ef_trend()),
+            },
+            "agreement": {
+                "last": float(self.agreement[-1]) if self.agreement else None,
+            },
+            "margins": self.margins.summary(),
+            "staleness": self.staleness.summary(),
+        }

@@ -1,0 +1,288 @@
+"""Mergeable quantile sketches — bounded-memory percentiles (DESIGN.md §14).
+
+The repo's percentiles used to be computed by hoarding every sample and
+calling `np.percentile` at the end — O(requests) memory that cannot ride
+a production stream. `QuantileSketch` is a DDSketch-style summary
+(Masson, Rim & Lee, VLDB'19): samples land in log-spaced buckets
+
+    key(x) = ceil(log(x) / log(gamma)),   gamma = (1 + a) / (1 - a)
+
+for relative accuracy `a`, and a bucket's representative value
+2*gamma^k / (gamma + 1) (the geometric midpoint of (gamma^(k-1),
+gamma^k]) is within a factor (1 + a) of every sample it holds — so any
+quantile estimate is within RELATIVE error `a` of the exact sample
+statistic, regardless of stream length or value range.
+
+The property that earns the sketch its place in THIS repo is the merge:
+bucket counts are plain integers keyed by an integer index, so merging
+two sketches is bucket-wise integer addition — exactly associative and
+commutative, like the partial popcount counters PR 7 merges up the
+aggregator tree. A sketch of a concatenated stream IS the merge of the
+per-shard sketches (split-invariance), bit-for-bit in the counts, which
+is what lets per-tier latency histograms ride the hierarchy alongside
+the vote counters (sim/hier.py) and per-shard serving telemetry roll up
+without re-deriving anything.
+
+Two operating modes:
+
+  max_buckets=None   exact merge algebra — the bucket dict grows with
+                     the DYNAMIC RANGE of the data (log-many buckets),
+                     never with the sample count. This is the mode the
+                     hypothesis merge-algebra properties run under.
+  max_buckets=B      the fixed-bound streaming counterpart: when the
+                     dict would exceed B buckets the LOWEST keys are
+                     collapsed into the smallest retained bucket
+                     (standard DDSketch collapsing). Upper quantiles —
+                     the p99s SLOs care about — keep their relative-
+                     error guarantee; only the far-left tail degrades.
+                     Resident bytes are then a hard constant bound,
+                     independent of both sample count and range.
+
+min/max/sum/count are tracked exactly, so `quantile(0)`, `quantile(1)`
+and `mean` are exact; interior quantiles follow the rank convention
+r = q*(count-1), returning the bucket holding sorted[floor(r)] — the
+same element `np.percentile(values, 100q, method="lower")` returns,
+which is what the small-N parity tests pin against.
+"""
+from __future__ import annotations
+
+import math
+
+#: Deterministic resident-memory accounting model (bytes): a fixed header
+#: (scalars + dict overhead) plus a per-bucket cost of one boxed int key
+#: and one boxed int count slot. An accounting constant, not
+#: sys.getsizeof — the point is that the TOTAL is a pure function of the
+#: bucket count, so "resident telemetry bytes independent of request
+#: count" is a checkable invariant rather than an allocator artifact.
+FIXED_BYTES = 160
+BUCKET_BYTES = 16
+
+#: Values at or below this magnitude land in the zero bucket (keys for
+#: tiny positives would be huge negative ints for no informational gain).
+ZERO_EPS = 1e-12
+
+
+class QuantileSketch:
+    """DDSketch-style mergeable quantile summary for non-negative values.
+
+    add/merge/quantile/summary; `to_dict`/`from_dict` round-trip through
+    JSON; `resident_bytes()` is the deterministic memory accounting used
+    by the serving telemetry bound.
+    """
+
+    __slots__ = ("rel_acc", "max_buckets", "_gamma", "_log_gamma",
+                 "buckets", "zero_count", "count", "sum", "_min", "_max")
+
+    def __init__(self, rel_acc: float = 0.01, max_buckets: int | None = None):
+        if not 0.0 < rel_acc < 1.0:
+            raise ValueError(f"rel_acc must be in (0, 1); got {rel_acc}")
+        if max_buckets is not None and max_buckets < 2:
+            raise ValueError(f"max_buckets must be >= 2; got {max_buckets}")
+        self.rel_acc = float(rel_acc)
+        self.max_buckets = max_buckets
+        self._gamma = (1.0 + rel_acc) / (1.0 - rel_acc)
+        self._log_gamma = math.log(self._gamma)
+        self.buckets: dict = {}     # int key -> int count
+        self.zero_count = 0
+        self.count = 0
+        self.sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    # -- ingest ---------------------------------------------------------------
+
+    def _key(self, x: float) -> int:
+        return math.ceil(math.log(x) / self._log_gamma)
+
+    def _value(self, key: int) -> float:
+        # geometric midpoint of the bucket (gamma^(k-1), gamma^k]
+        return 2.0 * self._gamma ** key / (self._gamma + 1.0)
+
+    def add(self, x, count: int = 1) -> None:
+        x = float(x)
+        if not math.isfinite(x) or x < 0.0:
+            raise ValueError(f"sketch values must be finite and >= 0; got {x}")
+        if count <= 0:
+            raise ValueError(f"count must be positive; got {count}")
+        if x <= ZERO_EPS:
+            self.zero_count += count
+        else:
+            k = self._key(x)
+            self.buckets[k] = self.buckets.get(k, 0) + count
+            self._collapse()
+        self.count += count
+        self.sum += x * count
+        self._min = min(self._min, x)
+        self._max = max(self._max, x)
+
+    def add_many(self, values) -> None:
+        """Vectorized ingest of an array of values — same result as
+        add() in a loop (bucket keys are computed identically; identical
+        floats land in identical buckets), at numpy speed for the (m,)
+        vote-margin / staleness vectors the health monitor feeds."""
+        import numpy as np
+
+        x = np.asarray(values, dtype=np.float64).ravel()
+        if x.size == 0:
+            return
+        if not np.all(np.isfinite(x)) or np.any(x < 0.0):
+            raise ValueError("sketch values must be finite and >= 0")
+        zero = x <= ZERO_EPS
+        nz = x[~zero]
+        if nz.size:
+            keys = np.ceil(np.log(nz) / self._log_gamma).astype(np.int64)
+            uk, cnt = np.unique(keys, return_counts=True)
+            for k, c in zip(uk.tolist(), cnt.tolist()):
+                self.buckets[k] = self.buckets.get(k, 0) + c
+            self._collapse()
+        self.zero_count += int(zero.sum())
+        self.count += int(x.size)
+        self.sum += float(x.sum())
+        self._min = min(self._min, float(x.min()))
+        self._max = max(self._max, float(x.max()))
+
+    def _collapse(self) -> None:
+        """Fold the lowest keys together until <= max_buckets remain.
+        Collapsing only ever moves counts to a LARGER key among the low
+        buckets, so upper quantiles are untouched."""
+        if self.max_buckets is None:
+            return
+        while len(self.buckets) > self.max_buckets:
+            lo = sorted(self.buckets)
+            k0, k1 = lo[0], lo[1]
+            self.buckets[k1] += self.buckets.pop(k0)
+
+    # -- merge algebra --------------------------------------------------------
+
+    def merge(self, other: "QuantileSketch") -> "QuantileSketch":
+        """Fold `other` into self (bucket-wise integer addition); returns
+        self. Both sketches must share rel_acc — merging across gammas
+        would need bucket re-projection and lose the exactness argument."""
+        if abs(other.rel_acc - self.rel_acc) > 1e-12:
+            raise ValueError(
+                f"cannot merge sketches with different rel_acc "
+                f"({self.rel_acc} vs {other.rel_acc})"
+            )
+        for k, c in other.buckets.items():
+            self.buckets[k] = self.buckets.get(k, 0) + c
+        self.zero_count += other.zero_count
+        self.count += other.count
+        self.sum += other.sum
+        self._min = min(self._min, other._min)
+        self._max = max(self._max, other._max)
+        self._collapse()
+        return self
+
+    def copy(self) -> "QuantileSketch":
+        out = QuantileSketch(self.rel_acc, self.max_buckets)
+        out.buckets = dict(self.buckets)
+        out.zero_count = self.zero_count
+        out.count = self.count
+        out.sum = self.sum
+        out._min = self._min
+        out._max = self._max
+        return out
+
+    # -- read -----------------------------------------------------------------
+
+    @property
+    def min(self) -> float:
+        return self._min if self.count else 0.0
+
+    @property
+    def max(self) -> float:
+        return self._max if self.count else 0.0
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Value within relative error rel_acc of sorted[floor(q*(n-1))]
+        (np.percentile method="lower"). Exact at q<=0 / q>=1 via the
+        tracked min/max; 0.0 on an empty sketch."""
+        if self.count == 0:
+            return 0.0
+        if q <= 0.0:
+            return self._min
+        if q >= 1.0:
+            return self._max
+        rank = q * (self.count - 1)
+        cum = self.zero_count
+        if cum > rank:
+            return 0.0
+        for k in sorted(self.buckets):
+            cum += self.buckets[k]
+            if cum > rank:
+                # clamp into the exact observed range: the representative
+                # of an extreme bucket can overshoot the true min/max
+                return min(max(self._value(k), self._min), self._max)
+        return self._max
+
+    def summary(self) -> dict:
+        """The standard telemetry block: count + exact mean/max + sketch
+        p50/p99, all plain floats (JSON-ready)."""
+        return {
+            "count": int(self.count),
+            "mean": float(self.mean),
+            "p50": float(self.quantile(0.50)),
+            "p99": float(self.quantile(0.99)),
+            "max": float(self.max),
+        }
+
+    def resident_bytes(self) -> int:
+        """Deterministic memory accounting (see FIXED_BYTES/BUCKET_BYTES).
+        Bounded by FIXED_BYTES + BUCKET_BYTES*(max_buckets+1) when
+        max_buckets is set — independent of how many samples were added."""
+        slots = len(self.buckets) + (1 if self.zero_count else 0)
+        return FIXED_BYTES + BUCKET_BYTES * slots
+
+    # -- wire format ----------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-serializable snapshot (bucket keys become strings)."""
+        return {
+            "rel_acc": self.rel_acc,
+            "max_buckets": self.max_buckets,
+            "buckets": {str(k): int(c) for k, c in sorted(self.buckets.items())},
+            "zero_count": int(self.zero_count),
+            "count": int(self.count),
+            "sum": float(self.sum),
+            "min": float(self._min) if self.count else None,
+            "max": float(self._max) if self.count else None,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QuantileSketch":
+        out = cls(d["rel_acc"], d.get("max_buckets"))
+        out.buckets = {int(k): int(c) for k, c in d["buckets"].items()}
+        out.zero_count = int(d["zero_count"])
+        out.count = int(d["count"])
+        out.sum = float(d["sum"])
+        out._min = math.inf if d.get("min") is None else float(d["min"])
+        out._max = -math.inf if d.get("max") is None else float(d["max"])
+        return out
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, QuantileSketch):
+            return NotImplemented
+        return (self.rel_acc == other.rel_acc
+                and self.buckets == other.buckets
+                and self.zero_count == other.zero_count
+                and self.count == other.count)
+
+    def __repr__(self) -> str:
+        return (f"QuantileSketch(rel_acc={self.rel_acc}, count={self.count}, "
+                f"buckets={len(self.buckets)}, p50={self.quantile(0.5):.4g}, "
+                f"p99={self.quantile(0.99):.4g})")
+
+
+def merged(*sketches: QuantileSketch) -> QuantileSketch:
+    """Pure merge of any number of same-rel_acc sketches (copies the
+    first; folds the rest). Convenience for tree rollups."""
+    if not sketches:
+        raise ValueError("merged() needs at least one sketch")
+    out = sketches[0].copy()
+    for s in sketches[1:]:
+        out.merge(s)
+    return out

@@ -1,0 +1,272 @@
+"""SLO objectives, error budgets, and burn-rate gates (DESIGN.md §14).
+
+An `SLOSpec` is a named set of objectives evaluated against live
+telemetry state — the flat scalar dict a tier's `stats()`/report emits
+(threshold objectives) plus a bounded ring of recent timestamped events
+(burn-rate objectives). `evaluate` returns a machine-readable verdict
+that `benchmarks/report.py` embeds in artifacts and CI gates on via this
+module's CLI; `obs.validate_trace.validate_slo_verdict` pins its schema.
+
+Two objective kinds:
+
+  threshold   "metric OP threshold" over a point-in-time scalar, e.g.
+              p99 materialize_ms < 2500 or hit_rate >= 0.25. A missing
+              metric is a BREACH (observed=None) — an SLO that silently
+              passes because nobody emitted the number is worse than a
+              false alarm.
+  burn_rate   SRE error-budget math over trailing windows. Each event is
+              (t_seconds, value); an event is "bad" when value > the
+              per-event threshold. With availability target T the error
+              budget is (1 - T); the burn rate over a window is
+              bad_fraction / (1 - T) — burn 1.0 spends the budget
+              exactly at the sustainable rate, burn B spends it B times
+              too fast. Following the multi-window alerting pattern, the
+              objective breaches only when EVERY configured window
+              exceeds max_burn: the short window proves the problem is
+              current, the long window proves it is not a blip. Empty
+              windows burn 0.
+
+Both kinds degrade to plain dict round-trips (`from_dict`/`to_dict`) so
+specs live in committed JSON (benchmarks/slo_serve.json) and verdicts
+live in BENCH artifacts.
+
+CLI (the CI gate — nonzero exit on breach):
+
+    PYTHONPATH=src python -m repro.obs.slo benchmarks/slo_serve.json \
+        --artifact BENCH_serve.fast.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+_OPS = {
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """Point-in-time threshold objective: `metric OP threshold`."""
+
+    name: str
+    metric: str
+    op: str
+    threshold: float
+
+    def __post_init__(self):
+        if self.op not in _OPS:
+            raise ValueError(f"unknown op {self.op!r}; use one of {sorted(_OPS)}")
+
+    def evaluate(self, state: dict) -> dict:
+        observed = state.get(self.metric)
+        ok = observed is not None and _OPS[self.op](float(observed), self.threshold)
+        return {
+            "name": self.name, "kind": "threshold", "metric": self.metric,
+            "op": self.op, "threshold": float(self.threshold),
+            "observed": None if observed is None else float(observed),
+            "ok": bool(ok),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class BurnRateObjective:
+    """Error-budget burn over trailing windows of (t, value) events.
+
+    target: availability target in (0, 1) — budget is 1 - target.
+    threshold: per-event badness bound (value > threshold is bad).
+    windows_s: trailing window lengths in seconds, all of which must
+    exceed max_burn for a breach (multi-window alerting).
+    """
+
+    name: str
+    metric: str
+    threshold: float
+    target: float
+    windows_s: tuple
+    max_burn: float
+
+    def __post_init__(self):
+        if not 0.0 < self.target < 1.0:
+            raise ValueError(f"target must be in (0, 1); got {self.target}")
+        if not self.windows_s:
+            raise ValueError("burn-rate objective needs at least one window")
+
+    def burn_rates(self, events, now: float) -> list:
+        """Per-window burn rates over `events` = [(t_seconds, value)...]."""
+        budget = 1.0 - self.target
+        rates = []
+        for w in self.windows_s:
+            inside = [v for t, v in events if t >= now - float(w)]
+            if not inside:
+                rates.append(0.0)
+                continue
+            bad = sum(1 for v in inside if v > self.threshold)
+            rates.append((bad / len(inside)) / budget)
+        return rates
+
+    def evaluate(self, events, now: float) -> dict:
+        rates = self.burn_rates(events, now)
+        ok = not all(r > self.max_burn for r in rates)
+        return {
+            "name": self.name, "kind": "burn_rate", "metric": self.metric,
+            "threshold": float(self.threshold), "target": float(self.target),
+            "windows_s": [float(w) for w in self.windows_s],
+            "max_burn": float(self.max_burn),
+            "observed": max(rates),            # worst window
+            "burn_rates": [float(r) for r in rates],
+            "ok": bool(ok),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """A named bundle of objectives — the committed contract CI enforces."""
+
+    name: str
+    objectives: tuple
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SLOSpec":
+        objs = []
+        for o in d["objectives"]:
+            o = dict(o)
+            kind = o.pop("kind", "threshold")
+            if kind == "threshold":
+                objs.append(Objective(**o))
+            elif kind == "burn_rate":
+                o["windows_s"] = tuple(o["windows_s"])
+                objs.append(BurnRateObjective(**o))
+            else:
+                raise ValueError(f"unknown objective kind {kind!r}")
+        return cls(name=d["name"], objectives=tuple(objs))
+
+    @classmethod
+    def load(cls, path) -> "SLOSpec":
+        with open(path) as fh:
+            return cls.from_dict(json.load(fh))
+
+    def to_dict(self) -> dict:
+        out = []
+        for o in self.objectives:
+            d = dataclasses.asdict(o)
+            d["kind"] = "burn_rate" if isinstance(o, BurnRateObjective) else "threshold"
+            if "windows_s" in d:
+                d["windows_s"] = list(d["windows_s"])
+            out.append(d)
+        return {"name": self.name, "objectives": out}
+
+
+def evaluate(spec: SLOSpec, state: dict, events=None, now: float = 0.0) -> dict:
+    """Evaluate every objective; returns the verdict dict whose schema
+    `obs.validate_trace.validate_slo_verdict` pins:
+
+        {"spec", "ok", "objectives": [per-objective dicts], "breaches"}
+
+    state: flat scalar dict for threshold objectives. events/now: the
+    (t, value) ring + current time for burn-rate objectives (an absent
+    ring means empty windows, burn 0 — NOT a breach, matching the
+    empty-window rule)."""
+    results = []
+    for obj in spec.objectives:
+        if isinstance(obj, BurnRateObjective):
+            results.append(obj.evaluate(list(events or ()), now))
+        else:
+            results.append(obj.evaluate(state))
+    breaches = [r["name"] for r in results if not r["ok"]]
+    return {
+        "spec": spec.name,
+        "ok": not breaches,
+        "objectives": results,
+        "breaches": breaches,
+    }
+
+
+# -- CI gate ------------------------------------------------------------------
+
+def evaluate_artifact(spec: SLOSpec, artifact: dict) -> dict:
+    """Re-evaluate `spec` against a BENCH_serve artifact: every stream
+    grid cell must satisfy every threshold objective (cells expose the
+    metric scalars directly), and each cell's STORED burn-rate observeds
+    are re-checked against the spec's max_burn (the raw event ring is
+    not persisted in the artifact — the bench evaluated it live and this
+    re-check keeps the stored verdict honest against the committed
+    spec). Returns a combined verdict with per-cell detail."""
+    grid = artifact.get("stream", {}).get("grid", {})
+    if not grid:
+        raise ValueError("artifact has no stream.grid to evaluate against")
+    cells = {}
+    breaches = []
+    for key in sorted(grid, key=lambda s: int(s)):
+        cell = grid[key]
+        results = []
+        for obj in spec.objectives:
+            if isinstance(obj, BurnRateObjective):
+                stored = _stored_burn(cell, obj.name)
+                ok = stored is None or float(stored) <= obj.max_burn
+                results.append({
+                    "name": obj.name, "kind": "burn_rate",
+                    "metric": obj.metric, "threshold": float(obj.threshold),
+                    "target": float(obj.target),
+                    "windows_s": [float(w) for w in obj.windows_s],
+                    "max_burn": float(obj.max_burn),
+                    "observed": None if stored is None else float(stored),
+                    "ok": bool(ok),
+                })
+            else:
+                results.append(obj.evaluate(cell))
+        bad = [r["name"] for r in results if not r["ok"]]
+        cells[key] = {"ok": not bad, "objectives": results, "breaches": bad}
+        breaches.extend(f"K={key}:{b}" for b in bad)
+    return {
+        "spec": spec.name,
+        "ok": not breaches,
+        "objectives": [r for c in cells.values() for r in c["objectives"]],
+        "breaches": breaches,
+        "cells": {k: c["ok"] for k, c in cells.items()},
+    }
+
+
+def _stored_burn(cell: dict, name: str):
+    for r in cell.get("slo", {}).get("objectives", ()):
+        if r.get("name") == name and r.get("kind") == "burn_rate":
+            return r.get("observed")
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Evaluate a committed SLO spec against a bench "
+                    "artifact; nonzero exit on breach (the CI gate)."
+    )
+    ap.add_argument("spec", help="SLO spec JSON (e.g. benchmarks/slo_serve.json)")
+    ap.add_argument("--artifact", required=True,
+                    help="bench artifact to evaluate (e.g. BENCH_serve.fast.json)")
+    args = ap.parse_args(argv)
+
+    spec = SLOSpec.load(args.spec)
+    with open(args.artifact) as fh:
+        artifact = json.load(fh)
+    verdict = evaluate_artifact(spec, artifact)
+
+    from repro.obs.validate_trace import validate_slo_verdict
+    validate_slo_verdict(verdict)
+
+    status = "OK" if verdict["ok"] else "BREACH"
+    print(f"slo[{spec.name}] {status}: "
+          f"{len(verdict['objectives'])} objectives over "
+          f"{len(verdict['cells'])} cells"
+          + ("" if verdict["ok"] else f" — breaches: {verdict['breaches']}"))
+    if not verdict["ok"]:
+        print(json.dumps(verdict, indent=2, sort_keys=True), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

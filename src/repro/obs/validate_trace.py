@@ -25,9 +25,19 @@ Billing spec kinds (each a dict with "kind"):
              → registry.expected_async_bits.
   "hier":    {m, uplink_events: [[tier, width]...], versions, levels}
              → registry.expected_hier_bits.
+  "serve":   {} — the serving tier moves NO federation bits; its trace
+             still must carry a billing spec so the zero totals are an
+             asserted invariant, not an accident.
+
+Also here (PR 10): `validate_flight` pins the flight-recorder snapshot
+schema (Chrome shape + `flight` ring block, NO billing requirement — a
+bounded ring that evicted events cannot re-derive totals) and
+`validate_slo_verdict` pins the machine-readable SLO verdict that
+benches embed and CI gates on via `python -m repro.obs.slo`.
 
 Runnable as a module for CI:
     PYTHONPATH=src python -m repro.obs.validate_trace TRACE_exp.fast.json
+    PYTHONPATH=src python -m repro.obs.validate_trace --flight FLIGHT_x.json
 """
 from __future__ import annotations
 
@@ -67,12 +77,15 @@ def _expected_for(spec: dict) -> dict:
         return reg.expected_hier_bits(
             spec["m"], spec["uplink_events"], spec["versions"], spec["levels"]
         )
+    if kind == "serve":
+        return {"uplink_bits": 0, "downlink_bits": 0}
     raise ValueError(f"billing spec has unknown kind {spec.get('kind')!r}")
 
 
-def validate_trace(obj: dict) -> dict:
-    """Validate a loaded trace object; returns {"events", "expected"} on
-    success, raises ValueError otherwise."""
+def _check_chrome_shape(obj: dict) -> tuple:
+    """Shared shape gate for TRACE and FLIGHT files: Chrome event
+    structure, monotone wire counters, counterTotals agreement. Returns
+    (events, last counter samples)."""
     if not isinstance(obj, dict):
         raise ValueError("trace must be a JSON object")
     events = obj.get("traceEvents")
@@ -116,6 +129,14 @@ def validate_trace(obj: dict) -> dict:
                 f"counterTotals[{name!r}]={totals.get(name)} disagrees with "
                 f"final counter sample {last[name]}"
             )
+    return events, last
+
+
+def validate_trace(obj: dict) -> dict:
+    """Validate a loaded trace object; returns {"events", "expected"} on
+    success, raises ValueError otherwise."""
+    events, _ = _check_chrome_shape(obj)
+    totals = obj.get("counterTotals", {})
 
     billing = obj.get("billing")
     if not isinstance(billing, list) or not billing:
@@ -130,19 +151,99 @@ def validate_trace(obj: dict) -> dict:
     return {"events": len(events), "expected": expected}
 
 
+_OBJECTIVE_KINDS = frozenset({"threshold", "burn_rate"})
+
+
+def validate_slo_verdict(obj: dict) -> dict:
+    """Schema gate for the machine-readable SLO verdict (obs/slo.py):
+    {"spec", "ok", "objectives": [...], "breaches"} with internally
+    consistent ok/breaches. Returns {"objectives": n} or raises."""
+    if not isinstance(obj, dict):
+        raise ValueError("slo verdict must be a JSON object")
+    if not isinstance(obj.get("spec"), str) or not obj["spec"]:
+        raise ValueError("slo verdict needs a non-empty spec name")
+    if not isinstance(obj.get("ok"), bool):
+        raise ValueError("slo verdict needs a boolean ok")
+    objectives = obj.get("objectives")
+    if not isinstance(objectives, list) or not objectives:
+        raise ValueError("slo verdict needs a non-empty objectives list")
+    bad = []
+    for i, r in enumerate(objectives):
+        if not isinstance(r, dict):
+            raise ValueError(f"objectives[{i}] is not an object")
+        for key in ("name", "kind", "metric", "ok"):
+            if key not in r:
+                raise ValueError(f"objectives[{i}] missing {key!r}")
+        if r["kind"] not in _OBJECTIVE_KINDS:
+            raise ValueError(f"objectives[{i}] has unknown kind {r['kind']!r}")
+        if not isinstance(r["ok"], bool):
+            raise ValueError(f"objectives[{i}].ok must be boolean")
+        if r.get("observed") is not None and not _num(r["observed"]):
+            raise ValueError(f"objectives[{i}].observed must be numeric or null")
+        if not r["ok"]:
+            bad.append(r["name"])
+    breaches = obj.get("breaches")
+    if not isinstance(breaches, list):
+        raise ValueError("slo verdict needs a breaches list")
+    if obj["ok"] != (not breaches):
+        raise ValueError("slo verdict ok flag disagrees with breaches list")
+    # per-cell verdicts prefix breach names with "K=<cell>:" — require
+    # every failing objective to be accounted for in breaches
+    for name in bad:
+        if not any(b == name or b.endswith(f":{name}") for b in breaches):
+            raise ValueError(f"failing objective {name!r} missing from breaches")
+    return {"objectives": len(objectives)}
+
+
+def validate_flight(obj: dict) -> dict:
+    """Schema gate for FLIGHT_*.json snapshots (obs/flight.py): Chrome
+    shape + a `flight` ring block; NO billing requirement. An embedded
+    slo_verdict is validated too. Returns {"events", "dropped"}."""
+    events, _ = _check_chrome_shape(obj)
+    flight = obj.get("flight")
+    if not isinstance(flight, dict):
+        raise ValueError("flight file needs a flight block")
+    if not isinstance(flight.get("reason"), str) or not flight["reason"]:
+        raise ValueError("flight block needs a non-empty reason")
+    cap = flight.get("capacity")
+    if not isinstance(cap, int) or isinstance(cap, bool) or cap < 1:
+        raise ValueError("flight block needs integer capacity >= 1")
+    dropped = flight.get("dropped")
+    if not isinstance(dropped, int) or isinstance(dropped, bool) or dropped < 0:
+        raise ValueError("flight block needs integer dropped >= 0")
+    recorded = sum(1 for ev in events if ev.get("ph") != "M")
+    if recorded > cap:
+        raise ValueError(
+            f"flight file holds {recorded} recorded events but claims "
+            f"capacity {cap}"
+        )
+    if "slo_verdict" in obj:
+        validate_slo_verdict(obj["slo_verdict"])
+    return {"events": len(events), "dropped": dropped}
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if not argv:
-        print("usage: python -m repro.obs.validate_trace TRACE.json [...]",
-              file=sys.stderr)
+        print("usage: python -m repro.obs.validate_trace "
+              "[--flight] TRACE.json [...]", file=sys.stderr)
         return 2
+    as_flight = False
     for path in argv:
+        if path == "--flight":
+            as_flight = True        # remaining paths are flight snapshots
+            continue
         with open(path) as fh:
             obj = json.load(fh)
-        info = validate_trace(obj)
-        print(f"{path}: OK ({info['events']} events, "
-              f"uplink={info['expected']['uplink_bits']} "
-              f"downlink={info['expected']['downlink_bits']})")
+        if as_flight:
+            info = validate_flight(obj)
+            print(f"{path}: OK (flight, {info['events']} events, "
+                  f"dropped={info['dropped']})")
+        else:
+            info = validate_trace(obj)
+            print(f"{path}: OK ({info['events']} events, "
+                  f"uplink={info['expected']['uplink_bits']} "
+                  f"downlink={info['expected']['downlink_bits']})")
     return 0
 
 

@@ -25,8 +25,17 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ArchConfig
+from repro.obs import hist as obshist
 from repro.obs import registry as obsreg
 from repro.obs import trace as obstrace
+
+#: Telemetry memory knobs: the materialize-latency sketch is bounded to
+#: this many buckets, and the burn-rate ring keeps this many recent
+#: (t, ms) events — together the engine's telemetry footprint is a hard
+#: constant, independent of how many requests it has served (asserted in
+#: tests/test_serve.py).
+SKETCH_MAX_BUCKETS = 128
+SLO_RING_EVENTS = 256
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,13 +100,22 @@ class ServeEngine:
         self.registry = obsreg.MetricsRegistry(tracer=self.tracer)
         self.lru = ModelLRU(cfg.hot_models)
         self._pending = []
-        self.mat_seconds = []       # per materialize-call wall time
-        self.mat_batches = []       # misses decoded by that call
+        # bounded telemetry (DESIGN.md §14): materialize wall-times go
+        # into a mergeable quantile sketch (milliseconds) instead of an
+        # unbounded list, plus a fixed ring of recent (t, ms) events for
+        # SLO burn-rate windows — resident bytes are independent of the
+        # request count
+        self.mat_ms = obshist.QuantileSketch(
+            rel_acc=0.01, max_buckets=SKETCH_MAX_BUCKETS
+        )
+        self.mat_recent = collections.deque(maxlen=SLO_RING_EVENTS)
+        self.mat_total_s = 0.0
         self.req_hits = 0           # per-REQUEST counters (a group of 4
         self.req_misses = 0         # requests for one cold client is 4
         #                             misses; ModelLRU counts unique ids)
         self.decode_seconds = 0.0
         self.tokens_generated = 0
+        self._t_start = time.perf_counter()
 
         def one_step(params, token, cache, pos):
             logits, cache = lm.decode_step(arch, params, token, cache, pos)
@@ -159,8 +177,11 @@ class ServeEngine:
                                   misses=len(misses)):
                 stacked = self.store.materialize(padded)
                 jax.block_until_ready(stacked)
-            self.mat_seconds.append(time.perf_counter() - t0)
-            self.mat_batches.append(len(misses))
+            t1 = time.perf_counter()
+            ms = (t1 - t0) * 1e3
+            self.mat_ms.add(ms)
+            self.mat_recent.append((t1 - self._t_start, ms))
+            self.mat_total_s += t1 - t0
             for i, c in enumerate(misses):
                 p = jax.tree.map(lambda a: a[i], stacked)
                 cached[c] = p
@@ -213,27 +234,53 @@ class ServeEngine:
     # -- stats -----------------------------------------------------------------
 
     def stats(self) -> dict:
-        mat = np.asarray(self.mat_seconds) if self.mat_seconds else np.zeros(1)
+        """Point-in-time serving telemetry. Percentiles come from the
+        mergeable materialize sketch (relative error <= its rel_acc);
+        telemetry_bytes is the deterministic resident footprint of the
+        sketch + burn ring — bounded regardless of request count."""
         return {
             "requests_hit": self.req_hits,
             "requests_miss": self.req_misses,
             "lru_hits": self.lru.hits,
             "lru_misses": self.lru.misses,
             "hit_rate": self.req_hits / max(self.req_hits + self.req_misses, 1),
-            "materialize_calls": len(self.mat_seconds),
-            "materialize_p50_ms": float(np.percentile(mat, 50) * 1e3),
-            "materialize_p99_ms": float(np.percentile(mat, 99) * 1e3),
-            "materialize_total_s": float(mat.sum()) if self.mat_seconds else 0.0,
+            "materialize_calls": int(self.mat_ms.count),
+            "materialize_p50_ms": self.mat_ms.quantile(0.50),
+            "materialize_p99_ms": self.mat_ms.quantile(0.99),
+            "materialize_max_ms": self.mat_ms.max,
+            "materialize_total_s": self.mat_total_s,
+            "telemetry_bytes": self.telemetry_bytes(),
             "decode_s": self.decode_seconds,
             "tokens_generated": self.tokens_generated,
             "tokens_per_sec": self.tokens_generated
             / max(self.decode_seconds, 1e-9),
         }
 
+    def telemetry_bytes(self) -> int:
+        """Resident telemetry accounting: sketch buckets + the bounded
+        burn-rate ring (one slot per retained (t, ms) pair). A pure
+        function of bounded structure sizes — never of request count."""
+        return (self.mat_ms.resident_bytes()
+                + obshist.BUCKET_BYTES * len(self.mat_recent))
+
+    def slo_events(self) -> list:
+        """Recent (t_seconds, materialize_ms) events for burn-rate
+        windows, t on the engine's own clock (0 = construction)."""
+        return list(self.mat_recent)
+
+    @property
+    def now(self) -> float:
+        """Engine-clock time in seconds, the domain of slo_events()."""
+        return time.perf_counter() - self._t_start
+
     def reset_stats(self) -> None:
         self.lru.hits = self.lru.misses = 0
         self.req_hits = self.req_misses = 0
-        self.mat_seconds, self.mat_batches = [], []
+        self.mat_ms = obshist.QuantileSketch(
+            rel_acc=0.01, max_buckets=SKETCH_MAX_BUCKETS
+        )
+        self.mat_recent = collections.deque(maxlen=SLO_RING_EVENTS)
+        self.mat_total_s = 0.0
         self.decode_seconds = 0.0
         self.tokens_generated = 0
         self.registry = obsreg.MetricsRegistry(tracer=self.tracer)

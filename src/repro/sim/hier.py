@@ -40,6 +40,14 @@ one m-bit broadcast per tier level — the hierarchical analogue of the
 flat tier's accumulate_round_bits re-invoice. With full fan-in buffers a
 version's total equals HierTopology.round_bits(m) exactly.
 
+Telemetry rides the tree (PR 10): each upload's latency draw enters its
+leaf's mergeable QuantileSketch (obs/hist.py) and the sketch merges
+upward with the partial counter — bucket sums next to popcount sums.
+Because the sketch merge is exactly associative, the root's per-version
+sketch holds exactly `arrivals` samples (asserted at every finish, the
+histogram analogue of check_billing) and equals the sketch a flat server
+would have built, however eager buffers batched the messages.
+
 Defended votes are OUT of this tier by design: trimming needs the global
 disagreement ranking, which only the root has — run defense through the
 synchronous hier_round (where the root holds it) or the flat async tier.
@@ -56,6 +64,7 @@ import numpy as np
 from repro.core import rounds
 from repro.fl import comms
 from repro.kernels import ops as kops
+from repro.obs import hist as obshist
 from repro.obs import registry as obsreg
 from repro.obs import trace as obstrace
 from repro.sim.clock import ConstantLatency, EventQueue, LatencyModel
@@ -130,6 +139,9 @@ class HierFlushRecord:
     arrivals: int         # client uploads counted into this version
     counter_messages: int  # aggregator->parent messages this version paid
     task_loss: float
+    lat: object = None    # root-merged client-latency QuantileSketch —
+    #                       rode the tree alongside the counters; its
+    #                       count == arrivals is asserted at every finish
 
 
 @dataclasses.dataclass
@@ -169,6 +181,17 @@ class HierSimReport:
                "downlink_bits": self.meter.downlink_bits}
         obsreg.assert_billing("hier meter", got, self.expected_bits())
 
+    def latency_sketch(self) -> obshist.QuantileSketch:
+        """All versions' root-merged client-latency sketches, merged once
+        more — the run-level staleness/latency distribution. Because the
+        sketch merge is exactly associative this equals a sketch built
+        flat from every latency draw, however the tree batched them
+        (asserted per version in the event loop, like check_billing)."""
+        per_version = [f.lat for f in self.flushes if f.lat is not None]
+        if not per_version:
+            return obshist.QuantileSketch(rel_acc=0.01)
+        return obshist.merged(*per_version)
+
     def to_dict(self) -> dict:
         return {
             "m": self.m,
@@ -182,11 +205,15 @@ class HierSimReport:
             "downlink_bits": self.meter.downlink_bits,
             "total_bits": self.meter.total_bits,
             "task_loss_curve": [f.task_loss for f in self.flushes],
+            "client_latency": self.latency_sketch().summary(),
         }
 
 
 class _Node:
-    """One aggregator's per-version accumulation state."""
+    """One aggregator's per-version accumulation state. The pending
+    buffer holds a partial popcount counter AND a latency sketch — both
+    merge exactly (integer sums / bucket sums), so histograms ride the
+    tree with the votes at zero extra coordination."""
 
     def __init__(self, width: int, expected_rows: int, nw: int):
         self.width = width                # clients covered (wire format size)
@@ -195,20 +222,24 @@ class _Node:
         self.pending_counts = jnp.zeros((nw, 32), jnp.int32)
         self.pending_rows = 0             # rows in the pending buffer
         self.pending_msgs = 0             # contributions since last forward
+        self.pending_lat = obshist.QuantileSketch(rel_acc=0.01)
 
-    def absorb(self, counts, nrows: int) -> None:
+    def absorb(self, counts, nrows: int, lat=None) -> None:
         self.pending_counts = kops.merge_counters(
             jnp.stack([self.pending_counts, counts])
         )
         self.pending_rows += nrows
         self.pending_msgs += 1
         self.received += nrows
+        if lat is not None:
+            self.pending_lat.merge(lat)
 
     def take_pending(self):
-        out = (self.pending_counts, self.pending_rows)
+        out = (self.pending_counts, self.pending_rows, self.pending_lat)
         self.pending_counts = jnp.zeros_like(self.pending_counts)
         self.pending_rows = 0
         self.pending_msgs = 0
+        self.pending_lat = obshist.QuantileSketch(rel_acc=0.01)
         return out
 
 
@@ -324,13 +355,14 @@ class HierAsyncSimulator:
                 c = int(np.asarray(idx)[row])
                 delay = cfg.client_latency.duration(cfg.seed, c, ver)
                 queue.push(t_now + delay, "arrival", c,
-                           payload=(ver, row, int(self._leaf_of[row])))
+                           payload=(ver, row, int(self._leaf_of[row]),
+                                    float(delay)))
 
         def forward(t_now: float, ver: int, level: int, i: int) -> None:
             """Send a node's pending (counts, rows) one hop up."""
             nonlocal counter_msgs
             node = nodes[(level, i)]
-            counts, nrows = node.take_pending()
+            counts, nrows, lat = node.take_pending()
             counter_msgs += 1
             meter.bill_uplink(t_now, level + 1, node.width)
             registry.add("tier_merges", 1, t=t_now)
@@ -341,13 +373,13 @@ class HierAsyncSimulator:
             )
             queue.push(t_now + delay, "merge", i,
                        payload=(ver, level + 1, parent(level, i)[1],
-                                counts, nrows))
+                                counts, nrows, lat))
 
-        def node_absorb(t_now, ver, level, i, counts, nrows, st):
+        def node_absorb(t_now, ver, level, i, counts, nrows, st, lat=None):
             """Merge a contribution into node (level, i); forward on a full
             subtree (or a full eager buffer); finish at the root."""
             node = nodes[(level, i)]
-            node.absorb(counts, nrows)
+            node.absorb(counts, nrows, lat=lat)
             if level == n_levels - 1:         # the root
                 if node.received >= node.expected:
                     return finish(t_now, ver, st)
@@ -364,7 +396,7 @@ class HierAsyncSimulator:
             nonlocal version, last_finish_t
             entry = staged.pop(ver)
             root = nodes[(n_levels - 1, 0)]
-            counts, k = root.take_pending()
+            counts, k, lat = root.take_pending()
             vw = kops.finish_vote_counts(counts, jnp.int32(k))
             v_new = kops.unpack_signs(vw)[: eng.m]
             idx, active = entry["idx"], entry["active"]
@@ -389,10 +421,19 @@ class HierAsyncSimulator:
             tr.instant("broadcast", t=t_now, track="server", version=version,
                        levels=n_levels)
             registry.add("votes_cast", arrivals, t=t_now)
+            # histogram-merge invariant, the latency analogue of
+            # check_billing: every counted row contributed exactly one
+            # latency sample at its leaf, and the sketch merge is exact,
+            # so the root sketch must hold exactly `arrivals` samples
+            if lat.count != arrivals:
+                raise ValueError(
+                    f"latency sketch lost samples riding the tree: root "
+                    f"count {lat.count} != arrivals {arrivals}"
+                )
             report.flushes.append(HierFlushRecord(
                 version=version, t=t_now,
                 arrivals=arrivals,
-                counter_messages=counter_msgs, task_loss=task,
+                counter_messages=counter_msgs, task_loss=task, lat=lat,
             ))
             st = st._replace(clients=clients, v=v_new,
                              round=st.round + 1, ef=new_ef)
@@ -407,7 +448,7 @@ class HierAsyncSimulator:
             ev = queue.pop()
             t = ev.t
             if ev.kind == "arrival":
-                ver, row, leaf = ev.payload
+                ver, row, leaf, delay = ev.payload
                 meter.bill_uplink(t, 0, 1)
                 tr.instant("arrive", t=t, track="server", client=ev.client,
                            version=ver, leaf=leaf)
@@ -418,9 +459,15 @@ class HierAsyncSimulator:
                 counts = kops.popcount_partial(
                     staged[ver]["packed"][row : row + 1]
                 )
-                state = node_absorb(t, ver, 0, leaf, counts, 1, state)
+                # the upload's latency enters the leaf's sketch here and
+                # merges upward with the counter from now on
+                one = obshist.QuantileSketch(rel_acc=0.01)
+                one.add(delay)
+                state = node_absorb(t, ver, 0, leaf, counts, 1, state,
+                                    lat=one)
             else:
-                ver, level, i, counts, nrows = ev.payload
-                state = node_absorb(t, ver, level, i, counts, nrows, state)
+                ver, level, i, counts, nrows, lat = ev.payload
+                state = node_absorb(t, ver, level, i, counts, nrows, state,
+                                    lat=lat)
         report.check_billing()
         return state, report

@@ -20,9 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from repro.fl import comms
+from repro.obs import hist as obshist
 from repro.obs import registry as obsreg
 
 
@@ -224,10 +223,20 @@ def validate_async_artifact(obj: dict) -> None:
 
 
 def summarize_lags(taus: list[int]) -> dict:
-    taus = np.asarray(taus if taus else [0], np.float64)
-    return {
-        "mean": float(taus.mean()),
-        "p50": float(np.percentile(taus, 50)),
-        "p99": float(np.percentile(taus, 99)),
-        "max": float(taus.max()),
-    }
+    """Staleness-lag summary via the mergeable quantile sketch
+    (obs/hist.py) — same summary block the serving tier and health
+    monitor emit. Percentiles are sketch-derived (relative error <= 1%;
+    lags are small integers, so in practice they are the exact
+    sorted[floor(q*(n-1))] order statistic); mean/max exact."""
+    sk = lag_sketch(taus)
+    s = sk.summary()
+    return {"mean": s["mean"], "p50": s["p50"], "p99": s["p99"], "max": s["max"]}
+
+
+def lag_sketch(taus) -> obshist.QuantileSketch:
+    """The staleness distribution as a mergeable sketch — per-shard lag
+    sketches merge exactly (split-invariance), like the vote counters."""
+    sk = obshist.QuantileSketch(rel_acc=0.01)
+    for tau in (taus if len(taus) else [0]):
+        sk.add(float(tau))
+    return sk

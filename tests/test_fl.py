@@ -44,7 +44,10 @@ def _run_pfed1bs(data, loss_fn, init_fn, rounds=12, participate=6):
         kb, kr = jax.random.split(jax.random.fold_in(jax.random.key(3), r))
         batches = ds.sample_round_batches(kb, data, cfg.local_steps, 24)
         state, m = eng.round(state, batches, data.weights, kr)
-        hist.append({k: float(v) for k, v in m.items()})
+        # per-coordinate vote_margins is a vector diagnostic for the
+        # health monitor — history keeps the scalar metrics
+        assert m["vote_margins"].shape == (eng.m,)
+        hist.append({k: float(v) for k, v in m.items() if np.ndim(v) == 0})
     return eng, state, hist
 
 

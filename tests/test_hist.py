@@ -1,0 +1,227 @@
+"""Mergeable quantile sketch tests (obs/hist.py, DESIGN.md §14).
+
+Two layers, mirroring tests/test_hier.py's counter-merge suite:
+
+  * Pinned parity: at small N the sketch quantile is within the
+    configured relative accuracy of the EXACT sample statistic
+    np.percentile(values, 100q, method="lower") — the convention the
+    sketch's rank rule targets — and min/max/mean/count are exact.
+  * Property sweep (hypothesis, when installed): the merge is
+    associative, commutative, and invariant to HOW a stream is split
+    into shards (merge of per-shard sketches == one sketch of the whole
+    stream, bucket-for-bucket via __eq__) — the algebra that lets
+    latency histograms ride the aggregation tree next to the vote
+    counters. Plus the relative-error bound itself as a property.
+
+The bounded variant (max_buckets) is pinned separately: resident bytes
+obey the hard cap regardless of sample count/range, and collapsing only
+the LOW buckets leaves upper quantiles accurate.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs import hist
+from repro.obs.hist import QuantileSketch, merged
+from tests._hypothesis_shim import given, settings, hst
+
+
+def _exact(values, q):
+    return float(np.percentile(np.asarray(values, np.float64), 100.0 * q,
+                               method="lower"))
+
+
+def _rel_err(got, want):
+    return abs(got - want) / abs(want) if want != 0 else abs(got)
+
+
+# ---------------------------------------------------------------------------
+# pinned small-N parity with np.percentile
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("rel_acc", [0.01, 0.05])
+def test_quantiles_match_percentile_within_rel_acc(seed, rel_acc):
+    rng = np.random.default_rng(seed)
+    values = rng.lognormal(mean=2.0, sigma=1.5, size=200)
+    sk = QuantileSketch(rel_acc=rel_acc)
+    for v in values:
+        sk.add(v)
+    for q in (0.0, 0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+        assert _rel_err(sk.quantile(q), _exact(values, q)) <= rel_acc, q
+    assert sk.count == 200
+    assert sk.min == values.min() and sk.max == values.max()
+    assert np.isclose(sk.mean, values.mean())
+
+
+def test_exact_extremes_and_empty():
+    sk = QuantileSketch(0.01)
+    assert sk.quantile(0.5) == 0.0 and sk.count == 0       # empty -> 0
+    sk.add(3.0)
+    sk.add(7.0)
+    assert sk.quantile(0.0) == 3.0 and sk.quantile(1.0) == 7.0
+
+
+def test_zero_and_tiny_values_land_in_zero_bucket():
+    sk = QuantileSketch(0.01)
+    for v in (0.0, hist.ZERO_EPS / 2, 5.0):
+        sk.add(v)
+    assert sk.zero_count == 2
+    assert sk.quantile(0.0) == 0.0
+    assert sk.quantile(1.0) == 5.0
+
+
+def test_rejects_invalid_input():
+    sk = QuantileSketch(0.01)
+    with pytest.raises(ValueError):
+        sk.add(-1.0)
+    with pytest.raises(ValueError):
+        sk.add(float("nan"))
+    with pytest.raises(ValueError):
+        sk.add(1.0, count=0)
+    with pytest.raises(ValueError):
+        QuantileSketch(rel_acc=1.5)
+    with pytest.raises(ValueError):
+        QuantileSketch(0.01, max_buckets=1)
+    with pytest.raises(ValueError):
+        sk.add_many([1.0, -2.0])
+
+
+def test_merge_rejects_mismatched_rel_acc():
+    with pytest.raises(ValueError, match="rel_acc"):
+        QuantileSketch(0.01).merge(QuantileSketch(0.05))
+
+
+def test_add_many_equals_add_loop():
+    rng = np.random.default_rng(7)
+    values = np.concatenate([rng.exponential(10.0, 300), np.zeros(5)])
+    a, b = QuantileSketch(0.02), QuantileSketch(0.02)
+    a.add_many(values)
+    for v in values:
+        b.add(v)
+    assert a == b and a.count == b.count and np.isclose(a.sum, b.sum)
+
+
+def test_serialization_roundtrip_exact():
+    rng = np.random.default_rng(3)
+    sk = QuantileSketch(0.01, max_buckets=64)
+    sk.add_many(rng.lognormal(0.0, 2.0, 500))
+    back = QuantileSketch.from_dict(sk.to_dict())
+    assert back == sk
+    assert back.max_buckets == sk.max_buckets
+    assert back.quantile(0.99) == sk.quantile(0.99)
+    assert back.min == sk.min and back.max == sk.max
+    # and through actual JSON text
+    import json
+
+    again = QuantileSketch.from_dict(json.loads(json.dumps(sk.to_dict())))
+    assert again == sk
+
+
+# ---------------------------------------------------------------------------
+# bounded variant: hard memory cap, upper quantiles survive collapsing
+# ---------------------------------------------------------------------------
+
+def test_bounded_sketch_resident_bytes_capped():
+    cap = 32
+    sk = QuantileSketch(0.01, max_buckets=cap)
+    rng = np.random.default_rng(0)
+    for n in (10, 1000, 100_000):
+        sk.add_many(rng.lognormal(0.0, 3.0, n))   # huge dynamic range
+        assert len(sk.buckets) <= cap
+        assert sk.resident_bytes() <= (
+            hist.FIXED_BYTES + hist.BUCKET_BYTES * (cap + 1)
+        )
+    assert sk.count == 101_010
+
+
+def test_bounded_collapse_preserves_upper_quantiles():
+    rng = np.random.default_rng(1)
+    values = rng.lognormal(mean=0.0, sigma=2.0, size=2000)
+    unbounded = QuantileSketch(0.01)
+    bounded = QuantileSketch(0.01, max_buckets=32)
+    unbounded.add_many(values)
+    bounded.add_many(values)
+    # collapsing folds the LOWEST keys, so the quantiles living in the top
+    # 31 retained buckets — here the p99 (top 1% = 20 samples spread over
+    # at most 20 keys) and the max — keep the full accuracy guarantee; the
+    # left tail is what degrades, never the p99 the SLOs gate on
+    for q in (0.99, 1.0):
+        assert _rel_err(bounded.quantile(q), _exact(values, q)) <= 0.01, q
+    assert bounded.quantile(0.99) == unbounded.quantile(0.99)
+    # and the left tail really did collapse upward (lossy by design)
+    assert bounded.quantile(0.1) > unbounded.quantile(0.1)
+
+
+# ---------------------------------------------------------------------------
+# property sweep: merge algebra (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _sketch_of(values):
+    sk = QuantileSketch(0.01)
+    sk.add_many(np.asarray(values, np.float64))
+    return sk
+
+
+_values = hst.lists(
+    hst.floats(min_value=0.0, max_value=1e9, allow_nan=False,
+               allow_infinity=False),
+    min_size=0, max_size=60,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(_values, _values, _values)
+def test_merge_associative_commutative(xs, ys, zs):
+    a, b, c = _sketch_of(xs), _sketch_of(ys), _sketch_of(zs)
+    ab_c = merged(merged(a, b), c)
+    a_bc = merged(a, merged(b, c))
+    assert ab_c == a_bc                                    # associative
+    assert merged(a, b) == merged(b, a)                    # commutative
+    assert ab_c.count == len(xs) + len(ys) + len(zs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(hst.integers(0, 2 ** 31), hst.integers(1, 200),
+       hst.lists(hst.integers(0, 200), max_size=6))
+def test_split_invariance(seed, n, cuts):
+    """Sketching shards then merging == sketching the whole stream,
+    bucket-for-bucket — no matter where the stream is cut."""
+    rng = np.random.default_rng(seed)
+    values = rng.lognormal(0.0, 1.5, n)
+    bounds = sorted({min(c, n) for c in cuts} | {0, n})
+    shards = [values[lo:hi] for lo, hi in zip(bounds, bounds[1:])]
+    whole = _sketch_of(values)
+    parts = merged(*[_sketch_of(s) for s in shards]) if shards else whole
+    assert parts == whole
+    assert parts.quantile(0.99) == whole.quantile(0.99)
+
+
+@settings(max_examples=40, deadline=None)
+@given(hst.lists(hst.floats(min_value=1e-6, max_value=1e6, allow_nan=False,
+                            allow_infinity=False),
+                 min_size=1, max_size=80),
+       hst.floats(min_value=0.0, max_value=1.0))
+def test_quantile_relative_error_bound(values, q):
+    sk = _sketch_of(values)
+    assert _rel_err(sk.quantile(q), _exact(values, q)) <= sk.rel_acc + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# representative geometry (the DDSketch accuracy argument in one test)
+# ---------------------------------------------------------------------------
+
+def test_bucket_representative_within_rel_acc_of_any_member():
+    sk = QuantileSketch(0.05)
+    for x in (0.001, 0.7, 1.0, 33.0, 1e6):
+        k = sk._key(x)
+        rep = sk._value(k)
+        assert abs(rep - x) <= sk.rel_acc * x * (1 + 1e-9), x
+        # and the bucket really contains x: gamma^(k-1) < x <= gamma^k
+        assert sk._gamma ** (k - 1) < x <= sk._gamma ** k * (1 + 1e-12)
+
+
+def test_gamma_matches_rel_acc():
+    sk = QuantileSketch(0.03)
+    assert math.isclose(sk._gamma, 1.03 / 0.97)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.checkpoint import ckpt
 from repro.core import flatten
 from repro.core import sketch as sk
+from repro.obs import hist
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.models import smallnets as sn
@@ -312,6 +313,89 @@ def test_engine_batches_misses_and_caches_hits():
     assert s["requests_miss"] == 5
     assert s["requests_hit"] == 1
     assert s["tokens_generated"] == 6 * cfg.gen_len
+
+
+def test_engine_telemetry_bytes_bounded_and_sketch_stats():
+    """PR 10 acceptance: stream telemetry memory must be independent of
+    request count (sketch + bounded burn ring, never a per-request list),
+    and the reported p50/p99 must come from the mergeable sketch — within
+    its relative accuracy of the exact per-call percentiles."""
+    from repro.models import lm
+    from repro.serve import engine as eng_mod
+
+    arch = _tiny_arch()
+    base = lm.init_params(arch, jax.random.key(0))
+    k = 8
+    sspec = st.make_store_spec(base, k, m_ratio=0.25, chunk=1024)
+    store = st.SketchStore(sspec, base)
+    cfg = EngineConfig(prompt_len=2, gen_len=1, max_batch=2, hot_models=1)
+    engine = ServeEngine(arch, store, cfg)
+    prompts = router.random_prompts(3, 1, cfg.prompt_len, arch.vocab)
+
+    hard_cap = (
+        hist.FIXED_BYTES
+        + hist.BUCKET_BYTES * (eng_mod.SKETCH_MAX_BUCKETS + 1)
+        + hist.BUCKET_BYTES * eng_mod.SLO_RING_EVENTS
+    )
+    for i in range(24):                          # round-robin cold clients:
+        engine.submit(i % k, prompts[0])         # hot_models=1 -> all miss
+    engine.flush()
+    s = engine.stats()
+    assert s["materialize_calls"] >= 12
+    assert s["telemetry_bytes"] == engine.telemetry_bytes() <= hard_cap
+
+    # sketch-derived percentiles within rel_acc of the exact sample stats
+    # (re-derive the exact stream from the engine's own burn ring, which
+    # retains every event here: calls < SLO_RING_EVENTS)
+    events = engine.slo_events()
+    assert len(events) == s["materialize_calls"]
+    exact_ms = np.asarray([ms for _, ms in events])
+    for q, key in ((0.50, "materialize_p50_ms"), (0.99, "materialize_p99_ms")):
+        want = float(np.percentile(exact_ms, q * 100, method="lower"))
+        assert abs(s[key] - want) <= engine.mat_ms.rel_acc * want + 1e-9
+    assert s["materialize_max_ms"] == exact_ms.max()
+
+    # now pump 10k more samples through the SAME structures the serving
+    # path feeds (sketch + burn ring): the footprint must saturate at the
+    # hard cap — resident bytes a function of bounded structure sizes,
+    # never of how many requests went through
+    rng = np.random.default_rng(0)
+    sizes = []
+    for chunk in range(4):
+        for ms in rng.lognormal(2.0, 1.0, 2500):
+            engine.mat_ms.add(ms)
+            engine.mat_recent.append((engine.now, ms))
+        sizes.append(engine.telemetry_bytes())
+        assert sizes[-1] <= hard_cap
+    assert sizes[-1] == sizes[-2]                # flat after saturation
+    assert len(engine.mat_recent) == eng_mod.SLO_RING_EVENTS
+    assert len(engine.mat_ms.buckets) <= eng_mod.SKETCH_MAX_BUCKETS
+
+
+def test_stream_report_carries_sketch_and_telemetry():
+    """router.run_stream must surface the sketch-derived percentiles, the
+    serialized sketch itself (mergeable downstream), and the bounded
+    telemetry footprint."""
+    from repro.models import lm
+
+    arch = _tiny_arch()
+    base = lm.init_params(arch, jax.random.key(0))
+    store = st.DenseStore(4, base)
+    store.put_batch(
+        np.arange(4),
+        jax.tree.map(lambda a: jnp.stack([a] * 4), base),
+    )
+    cfg = EngineConfig(prompt_len=2, gen_len=1, max_batch=2, hot_models=2)
+    engine = ServeEngine(arch, store, cfg)
+    cids = router.zipf_stream(0, 4, 6, alpha=1.1)
+    prompts = router.random_prompts(1, 6, cfg.prompt_len, arch.vocab)
+    rep = router.run_stream(engine, cids, prompts, zipf_alpha=1.1, warm=False)
+    d = rep.to_dict()
+    assert d["telemetry_bytes"] == engine.telemetry_bytes() > 0
+    assert d["materialize_max_ms"] >= d["materialize_p99_ms"] >= 0.0
+    back = hist.QuantileSketch.from_dict(rep.mat_sketch)
+    assert back == engine.mat_ms
+    assert back.quantile(0.99) == engine.mat_ms.quantile(0.99)
 
 
 # ---------------------------------------------------------------------------

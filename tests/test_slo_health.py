@@ -1,0 +1,362 @@
+"""SLO gates, federation health monitor, and flight recorder tests
+(obs/slo.py, obs/health.py, obs/flight.py — DESIGN.md §14).
+
+Covers the acceptance chain end to end at unit scale: objective math
+(threshold + burn-rate windows), spec JSON round-trips, verdict schema
+(validate_slo_verdict), the artifact-level CI gate's nonzero exit on
+breach, health state transitions (warming/converging/plateau/diverging),
+and the bounded flight ring whose breach snapshot must validate as a
+FLIGHT_*.json.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import slo as obsslo
+from repro.obs.flight import _Ring
+from repro.obs.health import HealthConfig, HealthMonitor
+
+
+# ---------------------------------------------------------------------------
+# threshold objectives
+# ---------------------------------------------------------------------------
+
+def test_threshold_objective_pass_and_breach():
+    obj = obsslo.Objective("p99", "materialize_p99_ms", "<", 100.0)
+    ok = obj.evaluate({"materialize_p99_ms": 42.0})
+    assert ok["ok"] and ok["observed"] == 42.0
+    bad = obj.evaluate({"materialize_p99_ms": 150.0})
+    assert not bad["ok"]
+
+
+def test_threshold_missing_metric_is_breach():
+    """An SLO that silently passes because nobody emitted the metric is
+    worse than a false alarm."""
+    obj = obsslo.Objective("hit", "hit_rate", ">=", 0.2)
+    r = obj.evaluate({})
+    assert not r["ok"] and r["observed"] is None
+
+
+def test_threshold_rejects_unknown_op():
+    with pytest.raises(ValueError, match="unknown op"):
+        obsslo.Objective("x", "m", "!=", 1.0)
+
+
+# ---------------------------------------------------------------------------
+# burn-rate objectives
+# ---------------------------------------------------------------------------
+
+def _burn(windows=(10.0, 100.0), max_burn=2.0, target=0.9, threshold=5.0):
+    return obsslo.BurnRateObjective(
+        "burn", "lat_ms", threshold=threshold, target=target,
+        windows_s=tuple(windows), max_burn=max_burn,
+    )
+
+
+def test_burn_rate_math():
+    """bad_fraction / (1 - target): 2 bad of 4 events at target 0.9 is
+    0.5 / 0.1 = burn 5."""
+    obj = _burn(windows=(100.0,))
+    events = [(1.0, 1.0), (2.0, 9.0), (3.0, 1.0), (4.0, 9.0)]
+    assert obj.burn_rates(events, now=5.0) == [pytest.approx(5.0)]
+
+
+def test_burn_rate_window_filters_old_events():
+    obj = _burn(windows=(10.0,))
+    # the only bad event is 50s old — outside the 10s window
+    events = [(0.0, 99.0), (55.0, 1.0), (58.0, 1.0)]
+    assert obj.burn_rates(events, now=60.0) == [0.0]
+
+
+def test_burn_rate_empty_window_burns_zero():
+    obj = _burn()
+    r = obj.evaluate([], now=0.0)
+    assert r["ok"] and r["observed"] == 0.0
+
+
+def test_burn_rate_breach_needs_every_window():
+    """Multi-window alerting: the short window proves the problem is
+    current, the long one that it is not a blip — a breach needs both."""
+    obj = _burn(windows=(10.0, 1000.0), max_burn=2.0)
+    # all-bad burst in the last 10s, but 100 old good events dilute the
+    # long window below max_burn -> NOT a breach
+    events = [(float(t), 1.0) for t in range(100)] + \
+             [(995.0 + i, 9.0) for i in range(5)]
+    r = obj.evaluate(events, now=1000.0)
+    rates = r["burn_rates"]
+    assert rates[0] > 2.0 and rates[1] < 2.0
+    assert r["ok"]
+    # sustained badness: both windows over -> breach
+    bad = [(990.0 + i, 9.0) for i in range(10)]
+    assert not obj.evaluate(bad, now=1000.0)["ok"]
+
+
+def test_burn_rate_validates_config():
+    with pytest.raises(ValueError, match="target"):
+        _burn(target=1.5)
+    with pytest.raises(ValueError, match="window"):
+        _burn(windows=())
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip + verdict schema
+# ---------------------------------------------------------------------------
+
+def _spec():
+    return obsslo.SLOSpec.from_dict({
+        "name": "t",
+        "objectives": [
+            {"kind": "threshold", "name": "p99", "metric": "p99_ms",
+             "op": "<", "threshold": 100.0},
+            {"kind": "burn_rate", "name": "burn", "metric": "lat_ms",
+             "threshold": 5.0, "target": 0.9, "windows_s": [10.0],
+             "max_burn": 2.0},
+        ],
+    })
+
+
+def test_spec_dict_roundtrip(tmp_path):
+    spec = _spec()
+    again = obsslo.SLOSpec.from_dict(spec.to_dict())
+    assert again == spec
+    p = tmp_path / "spec.json"
+    p.write_text(json.dumps(spec.to_dict()))
+    assert obsslo.SLOSpec.load(p) == spec
+
+
+def test_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown objective kind"):
+        obsslo.SLOSpec.from_dict(
+            {"name": "x", "objectives": [{"kind": "latency", "name": "a"}]}
+        )
+
+
+def test_evaluate_verdict_schema_and_breach_listing():
+    spec = _spec()
+    good = obsslo.evaluate(spec, {"p99_ms": 50.0}, events=[(0.0, 1.0)], now=1.0)
+    assert good["ok"] and good["breaches"] == []
+    obs.validate_slo_verdict(good)
+    bad = obsslo.evaluate(spec, {"p99_ms": 500.0},
+                          events=[(0.5, 9.0), (0.9, 9.0)], now=1.0)
+    assert not bad["ok"]
+    assert set(bad["breaches"]) == {"p99", "burn"}
+    obs.validate_slo_verdict(bad)
+
+
+def test_validate_slo_verdict_rejects_inconsistency():
+    v = obsslo.evaluate(_spec(), {"p99_ms": 50.0})
+    v["breaches"] = ["phantom"]           # ok=True but breaches non-empty
+    with pytest.raises(ValueError, match="disagrees"):
+        obs.validate_slo_verdict(v)
+    v2 = obsslo.evaluate(_spec(), {"p99_ms": 500.0})
+    v2["breaches"] = []                   # failing objective unaccounted
+    v2["ok"] = True
+    with pytest.raises(ValueError):
+        obs.validate_slo_verdict(v2)
+
+
+# ---------------------------------------------------------------------------
+# artifact-level CI gate
+# ---------------------------------------------------------------------------
+
+def _artifact(p99=50.0, stored_burn=0.0):
+    cell = {"p99_ms": p99, "slo": {"objectives": [
+        {"name": "burn", "kind": "burn_rate", "observed": stored_burn},
+    ]}}
+    return {"stream": {"grid": {"16": dict(cell), "64": dict(cell)}}}
+
+
+def test_evaluate_artifact_per_cell_and_prefixes():
+    spec = _spec()
+    good = obsslo.evaluate_artifact(spec, _artifact())
+    assert good["ok"] and good["cells"] == {"16": True, "64": True}
+    obs.validate_slo_verdict(good)
+    bad = obsslo.evaluate_artifact(spec, _artifact(p99=900.0, stored_burn=7.0))
+    assert not bad["ok"]
+    assert "K=16:p99" in bad["breaches"] and "K=64:burn" in bad["breaches"]
+    obs.validate_slo_verdict(bad)
+
+
+def test_evaluate_artifact_requires_grid():
+    with pytest.raises(ValueError, match="stream.grid"):
+        obsslo.evaluate_artifact(_spec(), {})
+
+
+def test_cli_gate_exits_nonzero_on_breach(tmp_path, capsys):
+    spec_path = tmp_path / "spec.json"
+    spec_path.write_text(json.dumps(_spec().to_dict()))
+    good_path = tmp_path / "good.json"
+    good_path.write_text(json.dumps(_artifact()))
+    bad_path = tmp_path / "bad.json"
+    bad_path.write_text(json.dumps(_artifact(p99=900.0)))
+    assert obsslo.main([str(spec_path), "--artifact", str(good_path)]) == 0
+    assert obsslo.main([str(spec_path), "--artifact", str(bad_path)]) == 1
+    err = capsys.readouterr().err
+    obs.validate_slo_verdict(json.loads(err))   # stderr carries the verdict
+
+
+def test_committed_serve_spec_parses_and_is_wired():
+    """The committed CI spec must load, and its threshold metrics must be
+    fields the serving stream cells actually emit (engine.stats keys)."""
+    spec = obsslo.SLOSpec.load("benchmarks/slo_serve.json")
+    emitted = {"materialize_p99_ms", "hit_rate", "telemetry_bytes",
+               "materialize_p50_ms", "tokens_per_sec"}
+    for o in spec.objectives:
+        if isinstance(o, obsslo.Objective):
+            assert o.metric in emitted, o.metric
+
+
+# ---------------------------------------------------------------------------
+# health monitor state machine
+# ---------------------------------------------------------------------------
+
+def test_health_warming_then_converging():
+    mon = HealthMonitor(HealthConfig(warmup=3))
+    v = np.ones(50)
+    mon.update(v=v)
+    assert mon.status() == "warming"
+    v2 = v.copy()
+    v2[:5] = -1                               # 10% churn: healthy, not flat
+    mon.update(v=v2)
+    mon.update(v=v, ef_norm=1.0)
+    assert mon.status() == "converging"
+    assert mon.verdict()["ok"]
+
+
+def test_health_plateau_on_low_churn():
+    mon = HealthMonitor(HealthConfig(warmup=2, churn_plateau=0.02))
+    v = np.ones(100)
+    for _ in range(6):
+        mon.update(v=v)                    # zero churn every round
+    assert mon.status() == "plateau"
+    rep = mon.verdict()
+    assert rep["ok"] and rep["churn"]["mean_window"] == 0.0
+
+
+def test_health_churn_alarm_diverges():
+    mon = HealthMonitor(HealthConfig(warmup=2, churn_alarm=0.5))
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        mon.update(v=rng.choice([-1, 1], size=64))   # ~50% churn
+    mon.update(v=-mon._prev_v)                        # 100% churn
+    assert mon.status() == "diverging"
+    rep = mon.verdict()
+    assert not rep["ok"] and "churn_alarm" in rep["alarms"]
+
+
+def test_health_ef_divergence_alarm():
+    mon = HealthMonitor(HealthConfig(warmup=2, ef_growth_alarm=1.5,
+                                     churn_alarm=2.0))
+    for i in range(8):
+        mon.update(ef_norm=1.0 * (2.0 ** i))          # doubling residual
+    rep = mon.verdict()
+    assert "ef_divergence" in rep["alarms"]
+    assert rep["status"] == "diverging" and not rep["ok"]
+    assert rep["ef"]["trend"] > 1.5
+
+
+def test_health_sketches_ride_margins_and_staleness():
+    mon = HealthMonitor()
+    mon.update(margins=np.array([0.1, -0.5, 0.9]), staleness=[1.0, 3.0])
+    mon.update(margins=np.array([0.2, 0.4]), staleness=7.0)
+    rep = mon.verdict()
+    assert rep["margins"]["count"] == 5
+    assert rep["margins"]["max"] == pytest.approx(0.9)  # abs() applied
+    assert rep["staleness"]["count"] == 3
+    json.dumps(rep)                                     # JSON-clean
+
+
+def test_health_verdict_is_json_strict_even_with_zero_early_ef():
+    mon = HealthMonitor(HealthConfig(warmup=1))
+    for ef in (0.0, 0.0, 1.0, 1.0):
+        mon.update(ef_norm=ef)
+    rep = mon.verdict()
+    json.dumps(rep, allow_nan=False)       # no inf/nan anywhere
+    assert rep["ef"]["trend"] > 1.5        # maximal measurable growth
+
+
+# ---------------------------------------------------------------------------
+# flight recorder ring + snapshot
+# ---------------------------------------------------------------------------
+
+def test_ring_bounds_and_eviction_count():
+    ring = _Ring(4)
+    for i in range(10):
+        ring.append(i)
+    assert len(ring) == 4 and ring.total == 10 and ring.dropped == 6
+    assert list(ring) == [6, 7, 8, 9]
+
+
+def test_flight_recorder_memory_is_bounded():
+    rec = obs.FlightRecorder(clock="virtual", capacity=8)
+    for i in range(100):
+        rec.complete(f"s{i}", float(i), float(i) + 0.5, track="t")
+    assert len(rec.events) <= 8
+    assert rec.dropped == rec.events.total - len(rec.events) > 0
+
+
+def test_counter_totals_exact_despite_eviction(tmp_path):
+    rec = obs.FlightRecorder(clock="virtual", capacity=4)
+    for i in range(50):
+        rec.count("uplink_bits", 10, t=float(i))
+    assert rec.counter_totals["uplink_bits"] == 500
+    snap = rec.snapshot(tmp_path / "f.json", reason="manual")
+    assert snap["counterTotals"]["uplink_bits"] == 500
+    # surviving samples are the most recent -> still monotone
+    samples = [e["args"]["value"] for e in rec.events if e.get("ph") == "C"]
+    assert samples == sorted(samples) and samples[-1] == 500
+
+
+def test_maybe_snapshot_none_when_healthy(tmp_path):
+    rec = obs.FlightRecorder(clock="virtual")
+    path = tmp_path / "FLIGHT_x.json"
+    out = obs.maybe_snapshot(rec, path, slo_verdict={"ok": True},
+                             health={"ok": True})
+    assert out is None and not path.exists()
+
+
+def test_breach_snapshot_is_schema_valid(tmp_path):
+    rec = obs.FlightRecorder(clock="virtual", capacity=16)
+    for i in range(30):                       # overflow the ring
+        rec.complete("materialize", i * 1.0, i * 1.0 + 0.5, track="serve")
+    verdict = obsslo.evaluate(_spec(), {"p99_ms": 900.0})
+    assert not verdict["ok"]
+    path = tmp_path / "FLIGHT_serve.json"
+    written = obs.maybe_snapshot(
+        rec, path, slo_verdict=verdict,
+        health={"ok": False, "status": "diverging"},
+        meta={"bench": "serve"},
+    )
+    assert written["flight"]["reason"] == "slo_breach+health_alarm"
+    loaded = json.loads(path.read_text())
+    info = obs.validate_flight(loaded)
+    assert info["dropped"] > 0
+    assert loaded["flight"]["capacity"] == 16
+    assert loaded["slo_verdict"]["breaches"] == ["p99"]
+    assert loaded["bench"] == "serve"
+
+
+def test_validate_flight_rejects_overfull_and_missing_block(tmp_path):
+    rec = obs.FlightRecorder(clock="virtual", capacity=4)
+    rec.complete("a", 0.0, 1.0, track="t")
+    snap = rec.snapshot(tmp_path / "f2.json", reason="manual")
+    obs.validate_flight(snap)
+    bad = dict(snap)
+    bad["flight"] = dict(snap["flight"], capacity=0)
+    with pytest.raises(ValueError, match="capacity"):
+        obs.validate_flight(bad)
+    nof = {k: v for k, v in snap.items() if k != "flight"}
+    with pytest.raises(ValueError, match="flight block"):
+        obs.validate_flight(nof)
+    over = dict(snap)
+    over["flight"] = dict(snap["flight"], capacity=1)
+    over["traceEvents"] = snap["traceEvents"] + snap["traceEvents"]
+    with pytest.raises(ValueError, match="claims"):
+        obs.validate_flight(over)
+
+
+def test_flight_rejects_capacity_zero():
+    with pytest.raises(ValueError, match="capacity"):
+        obs.FlightRecorder(capacity=0)
